@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: wall time of the jitted ops on this host (CPU;
+Pallas kernels in interpret mode — correctness-representative, not
+TPU-performance-representative) plus the analytic TPU-side roofline time the
+BlockSpec tiling implies.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.analysis.roofline import PEAK_FLOPS, HBM_BW
+from repro.kernels import ref
+from repro.kernels.ops import flash_attention, ssd_scan
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.monotonic()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / reps * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    # flash attention: B=1, H=4, S=512, D=64
+    b, h, s, d = 1, 4, 512, 64
+    q = jax.random.normal(key, (b, h, s, d))
+    k = jax.random.normal(key, (b, h, s, d))
+    v = jax.random.normal(key, (b, h, s, d))
+    fa = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True))
+    fr = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    us_fa = _time(fa, q, k, v)
+    us_fr = _time(fr, q, k, v)
+    flops = 4 * b * h * s * s * d / 2      # causal
+    tpu_us = flops / PEAK_FLOPS * 1e6
+    emit("kernel/flash_attention_interp", f"{us_fa:.0f}",
+         f"ref_us={us_fr:.0f};tpu_roofline_us={tpu_us:.3f};"
+         f"bhsd={b}x{h}x{s}x{d}")
+
+    # ssd scan: B=1, L=512, H=4, P=32, G=1, S=64
+    b, l, hh, p, g, st = 1, 512, 4, 32, 1, 64
+    x = jax.random.normal(key, (b, l, hh, p))
+    dt = jax.nn.softplus(jax.random.normal(key, (b, l, hh)))
+    a = -jnp.exp(jax.random.normal(key, (hh,)) * 0.5)
+    bm = jax.random.normal(key, (b, l, g, st))
+    cm = jax.random.normal(key, (b, l, g, st))
+    ks = jax.jit(lambda *A: ssd_scan(*A, chunk=128))
+    rs = jax.jit(lambda *A: ref.ssd_ref(*A))
+    us_k = _time(ks, x, dt, a, bm, cm)
+    us_r = _time(rs, x, dt, a, bm, cm)
+    flops = 2 * b * l * hh * (128 * st + 128 * p + st * p) * 2
+    emit("kernel/ssd_scan_interp", f"{us_k:.0f}",
+         f"ref_us={us_r:.0f};tpu_roofline_us={flops/PEAK_FLOPS*1e6:.3f};"
+         f"blhp={b}x{l}x{hh}x{p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Figure 8: inference latency comparison.
+
+Latency model on the target pod for one diffusion step of the 720M model at
+the paper's strong-scaling setting: compute/N + measured comm bytes/ICI.
+Reported as relative latency vs DSP (paper: DSP 29-63% faster).
+"""
+from benchmarks.common import spmd_measure, emit
+from repro.analysis.roofline import PEAK_FLOPS, ICI_BW
+
+PARAMS = 670e6
+SP = 8
+
+
+def main():
+    b0, t0, s0, d0 = 2, 16, 32, 128
+    m0 = b0 * t0 * s0 * d0 * 4
+    lat = {}
+    for mode in ["dsp", "ulysses", "ring", "megatron"]:
+        r = spmd_measure(SP, mode, batch=b0, temporal=t0, spatial=s0,
+                         layers=4, d_model=d0, modulate=False)
+        vol_per_m = r["collective_bytes_per_dev"] / 2 / m0
+        # inference: batch 1, temporal 64, spatial 4096 (intra-node table 6)
+        tokens = 64 * 4096
+        m = tokens * 1152 * 2 / SP
+        compute = 2 * PARAMS * tokens / (SP * PEAK_FLOPS)
+        comm = vol_per_m * m * 28 / ICI_BW
+        lat[mode] = compute + comm
+        emit(f"fig8/latency/{mode}", lat[mode] * 1e6,
+             f"compute_us={compute*1e6:.1f};comm_us={comm*1e6:.1f}")
+    for mode in ("ulysses", "ring", "megatron"):
+        emit(f"fig8/speedup_vs_{mode}", None,
+             f"dsp_speedup={lat[mode]/lat['dsp']:.3f}x")
+
+
+if __name__ == "__main__":
+    main()

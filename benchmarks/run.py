@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  SPMD measurements run in
+subprocesses with their own simulated device counts; this process keeps the
+1-device default.
+
+  comm_volume     Table 2/3   per-layer comm volume per method (HLO-measured)
+  e2e_throughput  Figure 5    0.5M-4M token throughput model
+  scaling         Figures 6/7 weak/strong scaling
+  latency_fig8    Figure 8    inference latency
+  memory_fig9     Figure 9    per-device memory per method
+  kernels_micro   —           Pallas kernel microbenches + roofline
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (comm_volume, e2e_throughput, kernels_micro,
+                            latency_fig8, memory_fig9, scaling)
+    mods = [("comm_volume", comm_volume), ("e2e_throughput", e2e_throughput),
+            ("scaling", scaling), ("latency_fig8", latency_fig8),
+            ("memory_fig9", memory_fig9), ("kernels_micro", kernels_micro)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in mods:
+        if only and only != name:
+            continue
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},,FAILED:{e!r}")
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Figures 6 & 7: weak and strong scaling of each SP method.
+
+Weak scaling: per-device workload constant (temporal grows with N).  DSP's
+per-device communication is CONSTANT (M grows ~ N, volume M/N), so it scales
+~linearly; Megatron-SP's per-device volume grows ~ M (i.e. ~ N) and Ring's
+grows likewise — measured here from compiled HLO on 2/4/8 simulated devices.
+
+Strong scaling: total workload fixed, N grows; per-device compute shrinks
+1/N while DSP comm shrinks 1/N^2-ish per device (volume M/N over N devices),
+so efficiency holds longest.
+"""
+from benchmarks.common import spmd_measure, emit
+from repro.analysis.roofline import PEAK_FLOPS, ICI_BW
+
+
+def main():
+    # ---- weak scaling (fig 6): temporal per device fixed at 8 -------------
+    for mode in ["dsp", "ulysses", "ring", "megatron"]:
+        per_dev = {}
+        for n in (2, 4, 8):
+            r = spmd_measure(n, mode, batch=2, temporal=8 * n, spatial=32,
+                             layers=2, d_model=128, modulate=False)
+            per_dev[n] = r["collective_bytes_per_dev"]
+        growth = per_dev[8] / max(per_dev[2], 1)
+        emit(f"fig6/weak_comm_bytes/{mode}", None,
+             ";".join(f"n{n}={per_dev[n]:.0f}" for n in per_dev)
+             + f";growth_2to8={growth:.2f}")
+    # DSP per-device volume must stay ~flat under weak scaling, the
+    # embedded baselines must grow
+    dsp = [spmd_measure(n, "dsp", batch=2, temporal=8 * n, spatial=32,
+                        layers=2, d_model=128,
+                        modulate=False)["collective_bytes_per_dev"]
+           for n in (2, 8)]
+    meg = [spmd_measure(n, "megatron", batch=2, temporal=8 * n, spatial=32,
+                        layers=2, d_model=128,
+                        modulate=False)["collective_bytes_per_dev"]
+           for n in (2, 8)]
+    emit("fig6/weak_scaling_ratio", None,
+         f"dsp_growth={dsp[1]/dsp[0]:.2f};megatron_growth={meg[1]/meg[0]:.2f}")
+
+    # ---- strong scaling (fig 7): total workload fixed ----------------------
+    for mode in ["dsp", "ulysses", "ring", "megatron"]:
+        eff = {}
+        for n in (2, 4, 8):
+            r = spmd_measure(n, mode, batch=2, temporal=32, spatial=32,
+                             layers=2, d_model=128, modulate=False)
+            # model step time on target hw: compute/N + comm/ICI
+            flops = 2 * 16 * (2 * 32 * 32) * 128 * 128 * 12   # rough/layer
+            compute = flops / n / PEAK_FLOPS
+            comm = r["collective_bytes_per_dev"] / ICI_BW
+            eff[n] = compute / (compute + comm)
+        emit(f"fig7/strong_efficiency/{mode}", None,
+             ";".join(f"n{n}={eff[n]:.3f}" for n in eff))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Serving example: train a tiny LM on the shift task until it is
+near-perfect, then serve batched requests through the engine (prefill +
+KV-cache decode) and check the generations actually follow the learned rule.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models.lm import LMConfig, init_lm, lm_loss
+from repro.optim.adamw import OptConfig
+from repro.serving.engine import ServingEngine
+from repro.train.trainer import Trainer, TrainerConfig
+
+cfg = LMConfig(name="shift-lm", n_layers=2, d_model=128, n_heads=4,
+               n_kv_heads=2, head_dim=32, d_ff=256, vocab=64,
+               dtype=jnp.float32)
+params = init_lm(jax.random.PRNGKey(0), cfg)
+
+dcfg = DataConfig(task="lm_shift", vocab=64, seq=64, batch=16, noise=0.0)
+tr = Trainer(loss_fn=lambda p, b: lm_loss(p, b, cfg, backend="ref"),
+             params=params,
+             opt_cfg=OptConfig(peak_lr=3e-3, warmup_steps=20,
+                               total_steps=300),
+             cfg=TrainerConfig(total_steps=300, log_every=50, ckpt_every=0),
+             data_fn=lambda s: make_batch(dcfg, s))
+out = tr.run()
+print("training loss:", " -> ".join(f"{l:.3f}" for _, l in out["history"]))
+
+engine = ServingEngine(tr.params, cfg, max_len=64)
+prompts = jax.random.randint(jax.random.PRNGKey(9), (4, 12), 0, 64)
+gen = np.asarray(engine.generate(prompts, max_new_tokens=8))
+want = (np.asarray(prompts)[:, -1:] + 1 + np.arange(8)) % 64
+acc = float((gen == want).mean())
+print("generations:", gen.tolist())
+print(f"shift-rule accuracy: {acc:.2%}")
+assert acc > 0.9, "the served model should follow the learned +1 rule"
+print("OK")

@@ -1,0 +1,62 @@
+"""End-to-end training driver example: trains a ~100M-param 2D transformer
+(the paper's model family) for a few hundred steps with the full stack —
+AdamW, remat, checkpointing, resume — and verifies the loss falls.
+
+This is the paper's workload (video DiT diffusion training) at laptop scale.
+Run:  PYTHONPATH=src python examples/train_video_dsp.py [--steps 300]
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models.transformer2d import T2DConfig, init_t2d, t2d_loss
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    # ~100M params: 8 blocks at d=1024 (12 * 1024^2 * 8 ~= 100M + modulation)
+    cfg = T2DConfig(name="t2d-100m", n_layers=8, d_model=1024, n_heads=16,
+                    d_ff=2048, in_dim=16, modulate=False, dtype=jnp.float32)
+    from repro.models.transformer2d import t2d_param_count
+    print(f"params: {t2d_param_count(cfg)/1e6:.0f}M")
+    params = init_t2d(jax.random.PRNGKey(0), cfg)
+
+    # learnable synthetic task: predict x itself slightly transformed
+    dcfg = DataConfig(task="video", batch=2, temporal=4, spatial=32,
+                      in_dim=cfg.in_dim)
+
+    def data_fn(step):
+        b = make_batch(dcfg, step)
+        # target = rolled input => learnable mapping (not pure noise)
+        b["target"] = jnp.roll(b["x"], 1, axis=-1)
+        return b
+
+    def loss_fn(p, b):
+        return t2d_loss(p, b, cfg, backend="ref")
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        tr = Trainer(loss_fn=loss_fn, params=params,
+                     opt_cfg=OptConfig(peak_lr=1e-3,
+                                       warmup_steps=args.steps // 10,
+                                       total_steps=args.steps),
+                     cfg=TrainerConfig(total_steps=args.steps,
+                                       log_every=max(args.steps // 10, 1),
+                                       ckpt_every=args.steps // 2),
+                     data_fn=data_fn, ckpt_dir=ckpt)
+        out = tr.run()
+    hist = out["history"]
+    print("loss:", " -> ".join(f"{l:.4f}" for _, l in hist))
+    assert hist[-1][1] < hist[0][1], "loss must decrease"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

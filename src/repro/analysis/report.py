@@ -1,0 +1,88 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+results/dryrun JSON records.  Pure host-side formatting — run any time after
+(or during) a sweep:  PYTHONPATH=src python -m repro.analysis.report
+"""
+import glob
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def load(tag: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*__{tag}.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | step | peak GB/dev | fits | colls/step | coll GB/dev | compile s |",
+           "|------|-------|------|------------:|------|-----------:|------------:|----------:|"]
+    for r in rows:
+        m, c = r["memory"], r["collectives"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step_kind']} "
+            f"| {m['peak_bytes']/1e9:.2f} | {'Y' if m['fits_16gb'] else 'N'} "
+            f"| {c['count']:.0f} | {c['bytes_per_device']/1e9:.2f} "
+            f"| {r['times']['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | compute s | memory s | collective s | bottleneck | MODEL_FLOPS | HLO_FLOPS | useful |",
+           "|------|-------|----------:|---------:|-------------:|------------|------------:|----------:|-------:|"]
+    for r in rows:
+        rl = r.get("roofline")
+        if not rl:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4f} "
+            f"| {rl['memory_s']:.4f} | {rl['collective_s']:.4f} "
+            f"| **{rl['bottleneck']}** | {rl['model_flops']:.2e} "
+            f"| {rl['hlo_flops']:.2e} | {rl['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb(rows):
+    """worst roofline fraction, most collective-bound, most
+    paper-representative (transformer2d)."""
+    scored = []
+    for r in rows:
+        rl = r.get("roofline")
+        if not rl:
+            continue
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / dom if dom else 0
+        scored.append((frac, rl["collective_s"] / max(dom, 1e-12), r))
+    worst = min(scored, key=lambda t: t[0]) if scored else None
+    coll = max(scored, key=lambda t: t[1]) if scored else None
+    return worst, coll
+
+
+def main():
+    rows = load("sp")
+    print("## §Dry-run (single pod 16x16 = 256 chips)\n")
+    print(dryrun_table(rows))
+    print("\n## §Roofline\n")
+    print(roofline_table(rows))
+    mp = load("mp")
+    if mp:
+        print("\n## §Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+        print(dryrun_table(mp))
+    worst, coll = pick_hillclimb(rows)
+    if worst:
+        print(f"\nworst roofline fraction: {worst[2]['arch']} x "
+              f"{worst[2]['shape']} (compute/dominant = {worst[0]:.3f})")
+        print(f"most collective-bound: {coll[2]['arch']} x "
+              f"{coll[2]['shape']} (collective/dominant = {coll[1]:.3f})")
+
+
+if __name__ == "__main__":
+    main()

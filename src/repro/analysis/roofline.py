@@ -1,0 +1,238 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+  compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+  memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+  collective = collective_bytes / (chips * 50e9 B/s ICI link)
+
+Two XLA accounting gotchas handled here:
+
+1. ``compiled.cost_analysis()`` counts a ``while`` (lax.scan) body ONCE —
+   verified empirically.  Layer stacks are scanned, so raw numbers would
+   undercount by ~n_periods.  FLOPs/bytes therefore use *depth
+   extrapolation*: compile the same arch at depth 1 period and 2 periods;
+   per-period cost = F(2) - F(1); total = F(1) + (T-1) * (F(2) - F(1)).
+   (Cost is affine in depth — layers are homogeneous per period.)
+
+2. collective_bytes is not in cost_analysis at all: we parse the compiled
+   HLO text, sum the result-shape bytes of every all-gather / all-reduce /
+   reduce-scatter / all-to-all / collective-permute instruction, and
+   multiply instructions inside while bodies by the loop trip count
+   (recovered from the loop condition's comparison constant).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (conservative single-link)
+
+COLLECTIVES = ("all-to-all", "all-gather", "all-reduce", "reduce-scatter",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def _shape_bytes(ty: str) -> int:
+    """'bf16[2,8,4]{3,2,1}' -> byte size.  Tuples handled by caller."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", ty)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _instruction_result_bytes(line: str) -> int:
+    """Sum byte sizes of the result type(s) on an HLO instruction line."""
+    rhs = line.split("=", 1)[1].strip()
+    if rhs.startswith("("):                      # tuple result (per-peer arrays
+        m = re.match(r"\((.*?)\)\s+[a-z0-9-]+\(", rhs)   # or async -start)
+        inner = m.group(1) if m else rhs[1:]
+        return sum(_shape_bytes(t)
+                   for t in re.findall(r"[a-z0-9]+\[[0-9,]*\]", inner))
+    return _shape_bytes(rhs)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_per_device: float
+    count: float
+    by_kind: Dict[str, float]
+    by_kind_count: Dict[str, float]
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        # computation headers look like: [ENTRY] %name (params...) -> type {
+        # params may nest tuple parens, so match only the name prefix
+        m = (re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+             if (s.endswith("{") and "->" in s) else None)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Recover lax.scan trip count from the while condition: the comparison
+    constant (direction=LT) is the bound."""
+    consts = {}
+    for ln in cond_lines:
+        m = re.match(r"%?([\w.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if "compare(" in ln and "direction=LT" in ln:
+            for name, val in consts.items():
+                if re.search(rf"%?{re.escape(name)}\b", ln.split("compare", 1)[1]):
+                    return val
+    # fallback: single constant in the condition
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return 1
+
+
+def _while_map(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """computation name -> multiplier (product of enclosing trip counts)."""
+    # map body -> trip count
+    body_trip: Dict[str, int] = {}
+    parents: Dict[str, List[str]] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = re.search(r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,"
+                          r"\s*body=%?([\w.\-]+)", ln)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                body_trip[body] = _trip_count(comps.get(cond, []))
+                parents.setdefault(body, []).append(cname)
+        # nested calls (fusions/regions) inherit the caller's multiplier
+        for ln in lines:
+            for m in re.finditer(r"(?:calls=|to_apply=|body=|condition=)"
+                                 r"%?([\w.\-]+)", ln):
+                parents.setdefault(m.group(1), []).append(cname)
+
+    mult: Dict[str, int] = {}
+
+    def resolve(name: str, seen=()) -> int:
+        if name in mult:
+            return mult[name]
+        if name in seen:
+            return 1
+        m = body_trip.get(name, 1)
+        ps = parents.get(name, [])
+        pm = max((resolve(p, seen + (name,)) for p in ps), default=1)
+        mult[name] = m * pm
+        return mult[name]
+
+    for name in comps:
+        resolve(name)
+    return mult
+
+
+def _group_size(line: str) -> int:
+    """Participant count of a collective from its replica_groups attr."""
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    """Per-device logical volume, paper Table 2/3 conventions:
+      all-to-all           result bytes          (M/N moves per device)
+      all-gather           result bytes          (device receives M)
+      reduce-scatter       result bytes x group  (device sends M)
+      all-reduce           2 x result bytes      (ring RS+AG)
+      collective-permute   result bytes
+    Instructions inside while bodies multiply by the loop trip count."""
+    comps = _split_computations(hlo)
+    mult = _while_map(comps)
+    by_kind: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    by_count: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1)
+        for ln in lines:
+            if "=" not in ln:
+                continue
+            for kind in COLLECTIVES:
+                # match '<kind>(' or '<kind>-start(' as the instruction op
+                if re.search(rf"\s{kind}(?:-start)?\(", ln):
+                    nbytes = _instruction_result_bytes(ln)
+                    if kind == "reduce-scatter":
+                        nbytes *= _group_size(ln)
+                    elif kind == "all-reduce":
+                        nbytes *= 2
+                    by_kind[kind] += nbytes * m
+                    by_count[kind] += m
+                    break
+    total = sum(by_kind.values())
+    count = sum(by_count.values())
+    return CollectiveStats(total, count,
+                           {k: v for k, v in by_kind.items() if v},
+                           {k: v for k, v in by_count.items() if v})
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes_per_dev: float
+    model_flops: float
+    useful_ratio: float
+    bottleneck: str
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(*, hlo_flops_per_dev: float, hlo_bytes_per_dev: float,
+             collective_bytes_per_dev: float, chips: int,
+             model_flops: float) -> Roofline:
+    compute_s = hlo_flops_per_dev / PEAK_FLOPS
+    memory_s = hlo_bytes_per_dev / HBM_BW
+    collective_s = collective_bytes_per_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bott = max(terms, key=terms.get)
+    total_hlo_flops = hlo_flops_per_dev * chips
+    return Roofline(compute_s, memory_s, collective_s,
+                    total_hlo_flops, hlo_bytes_per_dev * chips,
+                    collective_bytes_per_dev,
+                    model_flops,
+                    model_flops / total_hlo_flops if total_hlo_flops else 0.0,
+                    bott)
+
+
+def extrapolate_depth(f1: float, f2: float, periods: int) -> float:
+    """Affine-in-depth extrapolation: cost(T) = f1 + (T-1)*(f2-f1)."""
+    return f1 + (periods - 1) * (f2 - f1)

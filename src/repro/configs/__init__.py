@@ -1,0 +1,5 @@
+"""Architecture configs: ``repro.configs.get("<arch-id>")`` -> ArchSpec."""
+from repro.configs.base import (ArchSpec, SHAPES, T2D_SHAPES, get, names,
+                                register)
+
+__all__ = ["ArchSpec", "SHAPES", "T2D_SHAPES", "get", "names", "register"]

@@ -1,0 +1,41 @@
+"""arctic-480b [moe] — hf:Snowflake/snowflake-arctic-base (hf).
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000, MoE 128 experts
+top-2 + parallel dense-residual MLP (dense-MoE hybrid).  128 experts /
+16-way EP = 8 experts per device.  long_500k skipped: full attention.
+
+35 layers is not a multiple of the MoE period (every layer is MoE+dense in
+arctic), so period=1 applies cleanly.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, register
+from repro.models.lm import LMConfig
+from repro.parallel.partition import ParallelPlan
+
+CONFIG = LMConfig(
+    name="arctic-480b",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+    d_ff=4864, vocab=32000,
+    n_experts=128, top_k=2, dense_ff=4864,
+    tie_embeddings=False, dtype=jnp.bfloat16,
+    cache_dtype=jnp.float8_e4m3fn,
+)
+
+SMOKE = LMConfig(
+    name="arctic-smoke",
+    n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, head_dim=16,
+    d_ff=64, vocab=512, n_experts=8, top_k=2, dense_ff=64,
+    tie_embeddings=False, dtype=jnp.float32,
+)
+
+SPEC = register(ArchSpec(
+    name="arctic-480b", family="lm",
+    config=CONFIG, smoke=SMOKE,
+    plan=ParallelPlan(mode="tp", ep=True, zero=True),
+    skip_shapes=frozenset({"long_500k"}),
+    skip_reason="pure full attention",
+    source="hf:Snowflake/snowflake-arctic-base; hf",
+    notes="TP for attention/dense-residual + EP for the 128 routed experts, "
+          "both on the model axis; ZeRO-3 over data.",
+))

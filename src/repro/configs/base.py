@@ -1,0 +1,91 @@
+"""Architecture registry: one ArchSpec per assigned architecture.
+
+Each spec carries the full published config, a reduced same-family SMOKE
+config (instantiated + stepped on CPU by tests), the parallel plan for the
+production mesh, and which input-shape cells apply (long_500k only for
+sub-quadratic archs; decode only for archs with a decoder — see DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, FrozenSet, Optional
+
+from repro.parallel.partition import ParallelPlan
+
+
+# The four assigned LM shapes (seq_len, global_batch) and their entry points.
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k":    {"seq": 4_096,   "batch": 256, "step": "train"},
+    "prefill_32k": {"seq": 32_768,  "batch": 32,  "step": "prefill"},
+    "decode_32k":  {"seq": 32_768,  "batch": 128, "step": "decode"},
+    "long_500k":   {"seq": 524_288, "batch": 1,   "step": "decode"},
+}
+
+# The paper's own 2D-transformer shapes (temporal x spatial, per A.3.2).
+T2D_SHAPES: Dict[str, Dict[str, Any]] = {
+    # constant tokens/step (16.8M) as temporal scales 128->1024 (paper A.3.2
+    # fixes spatial at 4096 and grows temporal; batch halves to keep the
+    # per-chip activation footprint inside v5e HBM)
+    "video_0.5m": {"temporal": 128,  "spatial": 4096, "batch": 32, "step": "train"},
+    "video_1m":   {"temporal": 256,  "spatial": 4096, "batch": 16, "step": "train"},
+    "video_2m":   {"temporal": 512,  "spatial": 4096, "batch": 16, "step": "train"},
+    "video_4m":   {"temporal": 1024, "spatial": 4096, "batch": 16, "step": "train"},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                      # "lm" | "encdec" | "t2d"
+    config: Any
+    smoke: Any
+    plan: ParallelPlan
+    skip_shapes: FrozenSet[str] = frozenset()
+    skip_reason: str = ""
+    train_grad_accum: int = 1        # microbatching for deep models (carry)
+    source: str = ""
+    notes: str = ""
+
+    def shapes(self) -> Dict[str, Dict[str, Any]]:
+        table = T2D_SHAPES if self.family == "t2d" else SHAPES
+        return {k: v for k, v in table.items() if k not in self.skip_shapes}
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    assert spec.name not in _REGISTRY, spec.name
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> ArchSpec:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def names() -> list:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+_MODULES = [
+    "seamless_m4t_large_v2", "jamba_1_5_large_398b", "mamba2_370m",
+    "gemma2_2b", "qwen3_14b", "starcoder2_7b", "mistral_large_123b",
+    "qwen2_moe_a2_7b", "arctic_480b", "pixtral_12b",
+    "transformer2d_720m", "transformer2d_3b",
+]
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _LOADED = True

@@ -1,0 +1,30 @@
+"""transformer2d-3b — the paper's larger model (Table 4).
+
+36 layers, hidden 2048 (the paper's table prints "2038", a transcription
+artifact of 2048 — 36L x 2 blocks x 12 x 2048^2 ~= 3.6B matches the "3B"
+name), 32 heads, patch (1,2,2).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, register
+from repro.models.transformer2d import T2DConfig
+from repro.parallel.partition import ParallelPlan
+
+CONFIG = T2DConfig(
+    name="transformer2d-3b",
+    n_layers=36, d_model=2048, n_heads=32, d_ff=8192,
+    in_dim=64, mlp_kind="gelu", modulate=True, dtype=jnp.bfloat16,
+)
+
+SMOKE = T2DConfig(
+    name="transformer2d-3b-smoke",
+    n_layers=2, d_model=96, n_heads=8, d_ff=192,
+    in_dim=16, mlp_kind="gelu", modulate=True, dtype=jnp.float32,
+)
+
+SPEC = register(ArchSpec(
+    name="transformer2d-3b", family="t2d",
+    config=CONFIG, smoke=SMOKE,
+    plan=ParallelPlan(mode="dsp", zero=True, shard_vocab=False),
+    source="paper Table 4 (OpenSora variant)",
+))

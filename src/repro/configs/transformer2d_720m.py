@@ -1,0 +1,31 @@
+"""transformer2d-720m — the paper's own base model (Table 4).
+
+28 layers, hidden 1152, 16 heads, patch (1,2,2) — the OpenSora-like 2D DiT
+with one temporal + one spatial transformer block per layer (cross-attention
+removed, per Appendix A.1).  Shapes follow A.3.2: spatial fixed at 4096
+(1024x1024 after VAE+patch), temporal scales 128..1024.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, register
+from repro.models.transformer2d import T2DConfig
+from repro.parallel.partition import ParallelPlan
+
+CONFIG = T2DConfig(
+    name="transformer2d-720m",
+    n_layers=28, d_model=1152, n_heads=16, d_ff=4608,
+    in_dim=64, mlp_kind="gelu", modulate=True, dtype=jnp.bfloat16,
+)
+
+SMOKE = T2DConfig(
+    name="transformer2d-smoke",
+    n_layers=2, d_model=64, n_heads=4, d_ff=128,
+    in_dim=16, mlp_kind="gelu", modulate=True, dtype=jnp.float32,
+)
+
+SPEC = register(ArchSpec(
+    name="transformer2d-720m", family="t2d",
+    config=CONFIG, smoke=SMOKE,
+    plan=ParallelPlan(mode="dsp", zero=True, shard_vocab=False),
+    source="paper Table 4 (OpenSora variant)",
+))

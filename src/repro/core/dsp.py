@@ -1,0 +1,130 @@
+"""Dynamic Sequence Parallelism primitives (paper Table 2).
+
+Two equivalent implementations of the same abstraction are provided:
+
+* **explicit** (paper-faithful) — functions that run *inside* ``shard_map``
+  and issue the collective directly: ``dynamic_switch`` is one tiled
+  all-to-all (volume M/N per device), ``gather`` is one all-gather (volume M),
+  ``split`` is a local slice (zero communication).  These mirror the paper's
+  four-function PyTorch API one-to-one.
+
+* **auto** (compiler path) — the same transitions expressed as sharding
+  constraints on globally-shaped arrays under ``jit``; XLA SPMD emits the
+  identical collectives (asserted by tests that parse the compiled HLO).
+
+Both operate on the ``model`` mesh axis by default (the SP axis of the
+production mesh).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.layout import SeqLayout, ParallelContext
+
+# ---------------------------------------------------------------------------
+# Explicit (shard_map-level) primitives — the paper's API.
+# ---------------------------------------------------------------------------
+
+
+def dynamic_switch(x: jax.Array, cur_shard: int, tgt_shard: int,
+                   axis_name: str = "model") -> jax.Array:
+    """Switch the sharded sequence dimension from ``cur_shard`` to ``tgt_shard``.
+
+    Exactly one tiled all-to-all; per-device volume M/N (paper Table 2 row
+    ``s_i -> s_j``).  The local view of dim ``cur_shard`` grows by N and dim
+    ``tgt_shard`` shrinks by N.
+    """
+    if cur_shard == tgt_shard:
+        return x
+    n = jax.lax.axis_size(axis_name)
+    if x.shape[tgt_shard] % n:
+        raise ValueError(
+            f"dynamic_switch: dim {tgt_shard} (size {x.shape[tgt_shard]}) "
+            f"not divisible by SP size {n}")
+    return jax.lax.all_to_all(x, axis_name, split_axis=tgt_shard,
+                              concat_axis=cur_shard, tiled=True)
+
+
+def split(x: jax.Array, tgt_shard: int, axis_name: str = "model") -> jax.Array:
+    """s_hat -> s_i : slice the local shard out of a replicated sequence.
+
+    Zero communication (paper Table 2 row ``s_hat -> s_i``).
+    """
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    if x.shape[tgt_shard] % n:
+        raise ValueError(
+            f"split: dim {tgt_shard} (size {x.shape[tgt_shard]}) not divisible by {n}")
+    size = x.shape[tgt_shard] // n
+    return jax.lax.dynamic_slice_in_dim(x, idx * size, size, axis=tgt_shard)
+
+
+def gather(x: jax.Array, cur_shard: int, axis_name: str = "model") -> jax.Array:
+    """s_i -> s_hat : all-gather the full sequence (volume M, used only at
+    model boundaries / rare global ops)."""
+    return jax.lax.all_gather(x, axis_name, axis=cur_shard, tiled=True)
+
+
+def dsp_shard_batch(batch, tgt_shard: int, axis_name: str = "model"):
+    """The paper's ``dsp_dataloader``: every member of an SP group holds the
+    same global batch; slice each array along ``tgt_shard`` locally."""
+    return jax.tree_util.tree_map(lambda a: split(a, tgt_shard, axis_name), batch)
+
+
+# ---------------------------------------------------------------------------
+# Auto (jit / sharding-constraint) primitives.
+# ---------------------------------------------------------------------------
+
+
+def switch_constraint(x: jax.Array, ctx: ParallelContext, layout: SeqLayout,
+                      tgt_shard: int) -> tuple[jax.Array, SeqLayout]:
+    """Compiler-path dynamic switch: re-constrain the sharded dim.
+
+    Under jit+SPMD the layout change lowers to one all-to-all — verified by
+    tests/test_hlo_collectives.py.
+    """
+    new_layout = layout.switched(tgt_shard)
+    return ctx.constrain(x, new_layout), new_layout
+
+
+def gather_constraint(x: jax.Array, ctx: ParallelContext,
+                      layout: SeqLayout) -> tuple[jax.Array, SeqLayout]:
+    new_layout = layout.gathered()
+    return ctx.constrain(x, new_layout), new_layout
+
+
+def split_constraint(x: jax.Array, ctx: ParallelContext, layout: SeqLayout,
+                     tgt_shard: int) -> tuple[jax.Array, SeqLayout]:
+    new_layout = layout.split(tgt_shard)
+    return ctx.constrain(x, new_layout), new_layout
+
+
+# ---------------------------------------------------------------------------
+# Communication-volume model (paper Table 2) — used by benchmarks and the
+# planner; analytic, per-device bytes.
+# ---------------------------------------------------------------------------
+
+
+def comm_volume_bytes(primitive: str, global_bytes: int, n: int) -> float:
+    """Per-device communication volume of one DSP primitive on a tensor of
+    ``global_bytes`` with SP size ``n`` (paper Table 2)."""
+    if primitive == "keep":
+        return 0.0
+    if primitive == "switch":        # all-to-all: each device sends (N-1)/N of its M/N shard
+        return global_bytes / n
+    if primitive == "split":
+        return 0.0
+    if primitive == "gather":        # all-gather: each device receives M
+        return float(global_bytes)
+    raise ValueError(f"unknown primitive {primitive!r}")
+
+
+__all__ = [
+    "dynamic_switch", "split", "gather", "dsp_shard_batch",
+    "switch_constraint", "gather_constraint", "split_constraint",
+    "comm_volume_bytes",
+]

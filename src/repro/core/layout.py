@@ -1,0 +1,119 @@
+"""Sequence-layout algebra for Dynamic Sequence Parallelism.
+
+A *layout* records which logical tensor dimension the sequence-parallel mesh
+axis currently shards (paper notation: ``s_i`` = sharded along sequence dim i,
+``s_hat`` = unsharded).  The DSP primitives (switch / split / gather) are the
+only legal transitions between layouts; this module provides the bookkeeping
+and the PartitionSpec construction used by the compiler-driven ("auto") path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Sentinel for the unsharded status (paper's  s_hat ).
+UNSHARDED: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqLayout:
+    """Shard status of one activation tensor w.r.t. the SP mesh axis.
+
+    Attributes:
+      shard_dim:  index of the tensor dimension sharded over ``sp_axis``;
+                  ``None`` means the sequence is fully replicated (s_hat).
+      batch_dim:  index of the batch dimension (sharded over the DP axes).
+      ndim:       rank of the logical (global) tensor.
+    """
+
+    shard_dim: Optional[int]
+    batch_dim: int = 0
+    ndim: int = 4
+
+    def switched(self, tgt_dim: int) -> "SeqLayout":
+        if self.shard_dim is None:
+            raise ValueError("switch() from unsharded layout; use split()")
+        if not (0 <= tgt_dim < self.ndim):
+            raise ValueError(f"target dim {tgt_dim} out of range for rank {self.ndim}")
+        if tgt_dim == self.batch_dim:
+            raise ValueError("cannot sequence-shard the batch dimension")
+        return dataclasses.replace(self, shard_dim=tgt_dim)
+
+    def gathered(self) -> "SeqLayout":
+        return dataclasses.replace(self, shard_dim=UNSHARDED)
+
+    def split(self, tgt_dim: int) -> "SeqLayout":
+        if self.shard_dim is not None:
+            raise ValueError("split() requires an unsharded layout; use switch()")
+        return dataclasses.replace(self, shard_dim=tgt_dim)
+
+    # -- PartitionSpec construction (auto / compiler path) ------------------
+    def pspec(self, dp_axes: Sequence[str] = ("data",), sp_axis: str = "model") -> P:
+        """PartitionSpec for this layout: batch over DP axes, shard_dim over SP."""
+        entries: list = [None] * self.ndim
+        entries[self.batch_dim] = tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]
+        if self.shard_dim is not None:
+            entries[self.shard_dim] = sp_axis
+        return P(*entries)
+
+    def sharding(self, mesh: Mesh, dp_axes: Sequence[str] = ("data",),
+                 sp_axis: str = "model") -> NamedSharding:
+        return NamedSharding(mesh, self.pspec(dp_axes, sp_axis))
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    """Names the mesh axes by role.  The production mesh is
+    (data=16, model=16) or (pod=2, data=16, model=16); ``model`` is
+    time-multiplexed between SP (DSP switches), TP and EP per the arch config.
+    """
+
+    mesh: Mesh
+    sp_axis: str = "model"
+    dp_axes: Tuple[str, ...] = ("data",)
+
+    @property
+    def sp_size(self) -> int:
+        return self.mesh.shape[self.sp_axis]
+
+    @property
+    def dp_size(self) -> int:
+        size = 1
+        for a in self.dp_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def world_size(self) -> int:
+        return self.sp_size * self.dp_size
+
+    def constrain(self, x: jax.Array, layout: SeqLayout) -> jax.Array:
+        """Apply a sharding constraint reflecting ``layout`` (auto path)."""
+        return jax.lax.with_sharding_constraint(
+            x, layout.sharding(self.mesh, self.dp_axes, self.sp_axis))
+
+
+def from_mesh(mesh: Mesh, sp_axis: str = "model") -> ParallelContext:
+    dp = tuple(a for a in mesh.axis_names if a != sp_axis)
+    return ParallelContext(mesh=mesh, sp_axis=sp_axis, dp_axes=dp)
+
+
+def divisible(global_dim: int, n: int) -> bool:
+    return global_dim % n == 0
+
+
+def local_shape(global_shape: Sequence[int], layout: SeqLayout, n_sp: int,
+                n_dp: int = 1) -> Tuple[int, ...]:
+    """Per-device shape of a tensor with the given layout (for shard_map bodies)."""
+    shape = list(global_shape)
+    shape[layout.batch_dim] //= n_dp
+    if layout.shard_dim is not None:
+        if shape[layout.shard_dim] % n_sp:
+            raise ValueError(
+                f"dim {layout.shard_dim} size {shape[layout.shard_dim]} not divisible "
+                f"by SP size {n_sp}")
+        shape[layout.shard_dim] //= n_sp
+    return tuple(shape)

@@ -1,0 +1,35 @@
+"""Megatron-SP baseline (embedded sequence parallelism, Korthikanti et al.).
+
+Sequence-parallel outside the blocks, tensor-parallel inside: each block is
+entered with an all-gather of the full sequence and exited with a
+reduce-scatter of the row-parallel output.  Per transformer block that is
+2 collectives x full activation = 4M with both attention and MLP; the paper
+counts 8 ops / 8M per 2D-transformer layer (two blocks).  Runs inside
+``shard_map``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def allgather_seq(x: jax.Array, seq_dim: int = 1, axis_name: str = "model") -> jax.Array:
+    """Enter a tensor-parallel region: (B, S/N, C) -> (B, S, C)."""
+    return jax.lax.all_gather(x, axis_name, axis=seq_dim, tiled=True)
+
+
+def reduce_scatter_seq(x: jax.Array, seq_dim: int = 1,
+                       axis_name: str = "model") -> jax.Array:
+    """Exit a tensor-parallel region: sum partial row-parallel outputs and
+    scatter back to the sequence shard: (B, S, C) -> (B, S/N, C)."""
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=seq_dim, tiled=True)
+
+
+def megatron_block(x: jax.Array, inner, seq_dim: int = 1,
+                   axis_name: str = "model") -> jax.Array:
+    """Wrap ``inner`` (a TP-sharded attention or MLP computing a *partial*
+    row-parallel output) with the AG/RS pair.  ``inner`` sees the full
+    sequence and must return a partial sum to be psum-scattered."""
+    full = allgather_seq(x, seq_dim, axis_name)
+    partial = inner(full)
+    return reduce_scatter_seq(partial, seq_dim, axis_name)

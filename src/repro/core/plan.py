@@ -1,0 +1,119 @@
+"""Switching-plan solver: choose shard dims per computation stage.
+
+The paper leaves "automatically determine the most effective switching
+strategy" as future work (§6).  We implement it: a computation is a sequence
+of *stages*, each declaring the set of sequence dimensions it computes along
+(the shard dim must avoid those).  Every switch costs one all-to-all of M/N,
+so the optimal plan minimises the number of switches.
+
+This is offline cache replacement with a single slot and per-stage forbidden
+sets; the farthest-next-conflict (Belady) greedy is optimal, which the
+property tests check against brute force on small instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import FrozenSet, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One computation stage of a multi-dimensional transformer.
+
+    ``compute_dims``: logical sequence-dim indices the stage computes along
+    (attention over S_i, a scan over S_i, ...).  The shard dim must not be in
+    this set.  ``name`` is cosmetic.
+    """
+
+    compute_dims: FrozenSet[int]
+    name: str = ""
+
+    def allows(self, dim: int) -> bool:
+        return dim not in self.compute_dims
+
+
+def _next_conflict(stages: Sequence[Stage], start: int, dim: int) -> int:
+    """Index of the first stage >= start that forbids ``dim`` (len() if none)."""
+    for t in range(start, len(stages)):
+        if not stages[t].allows(dim):
+            return t
+    return len(stages)
+
+
+def plan_switches(stages: Sequence[Stage], seq_dims: Sequence[int],
+                  initial: Optional[int] = None) -> List[int]:
+    """Return shard dim per stage, minimising switch count (Belady greedy).
+
+    Args:
+      stages: the stage sequence.
+      seq_dims: all switchable sequence-dim indices.
+      initial: shard dim the input arrives with (e.g. the dataloader split);
+        None lets the planner pick freely for stage 0.
+    """
+    if not stages:
+        return []
+    for st in stages:
+        if all(not st.allows(d) for d in seq_dims):
+            raise ValueError(f"stage {st.name!r} forbids every sequence dim")
+
+    plan: List[int] = []
+    cur = initial
+    for t, st in enumerate(stages):
+        if cur is not None and st.allows(cur):
+            plan.append(cur)
+            continue
+        # forced (or first) placement: farthest next conflict wins
+        candidates = [d for d in seq_dims if st.allows(d)]
+        cur = max(candidates, key=lambda d: (_next_conflict(stages, t, d), -d))
+        plan.append(cur)
+    return plan
+
+
+def switch_count(plan: Sequence[int], initial: Optional[int] = None) -> int:
+    count = 0
+    prev = initial
+    for d in plan:
+        if prev is not None and d != prev:
+            count += 1
+        prev = d
+    return count
+
+
+def brute_force_plan(stages: Sequence[Stage], seq_dims: Sequence[int],
+                     initial: Optional[int] = None) -> List[int]:
+    """Exponential exact solver (test oracle only)."""
+    best, best_cost = None, None
+    for assign in itertools.product(seq_dims, repeat=len(stages)):
+        if any(not st.allows(d) for st, d in zip(stages, assign)):
+            continue
+        cost = switch_count(assign, initial)
+        if best_cost is None or cost < best_cost:
+            best, best_cost = list(assign), cost
+    if best is None:
+        raise ValueError("infeasible stage sequence")
+    return best
+
+
+# Canonical stage sequences ---------------------------------------------------
+
+def transformer2d_stages(num_layers: int) -> List[Stage]:
+    """The paper's OpenSora-like 2D DiT: per layer one temporal block
+    (computes along dim T=1) then one spatial block (dim S=2); tensors are
+    (B, T, S, C)."""
+    out: List[Stage] = []
+    for i in range(num_layers):
+        out.append(Stage(frozenset({1}), f"layer{i}.temporal"))
+        out.append(Stage(frozenset({2}), f"layer{i}.spatial"))
+    return out
+
+
+def lm_attention_stages(num_layers: int) -> List[Stage]:
+    """Degenerate-1D LM: alternating attention (computes along seq=1,
+    head dim 2 free) and channel-wise MLP (computes along none of the
+    sequence dims).  Tensors treated as (B, S, H, D')."""
+    out: List[Stage] = []
+    for i in range(num_layers):
+        out.append(Stage(frozenset({1}), f"layer{i}.attn"))
+        out.append(Stage(frozenset(), f"layer{i}.mlp"))
+    return out

@@ -1,0 +1,80 @@
+"""Ring-Attention baseline (Li et al. 2021; Liu et al. 2023).
+
+K/V blocks rotate around the device ring via ``ppermute`` while each device
+keeps its Q shard; partial attention is merged with a numerically-stable
+online softmax (the blockwise trick of Liu et al.).  Total per-device volume
+is the full K+V activation (2M for k,v of size M each over N-1 hops of M/N),
+matching the paper's Table 3 entry.  Runs inside ``shard_map``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_attn(q, k, v, q_pos, k_pos, scale: float, causal: bool):
+    """One (Q-shard x K-block) partial attention.  Shapes:
+    q: (B, Sq, H, D), k/v: (B, Sk, H, D); returns (o, m, l) un-normalised."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]          # (Sq, Sk)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                              # (B, H, Sq)
+    # guard fully-masked rows
+    m_safe = jnp.where(m <= NEG_INF / 2, 0.0, m)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    l = jnp.sum(p, axis=-1)                              # (B, H, Sq)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o, m_safe, l, (m <= NEG_INF / 2)
+
+
+def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   axis_name: str = "model", causal: bool = False,
+                   scale: Optional[float] = None) -> jax.Array:
+    """q, k, v: local (B, S/N, H, D) sharded along the sequence.  Returns the
+    local output shard (B, S/N, H, D)."""
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    b, s_local, h, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    q_pos = idx * s_local + jnp.arange(s_local)
+
+    def body(t, carry):
+        k_blk, v_blk, o, m, l, any_valid = carry
+        src = (idx - t) % n                               # owner of current K/V block
+        k_pos = src * s_local + jnp.arange(s_local)
+        o_b, m_b, l_b, dead = _block_attn(q, k_blk, v_blk, q_pos, k_pos, scale, causal)
+        # online-softmax merge; dead rows (fully masked block) contribute nothing
+        m_new = jnp.where(dead, m, jnp.maximum(m, m_b))
+        c_old = jnp.exp(m - m_new)
+        c_new = jnp.where(dead, 0.0, jnp.exp(m_b - m_new))
+        o = o * c_old[..., None].transpose(0, 2, 1, 3) + o_b * c_new[..., None].transpose(0, 2, 1, 3)
+        l = l * c_old + l_b * c_new
+        m = m_new
+        any_valid = any_valid | ~dead
+        k_blk = jax.lax.ppermute(k_blk, axis_name, perm)
+        v_blk = jax.lax.ppermute(v_blk, axis_name, perm)
+        return k_blk, v_blk, o, m, l, any_valid
+
+    o0 = jnp.zeros((b, s_local, h, d), jnp.float32)
+    m0 = jnp.full((b, h, s_local), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s_local), jnp.float32)
+    valid0 = jnp.zeros((b, h, s_local), bool)
+    # mark constant-initialised carries as varying over the ring axis so the
+    # scan carry types line up under shard_map's vma tracking
+    o0, m0, l0, valid0 = jax.lax.pvary((o0, m0, l0, valid0), (axis_name,))
+    # fori_loop keeps HLO compact for long rings; unrolled for tiny N is fine too.
+    k_f, v_f, o, m, l, any_valid = jax.lax.fori_loop(
+        0, n, body, (k, v, o0, m0, l0, valid0))
+    l = jnp.where(any_valid, l, 1.0)
+    out = o / l[..., None].transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)

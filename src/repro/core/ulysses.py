@@ -1,0 +1,54 @@
+"""DeepSpeed-Ulysses baseline (embedded sequence parallelism).
+
+Per attention: four all-to-alls — q, k, v each reshard (seq -> heads), plus
+the output resharding back (heads -> seq).  Per-device volume 4M/N per
+attention (paper §4.1 / Table 3).  Runs inside ``shard_map``.
+
+``ulysses_attention_fused`` is the DSP-degenerate variant for 1-D models:
+q/k/v are stacked and switched with ONE all-to-all (plus one for the output),
+i.e. the paper's primitives applied to the (seq, head) dimension pair.  Same
+volume, half the collective launches — recorded as a beyond-paper
+optimisation in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+AttnFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+def _a2a(x: jax.Array, axis_name: str, split_axis: int, concat_axis: int) -> jax.Array:
+    return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+
+def ulysses_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      attn_fn: AttnFn, axis_name: str = "model",
+                      seq_dim: int = 1, head_dim: int = 2) -> jax.Array:
+    """q, k, v: local (B, S/N, H, D); returns local (B, S/N, H, D).
+
+    K/V may have fewer heads than Q (GQA) as long as kv_heads % N == 0.
+    """
+    q = _a2a(q, axis_name, split_axis=head_dim, concat_axis=seq_dim)
+    k = _a2a(k, axis_name, split_axis=head_dim, concat_axis=seq_dim)
+    v = _a2a(v, axis_name, split_axis=head_dim, concat_axis=seq_dim)
+    o = attn_fn(q, k, v)                     # (B, S, H/N, D)
+    return _a2a(o, axis_name, split_axis=seq_dim, concat_axis=head_dim)
+
+
+def ulysses_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
+                            attn_fn: AttnFn, axis_name: str = "model",
+                            seq_dim: int = 1, head_dim: int = 2) -> jax.Array:
+    """DSP-1D: one switch on stacked qkv, one on the output (2 collectives).
+
+    Requires q/k/v same shape (MHA, or GQA with kv replicated to q heads —
+    callers with true GQA use the unfused path or stack on the head dim).
+    """
+    qkv = jnp.stack([q, k, v], axis=0)       # (3, B, S/N, H, D)
+    qkv = _a2a(qkv, axis_name, split_axis=head_dim + 1, concat_axis=seq_dim + 1)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    o = attn_fn(q, k, v)
+    return _a2a(o, axis_name, split_axis=seq_dim, concat_axis=head_dim)

@@ -1,0 +1,104 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of (task, step, global config) — no state to
+checkpoint, resume = "set step and go", and elastic restarts onto different
+device counts re-slice the same global batch (this is the paper's
+``dsp_dataloader`` contract: members of one sequence-parallel group see the
+same sample; data-parallel replicas see disjoint slices — under jit SPMD the
+global batch is built once and sharding does the slicing).
+
+Tasks:
+  * ``lm_shift``: next token = (token + 1) mod V with a small noise floor —
+    learnable in a few hundred steps, used by the e2e example to show loss
+    actually falls.
+  * ``lm_random``: i.i.d. tokens (throughput benchmarking).
+  * ``video``: latent video tensors + diffusion targets for transformer2d.
+  * ``encdec``: audio-frame features + transcript tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    task: str = "lm_shift"
+    vocab: int = 256
+    seq: int = 512
+    batch: int = 8
+    noise: float = 0.05
+    # video
+    temporal: int = 8
+    spatial: int = 64
+    in_dim: int = 16
+    # encdec
+    enc_seq: int = 512
+    frontend_dim: int = 80
+    # vlm
+    frontend_tokens: int = 0
+
+
+def _key(cfg: DataConfig, step: int) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(0x5eed), step)
+
+
+def make_batch(cfg: DataConfig, step: int) -> Dict[str, Any]:
+    k = _key(cfg, step)
+    if cfg.task == "lm_shift":
+        k1, k2 = jax.random.split(k)
+        tokens = jax.random.randint(k1, (cfg.batch, cfg.seq), 0, cfg.vocab)
+        labels = (tokens + 1) % cfg.vocab
+        flip = jax.random.bernoulli(k2, cfg.noise, labels.shape)
+        noise_tok = jax.random.randint(k2, labels.shape, 0, cfg.vocab)
+        labels = jnp.where(flip, noise_tok, labels)
+        return {"tokens": tokens, "labels": labels}
+    if cfg.task == "lm_random":
+        k1, k2 = jax.random.split(k)
+        out = {"tokens": jax.random.randint(k1, (cfg.batch, cfg.seq), 0, cfg.vocab),
+               "labels": jax.random.randint(k2, (cfg.batch, cfg.seq), 0, cfg.vocab)}
+        if cfg.frontend_tokens:
+            out["extra"] = {"patch_embeds": jax.random.normal(
+                k2, (cfg.batch, cfg.frontend_tokens, cfg.in_dim))}
+        return out
+    if cfg.task == "video":
+        k1, k2, k3 = jax.random.split(k, 3)
+        shape = (cfg.batch, cfg.temporal, cfg.spatial, cfg.in_dim)
+        return {"x": jax.random.normal(k1, shape),
+                "t": jax.random.uniform(k2, (cfg.batch,)),
+                "target": jax.random.normal(k3, shape)}
+    if cfg.task == "encdec":
+        k1, k2, k3 = jax.random.split(k, 3)
+        tokens = jax.random.randint(k2, (cfg.batch, cfg.seq), 0, cfg.vocab)
+        return {"feats": jax.random.normal(
+                    k1, (cfg.batch, cfg.enc_seq, cfg.frontend_dim)),
+                "tokens": tokens,
+                "labels": (tokens + 1) % cfg.vocab}
+    raise ValueError(cfg.task)
+
+
+def batch_for_arch(spec, shape_name: str, *, batch_override: Optional[int] = None,
+                   seq_override: Optional[int] = None, step: int = 0):
+    """Concrete (small) batch for an ArchSpec x shape — used by smoke tests
+    and examples; the dry-run uses launch.input_specs (ShapeDtypeStructs)."""
+    shp = spec.shapes()[shape_name]
+    if spec.family == "t2d":
+        cfg = DataConfig(task="video", batch=batch_override or shp["batch"],
+                         temporal=shp["temporal"], spatial=shp["spatial"],
+                         in_dim=spec.config.in_dim)
+        return make_batch(cfg, step)
+    seq = seq_override or shp["seq"]
+    batch = batch_override or shp["batch"]
+    if spec.family == "encdec":
+        cfg = DataConfig(task="encdec", vocab=spec.config.vocab, seq=seq // 4,
+                         enc_seq=seq, batch=batch,
+                         frontend_dim=spec.config.frontend_dim)
+        return make_batch(cfg, step)
+    cfg = DataConfig(task="lm_random", vocab=spec.config.vocab, seq=seq,
+                     batch=batch,
+                     frontend_tokens=getattr(spec.config, "frontend_tokens", 0),
+                     in_dim=getattr(spec.config, "frontend_dim", 0) or 16)
+    return make_batch(cfg, step)

@@ -1,0 +1,163 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references the kernel tests sweep against
+(shapes x dtypes, ``assert_allclose``).  They are also the default compute
+backend for the CPU dry-run, where XLA's einsum FLOP accounting feeds the
+roofline analysis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38   # close to bf16 min, matches TPU flash kernels
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = False, window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None,
+                  q_offset: int = 0) -> jax.Array:
+    """Reference multi-head attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0 (GQA).
+    ``q_offset``: global position of q[...,0,:] relative to k (decode uses
+    Sq=1, q_offset=cache_len-1 style offsets).
+    Returns (B, Hq, Sq, D).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = d ** -0.5 if scale is None else scale
+    qg = q.reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array, *, d_skip: Optional[jax.Array] = None,
+            init_state: Optional[jax.Array] = None,
+            return_state: bool = False):
+    """Reference Mamba-2 SSD (state-space duality) recurrence — the exact
+    sequential scan the chunked kernel must reproduce.
+
+    x:  (B, L, H, P)   per-head inputs
+    dt: (B, L, H)      softplus-activated step sizes (>0)
+    a:  (H,)           negative state decay rates (A = -exp(a_log))
+    b:  (B, L, G, S)   input->state projection (G groups, GQA-style H%G==0)
+    c:  (B, L, G, S)   state->output projection
+    d_skip: (H,)       optional skip connection weight
+    init_state: (B, H, P, S) carried state (decode); zeros if None.
+
+    Recurrence per head h (group g = h // (H//G)):
+        st_t = exp(dt_t * a_h) * st_{t-1} + dt_t * b_t  (outer) x_t
+        y_t  = c_t . st_t  (+ d_skip * x_t)
+    Returns y (B, L, H, P) [and final state (B, H, P, S)].
+    """
+    bsz, l, h, p = x.shape
+    _, _, g, s = b.shape
+    assert h % g == 0
+    rep = h // g
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = jnp.repeat(b.astype(jnp.float32), rep, axis=2)      # (B, L, H, S)
+    cf = jnp.repeat(c.astype(jnp.float32), rep, axis=2)
+    decay = jnp.exp(dtf * a.astype(jnp.float32)[None, None, :])  # (B, L, H)
+
+    st0 = (jnp.zeros((bsz, h, p, s), jnp.float32) if init_state is None
+           else init_state.astype(jnp.float32))
+
+    def step(st, inp):
+        x_t, dt_t, b_t, c_t, dec_t = inp
+        upd = jnp.einsum("bhp,bhs->bhps", dt_t[..., None] * x_t, b_t)
+        st = dec_t[..., None, None] * st + upd
+        y_t = jnp.einsum("bhps,bhs->bhp", st, c_t)
+        return st, y_t
+
+    inps = (xf.swapaxes(0, 1), dtf.swapaxes(0, 1), bf.swapaxes(0, 1),
+            cf.swapaxes(0, 1), decay.swapaxes(0, 1))
+    st_f, ys = jax.lax.scan(step, st0, inps)
+    y = ys.swapaxes(0, 1)
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * xf
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, st_f
+    return y
+
+
+def ssd_chunked_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                    c: jax.Array, *, d_skip: Optional[jax.Array] = None,
+                    chunk: int = 128) -> jax.Array:
+    """Vectorised chunked SSD — identical math to the Pallas kernel but in
+    straight-line jnp: all chunks batched, the inter-chunk recurrence via
+    ``associative_scan`` (log-depth, fully visible to XLA's cost model).
+    This is the production "ref" backend; ``ssd_ref`` (sequential scan)
+    remains the test oracle."""
+    bsz, l, h, p = x.shape
+    _, _, g, s = b.shape
+    rep = h // g
+    ck = min(chunk, l)
+    while l % ck:
+        ck //= 2
+    nc = l // ck
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, ck, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, ck, h)
+    bf = jnp.repeat(b.astype(jnp.float32), rep, axis=2).reshape(
+        bsz, nc, ck, h, s)
+    cf = jnp.repeat(c.astype(jnp.float32), rep, axis=2).reshape(
+        bsz, nc, ck, h, s)
+    da = dtf * a.astype(jnp.float32)[None, None, None, :]     # (B,nc,ck,H)
+    cum = jnp.cumsum(da, axis=2)                               # within chunk
+    total = cum[:, :, -1]                                      # (B,nc,H)
+
+    xdt = xf * dtf[..., None]
+    # intra-chunk: (B,nc,H,ck,ck) masked decay attention
+    cb = jnp.einsum("bnkhs,bnjhs->bnhkj", cf, bf)
+    seg = cum.transpose(0, 1, 3, 2)[..., :, None] - \
+        cum.transpose(0, 1, 3, 2)[..., None, :]
+    mask = jnp.tril(jnp.ones((ck, ck), bool))
+    seg = jnp.where(mask[None, None, None], seg, -1e30)
+    y_intra = jnp.einsum("bnhkj,bnjhp->bnkhp", cb * jnp.exp(seg), xdt)
+
+    # chunk states: (B,nc,H,P,S)
+    w = jnp.exp(total[:, :, None, :] - cum)[..., None] * xdt   # (B,nc,ck,H,P)
+    st = jnp.einsum("bnkhp,bnkhs->bnhps", w, bf)
+    # inter-chunk associative combine over nc:
+    #   (d2, s2) o (d1, s1) -> (d1*d2, s2 + d2*s1)   [left-to-right]
+    dec = jnp.exp(total)                                        # (B,nc,H)
+
+    def combine(lhs, rhs):
+        d1, s1 = lhs
+        d2, s2 = rhs
+        return d1 * d2, s2 + d2[..., None, None] * s1
+
+    dec_c, st_c = jax.lax.associative_scan(combine, (dec, st), axis=1)
+    # state ENTERING chunk n = cumulative state after chunk n-1
+    st_in = jnp.concatenate(
+        [jnp.zeros_like(st_c[:, :1]), st_c[:, :-1]], axis=1)
+    y_inter = jnp.einsum("bnkhs,bnhps->bnkhp", cf, st_in) * \
+        jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    if d_skip is not None:
+        y = y + d_skip.astype(jnp.float32)[None, None, :, None] * \
+            x.astype(jnp.float32)
+    return y.astype(x.dtype)

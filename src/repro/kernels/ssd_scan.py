@@ -1,0 +1,117 @@
+"""Pallas TPU chunked SSD scan (Mamba-2 state-space duality).
+
+TPU-native adaptation: the SSD chunked algorithm maps naturally onto the MXU
+— intra-chunk work is three (Q x Q)/(Q x S)/(Q x P) matmuls, and the
+inter-chunk recurrence is carried as a (P x S) state held in VMEM scratch
+across the *sequential* innermost grid dimension (chunk index), so one kernel
+invocation streams the whole sequence without returning to HBM for the state.
+
+Layouts (wrapper in ops.py transposes from model layout):
+  xdt: (B, H, L, P)  = dt * x          (precomputed elementwise in wrapper)
+  da:  (B, H, L)     = dt * a_h        (<= 0; negative decay increments)
+  b:   (B, G, L, S)  input->state      (G groups, H % G == 0)
+  c:   (B, G, L, S)  state->output
+  y:   (B, H, L, P)
+
+Per chunk (all f32, chunk length Q):
+  cum_i   = cumsum(da)_i
+  y_intra = ((c @ b^T) * exp(cum_i - cum_j) * [j<=i]) @ xdt
+  y_inter = (c @ state^T) * exp(cum)
+  state'  = exp(cum_Q) * state + ((exp(cum_Q - cum) * xdt)^T @ b)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(xdt_ref, da_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk: int, group: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xdt = xdt_ref[0, 0].astype(jnp.float32)       # (Q, P)
+    da = da_ref[0, 0].astype(jnp.float32)         # (Q,)
+    bmat = b_ref[0, 0].astype(jnp.float32)        # (Q, S)
+    cmat = c_ref[0, 0].astype(jnp.float32)        # (Q, S)
+
+    cum = jnp.cumsum(da)                          # (Q,) inclusive
+    total = cum[-1]
+
+    # --- intra-chunk: (Q,Q) masked decay attention on the MXU
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    seg = cum[:, None] - cum[None, :]             # cum_i - cum_j
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where(cols <= rows, seg, NEG_INF)   # mask BEFORE exp: no overflow
+    y_intra = jax.lax.dot_general(cb * jnp.exp(seg), xdt,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (Q, P)
+
+    # --- inter-chunk: contribution of the carried state
+    state = state_ref[...]                        # (P, S)
+    cs = jax.lax.dot_general(cmat, state, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, P)
+    y_inter = cs * jnp.exp(cum)[:, None]
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # --- state update for the next chunk
+    w = jnp.exp(total - cum)[:, None] * xdt       # (Q, P)
+    upd = jax.lax.dot_general(w, bmat, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, S)
+    state_ref[...] = jnp.exp(total) * state + upd
+
+
+def ssd_scan_fwd(xdt: jax.Array, da: jax.Array, b: jax.Array, c: jax.Array, *,
+                 chunk: int = 128, interpret: bool | None = None) -> jax.Array:
+    """Chunked SSD scan.  Shapes as in the module docstring; L % chunk == 0
+    (ops.py pads).  Returns y: (B, H, L, P)."""
+    bs, h, l, p = xdt.shape
+    _, g, _, s = b.shape
+    assert h % g == 0, (h, g)
+    group = h // g
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid = (bs, h, l // chunk)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, group=group)
+
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except TypeError:
+        compiler_params = None
+
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, ci: (b_, h_, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, ci: (b_, h_, ci)),
+            pl.BlockSpec((1, 1, chunk, s),
+                         lambda b_, h_, ci: (b_, h_ // group, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, s),
+                         lambda b_, h_, ci: (b_, h_ // group, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p),
+                               lambda b_, h_, ci: (b_, h_, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bs, h, l, p), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )
+    return call(xdt, da, b, c)

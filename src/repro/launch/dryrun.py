@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape) cell on the
+production meshes and record memory/cost/collective evidence.
+
+MUST be run as a module (``PYTHONPATH=src python -m repro.launch.dryrun``):
+the XLA_FLAGS line above executes before any jax import so 512 host devices
+exist for ``jax.make_mesh``.  Never import this module from tests — they
+need the 1-device default.
+
+Per cell this produces a JSON record under results/dryrun/:
+  * memory_analysis  (bytes/device: args, temps, outputs -> proves it fits)
+  * cost_analysis    (per-device FLOPs / bytes, scan body counted once)
+  * collective bytes (HLO parse, while-body trip counts applied)
+  * depth-extrapolated FLOPs/bytes (see analysis/roofline.py)
+
+Single-pod (16x16 data,model) runs feed the §Roofline table; the 2-pod
+(2,16,16 pod,data,model) pass proves the pod axis shards (compile-only).
+"""
+import argparse
+import dataclasses
+import gzip
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis.roofline import (parse_collectives, roofline,
+                                     extrapolate_depth, PEAK_FLOPS, HBM_BW,
+                                     ICI_BW)
+from repro.configs import get, names
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def shallow_spec(spec, periods: int):
+    """Same arch at a reduced number of scan periods (depth extrapolation)."""
+    cfg = spec.config
+    if spec.family == "lm":
+        period = len(cfg.period_specs())
+        new = dataclasses.replace(cfg, n_layers=period * periods)
+    elif spec.family == "encdec":
+        new = dataclasses.replace(cfg, n_enc_layers=periods,
+                                  n_dec_layers=periods)
+    else:  # t2d: one period = spatial+temporal block pair
+        new = dataclasses.replace(cfg, n_layers=2 * periods)
+    return dataclasses.replace(spec, config=new)
+
+
+def n_periods(spec) -> int:
+    cfg = spec.config
+    if spec.family == "lm":
+        return cfg.n_periods
+    if spec.family == "encdec":
+        return cfg.n_enc_layers          # enc and dec scale together
+    return cfg.n_layers // 2
+
+
+def model_flops(spec, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens/step."""
+    shp = spec.shapes()[shape]
+    if spec.family == "t2d":
+        from repro.models.transformer2d import t2d_param_count
+        n = t2d_param_count(spec.config)
+        tokens = shp["batch"] * shp["temporal"] * shp["spatial"]
+    elif spec.family == "encdec":
+        from repro.models.encdec import encdec_param_count
+        n = encdec_param_count(spec.config)
+        tokens = shp["batch"] * (shp["seq"] + shp["seq"] // 4) // 2
+    else:
+        from repro.models.lm import param_counts
+        n = param_counts(spec.config)["active"]
+        tokens = shp["batch"] * shp["seq"]
+    mult = 6.0 if shp["step"] == "train" else 2.0
+    if shp["step"] == "decode":
+        tokens = shp["batch"]            # one token per request
+    return mult * n * tokens
+
+
+def compile_cell(spec, shape, mesh, **kw):
+    cell = build_cell(spec, shape, mesh, **kw)
+    # donate params/opt-state (train) or caches (decode): in-place updates,
+    # halves the steady-state footprint
+    donate = tuple(range(len(cell.args))) if cell.step_kind != "prefill" else ()
+    donate = tuple(i for i in donate
+                   if i != 1 or cell.step_kind != "decode")  # keep token arg
+    kwargs = {}
+    if cell.out_shardings is not None:
+        kwargs["out_shardings"] = cell.out_shardings
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     donate_argnums=(0,) if cell.step_kind == "train" else
+                     ((2,) if cell.step_kind == "decode" else ()),
+                     **kwargs)
+    t0 = time.monotonic()
+    lowered = jitted.lower(*cell.args)
+    t1 = time.monotonic()
+    compiled = lowered.compile()
+    t2 = time.monotonic()
+    return cell, compiled, {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, depth_extras: bool,
+             hlo_path=None, **kw):
+    spec = get(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+
+    cell, compiled, times = compile_cell(spec, shape, mesh, **kw)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    if hlo_path:
+        with gzip.open(hlo_path, "wt") as fh:
+            fh.write(txt)
+    colls = parse_collectives(txt)
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "step_kind": cell.step_kind, "meta": cell.meta,
+        "times": times,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            # donated outputs alias their argument buffers — don't double
+            # count them in the steady-state footprint
+            "peak_bytes": (mem.argument_size_in_bytes +
+                           mem.temp_size_in_bytes + mem.output_size_in_bytes -
+                           mem.alias_size_in_bytes),
+            "fits_16gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                          + mem.output_size_in_bytes -
+                          mem.alias_size_in_bytes) < 16e9,
+        },
+        "cost_raw": {"flops": cost.get("flops", 0.0),
+                     "bytes": cost.get("bytes accessed", 0.0)},
+        "collectives": {"bytes_per_device": colls.bytes_per_device,
+                        "count": colls.count,
+                        "by_kind": colls.by_kind,
+                        "by_kind_count": colls.by_kind_count},
+    }
+
+    if depth_extras and not multi_pod:
+        from repro.models import flags
+        t = n_periods(spec)
+        f, b = {}, {}
+        for d in (1, 2):
+            # flat mode: inner scans (chunked attention/xent, grad accum)
+            # compute straight-line so cost_analysis sees every FLOP; the
+            # remaining layer scan is what depth extrapolation corrects
+            with flags.flat_cost_mode():
+                sd = dataclasses.replace(shallow_spec(spec, d),
+                                         train_grad_accum=1)
+                _, cd, _ = compile_cell(sd, shape, mesh, **kw)
+            ca = cd.cost_analysis()
+            f[d], b[d] = ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)
+        flops_dev = extrapolate_depth(f[1], f[2], t)
+        bytes_dev = extrapolate_depth(b[1], b[2], t)
+        mf = model_flops(spec, shape)
+        rl = roofline(hlo_flops_per_dev=flops_dev, hlo_bytes_per_dev=bytes_dev,
+                      collective_bytes_per_dev=colls.bytes_per_device,
+                      chips=chips, model_flops=mf)
+        rec["roofline"] = rl.as_dict()
+        rec["depth_points"] = {"flops": f, "bytes": b, "periods": t}
+    return rec
+
+
+def cell_list():
+    out = []
+    for arch in names():
+        for shape in get(arch).shapes():
+            out.append((arch, shape))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-depth", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a, s in cell_list():
+            print(f"{a} {s}")
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = [(a, s) for a, s in cell_list()
+             if (args.arch is None or a == args.arch)
+             and (args.shape is None or s == args.shape)]
+    failures = []
+    for arch, shape in cells:
+        tag = "mp" if args.multi_pod else "sp"
+        path = os.path.join(args.out, f"{arch}__{shape}__{tag}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {arch} x {shape} ({tag})")
+            continue
+        print(f"[cell] {arch} x {shape} ({tag}) ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           depth_extras=not args.no_depth,
+                           hlo_path=path.replace(".json", ".hlo.gz"))
+            with open(path, "w") as fh:
+                json.dump(rec, fh, indent=1)
+            m = rec["memory"]
+            rl = rec.get("roofline", {})
+            print(f"   ok: peak {m['peak_bytes']/1e9:.2f} GB/dev "
+                  f"fits={m['fits_16gb']} "
+                  f"coll {rec['collectives']['bytes_per_device']/1e6:.1f} MB/dev "
+                  f"compile {rec['times']['compile_s']:.1f}s "
+                  + (f"bottleneck={rl.get('bottleneck')}" if rl else ""),
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures.append((arch, shape, repr(e)))
+            with open(path + ".err", "w") as fh:
+                fh.write(traceback.format_exc())
+            print(f"   FAIL: {e!r}", flush=True)
+    if failures:
+        print(f"{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("all cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing harness: compile one (arch x shape) cell under a named
+variant, report the three roofline terms + collective breakdown, and append
+the iteration record to results/perf/<cell>.jsonl.
+
+Run as a module:
+  PYTHONPATH=src python -m repro.launch.perf --arch gemma2-2b \
+      --shape train_4k --variant grad_barrier
+
+Variants compose via comma: --variant grad_barrier,remat_dots
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.analysis.roofline import parse_collectives, roofline, \
+    extrapolate_depth
+from repro.configs import get
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import (compile_cell, shallow_spec, n_periods,
+                                 model_flops)
+from repro.models import flags
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "perf")
+
+VARIANTS = {
+    "baseline": {},
+    "grad_barrier": {"grad_barrier": True},
+    "remat_dots": {"remat_policy": "dots"},
+    "unfused_switch": {"fused_switch": False},   # Ulysses-style 3 a2a
+    "fused_switch": {"fused_switch": True},
+}
+
+
+def measure(arch: str, shape: str, variant: str, kw: dict):
+    spec = get(arch)
+    mesh = make_production_mesh()
+    cell, compiled, times = compile_cell(spec, shape, mesh, **kw)
+    mem = compiled.memory_analysis()
+    colls = parse_collectives(compiled.as_text())
+
+    t = n_periods(spec)
+    f, b = {}, {}
+    for d in (1, 2):
+        with flags.flat_cost_mode():
+            sd = dataclasses.replace(shallow_spec(spec, d),
+                                     train_grad_accum=1)
+            _, cd, _ = compile_cell(sd, shape, mesh, **kw)
+        ca = cd.cost_analysis()
+        f[d], b[d] = ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)
+    rl = roofline(
+        hlo_flops_per_dev=extrapolate_depth(f[1], f[2], t),
+        hlo_bytes_per_dev=extrapolate_depth(b[1], b[2], t),
+        collective_bytes_per_dev=colls.bytes_per_device, chips=256,
+        model_flops=model_flops(spec, shape))
+    return {
+        "arch": arch, "shape": shape, "variant": variant, "knobs": kw,
+        "roofline": rl.as_dict(),
+        "collectives": {"bytes_per_device": colls.bytes_per_device,
+                        "by_kind": colls.by_kind,
+                        "by_kind_count": colls.by_kind_count},
+        "peak_gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes +
+                    mem.output_size_in_bytes - mem.alias_size_in_bytes) / 1e9,
+        "compile_s": times["compile_s"],
+        "ts": time.time(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    kw = {}
+    for v in args.variant.split(","):
+        kw.update(VARIANTS[v])
+    rec = measure(args.arch, args.shape, args.variant, kw)
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{args.arch}__{args.shape}.jsonl")
+    with open(path, "a") as fh:
+        fh.write(json.dumps(rec) + "\n")
+    rl = rec["roofline"]
+    print(f"{args.arch} x {args.shape} [{args.variant}]")
+    print(f"  compute={rl['compute_s']:.4f}s memory={rl['memory_s']:.4f}s "
+          f"collective={rl['collective_s']:.4f}s -> {rl['bottleneck']}")
+    print(f"  coll by kind: "
+          f"{ {k: round(v/1e9,2) for k,v in rec['collectives']['by_kind'].items()} } GB")
+    print(f"  useful={rl['useful_ratio']:.3f} peak={rec['peak_gb']:.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,379 @@
+"""Per-cell step builders: (arch x input-shape x mesh) -> jit-able step with
+ShapeDtypeStruct inputs and NamedSharding in_shardings.
+
+Everything is abstract (``jax.eval_shape``) — no parameter allocation ever
+happens; .lower().compile() on the production mesh is the proof artifact.
+
+Entry points per shape kind (assignment rules):
+  train_*    -> train_step  (fwd + bwd + AdamW update, remat)
+  prefill_*  -> prefill_step (fwd + KV/state cache build, last logits)
+  decode_* / long_* -> serve_step (ONE new token against a seq_len cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec
+from repro.models import lm as LM
+from repro.models import encdec as ED
+from repro.models import transformer2d as T2D
+from repro.optim.adamw import OptConfig, apply_adamw, init_opt_state
+from repro.parallel.partition import (ParallelPlan, param_pspecs,
+                                      make_sharder)
+from repro.serving.engine import cache_pspecs
+
+
+def auto_opt_cfg(total_params: int) -> OptConfig:
+    """Memory-tiered optimizer config: 400B-class models cannot afford f32
+    master + f32 moments on 256 x 16GB chips (398e9 * 14B / 256 = 21.8 GB),
+    so moments drop to bf16 and the master copy is skipped (documented in
+    DESIGN.md).  Mid-size keeps f32 moments; small keeps the full master."""
+    import jax.numpy as jnp
+    if total_params > 200e9:
+        return OptConfig(use_master=False, state_dtype=jnp.bfloat16)
+    if total_params > 50e9:
+        return OptConfig(use_master=False)
+    return OptConfig()
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch x shape x mesh) dry-run cell, fully abstract."""
+    arch: str
+    shape_name: str
+    step_kind: str
+    fn: Callable
+    args: Tuple[Any, ...]                 # ShapeDtypeStruct trees
+    in_shardings: Tuple[Any, ...]         # NamedSharding trees
+    meta: Dict[str, Any]
+    out_shardings: Any = None             # pins grads/caches sharded (ZeRO
+                                          # grad reduce-scatter happens here)
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp(mesh: Mesh):
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _opt_pspecs(params_specs):
+    return {"m": params_specs, "v": params_specs,
+            "step": P()}
+
+
+def _metric_specs(mesh):
+    return {"loss": NamedSharding(mesh, P()),
+            "lr": NamedSharding(mesh, P()),
+            "grad_norm": NamedSharding(mesh, P())}
+
+
+def _abstract(fn, *args):
+    """eval_shape with configs closed over (static); array trees as args."""
+    return jax.eval_shape(fn, *args)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_batch_struct(spec: ArchSpec, seq: int, batch: int):
+    cfg = spec.config
+    out = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if getattr(cfg, "frontend_dim", None) and cfg.frontend_tokens:
+        out["extra"] = {"patch_embeds": jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.frontend_dim), cfg.dtype)}
+    return out
+
+
+def _lm_batch_specs(spec: ArchSpec, mesh: Mesh, *, shard_seq: bool):
+    dp = _dp(mesh)
+    seq_ax = ("model" if (shard_seq and spec.plan.mode in ("dsp", "tp"))
+              else None)
+    out = {"tokens": P(dp, seq_ax), "labels": P(dp, seq_ax)}
+    cfg = spec.config
+    if getattr(cfg, "frontend_dim", None) and cfg.frontend_tokens:
+        out["extra"] = {"patch_embeds": P(dp, None, None)}
+    return out
+
+
+def build_lm_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
+                  opt_cfg: Optional[OptConfig] = None,
+                  fused_switch: bool = True,
+                  remat: bool = True, remat_policy: str = "full",
+                  grad_barrier: bool = False) -> Cell:
+    cfg, plan = spec.config, spec.plan
+    shp = spec.shapes()[shape_name]
+    seq, batch, kind = shp["seq"], shp["batch"], shp["step"]
+    sharder = make_sharder(mesh, plan)
+    opt_cfg = opt_cfg or auto_opt_cfg(LM.param_counts(cfg)["total"])
+
+    params_s = _abstract(lambda: LM.init_lm(jax.random.PRNGKey(0), cfg))
+    pspecs = param_pspecs(params_s, plan, axis_sizes=dict(mesh.shape))
+    meta = {"arch": spec.name, "shape": shape_name, "plan": plan.mode,
+            "seq": seq, "batch": batch}
+
+    if kind == "train":
+        opt_s = _abstract(lambda p: init_opt_state(p, opt_cfg), params_s)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        if opt_cfg.use_master:
+            ospecs["master"] = pspecs
+        ga = spec.train_grad_accum
+        batch_s = _lm_batch_struct(spec, seq, batch // ga)
+        bspecs = _lm_batch_specs(spec, mesh, shard_seq=True)
+        if ga > 1:
+            batch_s = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct((ga,) + a.shape, a.dtype),
+                batch_s)
+            bspecs = jax.tree_util.tree_map(
+                lambda s: P(*((None,) + tuple(s))), bspecs,
+                is_leaf=lambda x: isinstance(x, P))
+
+        def loss_of(params, b):
+            return LM.lm_loss(params, b, cfg, sharder=sharder,
+                              backend="ref", remat=remat,
+                              remat_policy=remat_policy,
+                              fused_switch=fused_switch)
+
+        def train_step(params, opt_state, b):
+            if ga == 1:
+                (loss, m), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, b)
+                if grad_barrier:
+                    # pin gradients in their native (bf16) dtype across the
+                    # collective boundary: stops XLA hoisting the f32
+                    # convert above the grad all-reduce (2x wire bytes)
+                    grads = jax.lax.optimization_barrier(grads)
+            else:
+                def micro(carry, mb):
+                    acc, ls = carry
+                    (l, _), g = jax.value_and_grad(
+                        loss_of, has_aux=True)(params, mb)
+                    acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                    return (acc, ls + l), None
+                zeros = jax.tree_util.tree_map(
+                    lambda q: jnp.zeros(q.shape, jnp.float32), params)
+                (grads, lsum), _ = jax.lax.scan(
+                    micro, (zeros, jnp.zeros(())), b)
+                grads = jax.tree_util.tree_map(lambda g: g / ga, grads)
+                loss = lsum / ga
+            params, opt_state, om = apply_adamw(params, grads, opt_state,
+                                                opt_cfg)
+            return params, opt_state, {"loss": loss, **om}
+
+        return Cell(spec.name, shape_name, "train", train_step,
+                    (params_s, opt_s, batch_s),
+                    (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),
+                    meta,
+                    out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                                   _metric_specs(mesh)))
+
+    if kind == "prefill":
+        batch_s = _lm_batch_struct(spec, seq, batch)
+        bspecs = _lm_batch_specs(spec, mesh, shard_seq=True)
+
+        def prefill_step(params, b):
+            return LM.forward_prefill(params, b["tokens"], cfg,
+                                      sharder=sharder, backend="ref",
+                                      fused_switch=fused_switch, remat=remat,
+                                      extra=b.get("extra"))
+
+        caches_ps = _abstract(lambda: LM.init_caches(cfg, batch, seq))
+        pf_cspecs = cache_pspecs(caches_ps, plan)
+        dp0 = _dp(mesh)
+        logits_spec = NamedSharding(mesh, P(dp0, None, None))
+        return Cell(spec.name, shape_name, "prefill", prefill_step,
+                    (params_s, batch_s),
+                    (_ns(mesh, pspecs), _ns(mesh, bspecs)), meta,
+                    out_shardings=(logits_spec, _ns(mesh, pf_cspecs)))
+
+    # decode: one token against a seq-length cache.  Weights switch to the
+    # INFERENCE layout: TP(+EP) sharded, no ZeRO — a serving engine never
+    # all-gathers 400B of weights per token (found in the jamba/arctic
+    # decode audits).  Activation/caches keep the arch's (DSP) plan.
+    infer_plan = dataclasses.replace(plan, mode="tp_flat", zero=False)
+    pspecs = param_pspecs(params_s, infer_plan, axis_sizes=dict(mesh.shape))
+    caches_s = _abstract(lambda: LM.init_caches(cfg, batch, seq))
+    cspecs = cache_pspecs(caches_s, plan)
+    # batch=1 cells cannot shard batch over data; replicate instead
+    dp = _dp(mesh)
+    dp_count = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_count *= mesh.shape[a]
+    bdim = dp if batch % dp_count == 0 else None
+    if bdim is None:
+        cspecs = jax.tree_util.tree_map(
+            lambda s: P(*((s[0],) + (None,) + tuple(s[2:]))) if len(s) >= 2
+            else s, cspecs, is_leaf=lambda x: isinstance(x, P))
+    tok_s = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+    def serve_step(params, token, caches):
+        return LM.forward_decode(params, token, caches, cfg,
+                                 sharder=sharder, backend="ref")
+
+    return Cell(spec.name, shape_name, "decode", serve_step,
+                (params_s, tok_s, caches_s),
+                (_ns(mesh, pspecs), NamedSharding(mesh, P(bdim, None)),
+                 _ns(mesh, cspecs)), meta,
+                out_shardings=(NamedSharding(mesh, P(bdim, None, None)),
+                               _ns(mesh, cspecs)))
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder family (seamless): S_enc = seq, S_dec = seq // 4
+# ---------------------------------------------------------------------------
+
+def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
+                      opt_cfg: Optional[OptConfig] = None,
+                      fused_switch: bool = True, remat: bool = True) -> Cell:
+    cfg, plan = spec.config, spec.plan
+    shp = spec.shapes()[shape_name]
+    seq, batch, kind = shp["seq"], shp["batch"], shp["step"]
+    s_dec = max(seq // 4, 128)
+    sharder = make_sharder(mesh, plan)
+    opt_cfg = opt_cfg or OptConfig()
+    dp = _dp(mesh)
+    seq_ax = "model" if plan.mode == "dsp" else None
+
+    params_s = _abstract(lambda: ED.init_encdec(jax.random.PRNGKey(0), cfg))
+    pspecs = param_pspecs(params_s, plan, axis_sizes=dict(mesh.shape),
+                          stacked_prefixes=("enc_periods", "dec_periods"))
+    meta = {"arch": spec.name, "shape": shape_name, "plan": plan.mode,
+            "seq": seq, "batch": batch, "s_dec": s_dec}
+
+    if kind in ("train", "prefill"):
+        batch_s = {"feats": jax.ShapeDtypeStruct((batch, seq,
+                                                  cfg.frontend_dim), cfg.dtype),
+                   "tokens": jax.ShapeDtypeStruct((batch, s_dec), jnp.int32),
+                   "labels": jax.ShapeDtypeStruct((batch, s_dec), jnp.int32)}
+        bspecs = {"feats": P(dp, seq_ax, None), "tokens": P(dp, seq_ax),
+                  "labels": P(dp, seq_ax)}
+        if kind == "train":
+            opt_s = _abstract(lambda p: init_opt_state(p, opt_cfg), params_s)
+            ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+            if opt_cfg.use_master:
+                ospecs["master"] = pspecs
+
+            def train_step(params, opt_state, b):
+                def loss_fn(p):
+                    return ED.encdec_loss(p, b, cfg, sharder=sharder,
+                                          backend="ref", remat=remat,
+                                          fused_switch=fused_switch)
+                (loss, m), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params)
+                params, opt_state, om = apply_adamw(params, grads, opt_state,
+                                                    opt_cfg)
+                return params, opt_state, {"loss": loss, **om}
+
+            return Cell(spec.name, shape_name, "train", train_step,
+                        (params_s, opt_s, batch_s),
+                        (_ns(mesh, pspecs), _ns(mesh, ospecs),
+                         _ns(mesh, bspecs)), meta,
+                        out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                                       _metric_specs(mesh)))
+
+        def prefill_step(params, b):
+            return ED.prefill(params, b, cfg, sharder=sharder, backend="ref",
+                              remat=remat, fused_switch=fused_switch)
+
+        del batch_s["labels"], bspecs["labels"]
+        pf_caches = _abstract(lambda: ED.init_dec_caches(cfg, batch, s_dec,
+                                                         seq))
+        return Cell(spec.name, shape_name, "prefill", prefill_step,
+                    (params_s, batch_s),
+                    (_ns(mesh, pspecs), _ns(mesh, bspecs)), meta,
+                    out_shardings=(NamedSharding(mesh, P(dp, None, None)),
+                                   _ns(mesh, cache_pspecs(pf_caches, plan))))
+
+    # decode: decoder history = seq, encoder memory = seq // 4
+    caches_s = _abstract(lambda: ED.init_dec_caches(cfg, batch, seq,
+                                                     seq // 4))
+    cspecs = cache_pspecs(caches_s, plan)
+    tok_s = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+    def serve_step(params, token, caches):
+        return ED.decode_step(params, token, caches, cfg, sharder=sharder,
+                              backend="ref")
+
+    return Cell(spec.name, shape_name, "decode", serve_step,
+                (params_s, tok_s, caches_s),
+                (_ns(mesh, pspecs), NamedSharding(mesh, P(dp, None)),
+                 _ns(mesh, cspecs)), meta,
+                out_shardings=(NamedSharding(mesh, P(dp, None, None)),
+                               _ns(mesh, cspecs)))
+
+
+# ---------------------------------------------------------------------------
+# 2D transformer family (the paper's model)
+# ---------------------------------------------------------------------------
+
+def build_t2d_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
+                   opt_cfg: Optional[OptConfig] = None,
+                   mode: str = "dsp", remat: bool = True) -> Cell:
+    cfg, plan = spec.config, spec.plan
+    shp = spec.shapes()[shape_name]
+    t_len, s_len, batch = shp["temporal"], shp["spatial"], shp["batch"]
+    opt_cfg = opt_cfg or OptConfig()
+    dp = _dp(mesh)
+
+    # batch must divide the DP extent; drop the pod axis (replicate) when it
+    # doesn't (2-pod mesh with batch 16: 16 % 32 != 0 but 16 % 16 == 0)
+    dp_count = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_count *= mesh.shape[a]
+    if batch % dp_count and isinstance(dp, tuple):
+        dp = dp[-1]
+        dp_count = mesh.shape[dp]
+    if batch % dp_count:
+        dp = None
+    params_s = _abstract(lambda: T2D.init_t2d(jax.random.PRNGKey(0), cfg))
+    pspecs = param_pspecs(params_s, plan, axis_sizes=dict(mesh.shape))
+    opt_s = _abstract(lambda p: init_opt_state(p, opt_cfg), params_s)
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    if opt_cfg.use_master:
+        ospecs["master"] = pspecs
+
+    batch_s = {"x": jax.ShapeDtypeStruct((batch, t_len, s_len, cfg.in_dim),
+                                         cfg.dtype),
+               "t": jax.ShapeDtypeStruct((batch,), jnp.float32),
+               "target": jax.ShapeDtypeStruct((batch, t_len, s_len,
+                                               cfg.in_dim), cfg.dtype)}
+    bspecs = {"x": P(dp, "model", None, None), "t": P(dp),
+              "target": P(dp, "model", None, None)}
+
+    def train_step(params, opt_state, b):
+        def loss_fn(p):
+            return T2D.t2d_loss(p, b, cfg, mesh=mesh, mode=mode,
+                                backend="ref", remat=remat)
+        (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, om = apply_adamw(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **om}
+
+    return Cell(spec.name, shape_name, "train", train_step,
+                (params_s, opt_s, batch_s),
+                (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),
+                {"arch": spec.name, "shape": shape_name, "plan": mode,
+                 "temporal": t_len, "spatial": s_len, "batch": batch},
+                out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                               _metric_specs(mesh)))
+
+
+def build_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, **kw) -> Cell:
+    if spec.family == "lm":
+        return build_lm_cell(spec, shape_name, mesh, **kw)
+    if spec.family == "encdec":
+        return build_encdec_cell(spec, shape_name, mesh, **kw)
+    if spec.family == "t2d":
+        return build_t2d_cell(spec, shape_name, mesh, **kw)
+    raise ValueError(spec.family)

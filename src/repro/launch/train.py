@@ -1,0 +1,109 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a real (small-scale, CPU-friendly) training loop through the full
+production stack — config registry, parallel plan, AdamW, checkpointing,
+straggler watchdog — optionally on a simulated mesh (--devices N sets
+XLA_FLAGS before jax initialises; the production launcher would instead
+inherit the real TPU topology).
+
+Smoke-scale by default (the arch's SMOKE config); pass --full to train the
+published config (only sane on a real cluster).
+"""
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="simulate N host devices (set before jax init)")
+    ap.add_argument("--mesh", default=None,
+                    help="dp,mp mesh shape, e.g. 2,4 (requires --devices)")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full published config (cluster scale)")
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.data.pipeline import DataConfig, make_batch
+    from repro.optim.adamw import OptConfig
+    from repro.parallel.partition import make_sharder, ParallelPlan
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    spec = configs.get(args.arch)
+    cfg = spec.config if args.full else spec.smoke
+
+    mesh = None
+    sharder = None
+    if args.mesh:
+        dp, mp = (int(x) for x in args.mesh.split(","))
+        mesh = jax.make_mesh((dp, mp), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        sharder = make_sharder(mesh, spec.plan)
+
+    if spec.family == "lm":
+        from repro.models.lm import init_lm, lm_loss
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        dcfg = DataConfig(task="lm_shift", vocab=cfg.vocab, seq=args.seq,
+                          batch=args.batch)
+
+        def loss_fn(p, b):
+            return lm_loss(p, b, cfg, sharder=sharder, backend="ref")
+    elif spec.family == "encdec":
+        from repro.models.encdec import init_encdec, encdec_loss
+        params = init_encdec(jax.random.PRNGKey(0), cfg)
+        dcfg = DataConfig(task="encdec", vocab=cfg.vocab, seq=args.seq // 2,
+                          enc_seq=args.seq, batch=args.batch,
+                          frontend_dim=cfg.frontend_dim)
+
+        def loss_fn(p, b):
+            return encdec_loss(p, b, cfg, sharder=sharder, backend="ref")
+    else:
+        from repro.models.transformer2d import init_t2d, t2d_loss
+        params = init_t2d(jax.random.PRNGKey(0), cfg)
+        dcfg = DataConfig(task="video", batch=args.batch, temporal=8,
+                          spatial=args.seq // 8 or 16, in_dim=cfg.in_dim)
+
+        def loss_fn(p, b):
+            return t2d_loss(p, b, cfg, mesh=mesh, backend="ref")
+
+    trainer = Trainer(
+        loss_fn=loss_fn, params=params,
+        opt_cfg=OptConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps),
+        cfg=TrainerConfig(total_steps=args.steps, grad_accum=args.grad_accum,
+                          log_every=max(args.steps // 10, 1),
+                          ckpt_every=max(args.steps // 4, 1) if args.ckpt_dir
+                          else 0, grad_compress=args.grad_compress),
+        data_fn=lambda s: make_batch(dcfg, s),
+        ckpt_dir=args.ckpt_dir)
+    if args.resume:
+        trainer.try_resume()
+    out = trainer.run()
+    print("history:", out["history"])
+    print("stragglers:", out["stragglers"])
+    first = out["history"][0][1] if out["history"] else float("nan")
+    last = out["history"][-1][1] if out["history"] else float("nan")
+    print(f"loss {first:.4f} -> {last:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    import logging
+    logging.basicConfig(level=logging.INFO)
+    main()

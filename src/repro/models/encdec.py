@@ -1,0 +1,285 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2 assignment).
+
+The audio frontend (fbank conformer feature extractor) is a stub:
+input_specs() supplies precomputed frame embeddings (B, S_enc, frontend_dim)
+which are projected to d_model.  Encoder layers are bidirectional attention
+blocks; decoder layers are causal self-attention + cross-attention + FFN.
+
+DSP mapping: self-attention stages use the (seq <-> head) dynamic switch
+(DSP-1D); the cross-attention stage switches the *decoder* sequence shard to
+heads while the encoder K/V enter head-sharded — the shard dimension moves
+between the two distinct sequence dimensions (S_dec, S_enc) across stages,
+which is the paper's multi-dimensional setting in its enc-dec form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.parallel.partition import Sharder, ParallelPlan, make_sharder
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    frontend_dim: int = 1024       # stub audio feature width
+    mlp_kind: str = "relu"
+    norm_kind: str = "layer"
+    dtype: Any = jnp.bfloat16
+
+    def attn_cfg(self, *, rope: bool = True) -> A.AttnConfig:
+        return A.AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                            n_kv_heads=self.n_kv_heads,
+                            head_dim=self.head_dim, rope=rope, bias=True)
+
+
+def _norm(cfg, p, x):
+    return L.layer_norm(p, x) if cfg.norm_kind == "layer" else L.rms_norm(p, x)
+
+
+def _init_norm(cfg):
+    return L.init_norm(cfg.d_model, bias=cfg.norm_kind == "layer",
+                       dtype=cfg.dtype)
+
+
+def _init_enc_layer(key, cfg: EncDecConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _init_norm(cfg),
+            "attn": A.init_attention(k1, cfg.attn_cfg(), dtype=cfg.dtype),
+            "ln2": _init_norm(cfg),
+            "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, kind=cfg.mlp_kind,
+                              bias=True, dtype=cfg.dtype)}
+
+
+def _init_dec_layer(key, cfg: EncDecConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": _init_norm(cfg),
+            "self_attn": A.init_attention(k1, cfg.attn_cfg(), dtype=cfg.dtype),
+            "ln_x": _init_norm(cfg),
+            "cross_attn": A.init_attention(k2, cfg.attn_cfg(rope=False),
+                                           dtype=cfg.dtype, cross=True),
+            "ln2": _init_norm(cfg),
+            "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, kind=cfg.mlp_kind,
+                              bias=True, dtype=cfg.dtype)}
+
+
+def init_encdec(key, cfg: EncDecConfig):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    enc_keys = jax.random.split(k1, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_dec_layers)
+    return {
+        "frontend": L.init_patch_embed(k3, cfg.frontend_dim, cfg.d_model,
+                                       dtype=cfg.dtype),
+        "embed": L.init_embedding(k4, cfg.vocab, cfg.d_model, dtype=cfg.dtype),
+        "enc_periods": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_periods": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": _init_norm(cfg),
+        "dec_norm": _init_norm(cfg),
+    }
+
+
+def encode(params, feats, cfg: EncDecConfig, *, sharder=None,
+           backend: str = "pallas", remat: bool = True,
+           fused_switch: bool = True):
+    """feats: (B, S_enc, frontend_dim) -> (B, S_enc, d_model)."""
+    sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
+    x = L.patch_embed(params["frontend"], feats.astype(cfg.dtype))
+    x = sharder.act3(x)
+
+    def body(xc, lp):
+        h = _norm(cfg, lp["ln1"], xc)
+        h = A.attention_sp(lp["attn"], h, cfg.attn_cfg(), sharder=sharder,
+                           backend=backend, fused_switch=fused_switch,
+                           causal=False)
+        xc = xc + h
+        h = _norm(cfg, lp["ln2"], xc)
+        h = sharder.act3(L.mlp(lp["mlp"], h, cfg.mlp_kind))
+        return sharder.act3(xc + h), None
+
+    b = jax.checkpoint(body, prevent_cse=False) if remat else body
+    from repro.models.flags import scan_or_unroll
+    x, _ = scan_or_unroll(b, x, params["enc_periods"])
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def decode(params, tokens, enc_out, cfg: EncDecConfig, *, sharder=None,
+           backend: str = "pallas", remat: bool = True,
+           fused_switch: bool = True):
+    """tokens: (B, S_dec) -> final decoder hidden (B, S_dec, d_model)."""
+    sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
+    x = L.embed(params["embed"], tokens)
+    x = sharder.act3(x)
+
+    def body(xc, lp):
+        h = _norm(cfg, lp["ln1"], xc)
+        h = A.attention_sp(lp["self_attn"], h, cfg.attn_cfg(),
+                           sharder=sharder, backend=backend,
+                           fused_switch=fused_switch, causal=True)
+        xc = xc + h
+        h = _norm(cfg, lp["ln_x"], xc)
+        h = A.attention_sp(lp["cross_attn"], h, cfg.attn_cfg(rope=False),
+                           sharder=sharder, backend=backend,
+                           fused_switch=fused_switch, causal=False,
+                           x_kv=enc_out)
+        xc = xc + h
+        h = _norm(cfg, lp["ln2"], xc)
+        h = sharder.act3(L.mlp(lp["mlp"], h, cfg.mlp_kind))
+        return sharder.act3(xc + h), None
+
+    b = jax.checkpoint(body, prevent_cse=False) if remat else body
+    from repro.models.flags import scan_or_unroll
+    x, _ = scan_or_unroll(b, x, params["dec_periods"])
+    return _norm(cfg, params["dec_norm"], x)
+
+
+def encdec_loss(params, batch, cfg: EncDecConfig, *, sharder=None,
+                backend: str = "pallas", remat: bool = True,
+                fused_switch: bool = True):
+    """batch: feats (B, S_enc, F), tokens (B, S_dec), labels (B, S_dec)."""
+    enc = encode(params, batch["feats"], cfg, sharder=sharder,
+                 backend=backend, remat=remat, fused_switch=fused_switch)
+    x = decode(params, batch["tokens"], enc, cfg, sharder=sharder,
+               backend=backend, remat=remat, fused_switch=fused_switch)
+    from repro.models.lm import chunked_xent, LMConfig
+    shim = LMConfig(name="_", n_layers=1, d_model=cfg.d_model,
+                    n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, d_ff=cfg.d_ff, vocab=cfg.vocab)
+    loss = chunked_xent(x, params["embed"]["table"], batch["labels"], shim,
+                        sharder=sharder)
+    return loss, {"xent": loss}
+
+
+def encdec_param_count(cfg: EncDecConfig) -> int:
+    d, dh = cfg.d_model, cfg.head_dim
+    attn = d * dh * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    mlp = L.mlp_param_count(d, cfg.d_ff, cfg.mlp_kind)
+    enc = cfg.n_enc_layers * (attn + mlp)
+    dec = cfg.n_dec_layers * (2 * attn + mlp)
+    return enc + dec + cfg.vocab * d + cfg.frontend_dim * d
+
+
+# ---------------------------------------------------------------------------
+# Decode: self-attn KV caches + precomputed cross K/V
+# ---------------------------------------------------------------------------
+
+def init_dec_caches(cfg: EncDecConfig, batch: int, max_len: int,
+                    enc_len: int, *, dtype=None):
+    dtype = dtype or cfg.dtype
+    kv = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    xkv = (batch, cfg.n_kv_heads, enc_len, cfg.head_dim)
+    per = {"kv": {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)},
+           "cross": {"k": jnp.zeros(xkv, dtype), "v": jnp.zeros(xkv, dtype)}}
+    stacked = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_dec_layers,) + a.shape), per)
+    return {"pos": jnp.zeros((), jnp.int32), "periods": stacked}
+
+
+def build_cross_caches(params, enc_out, cfg: EncDecConfig):
+    """Precompute every decoder layer's cross K/V from the encoder output
+    (done once per request; decode steps reuse)."""
+    b, s_enc, _ = enc_out.shape
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+
+    def one(lp):
+        k = L.linear(lp["cross_attn"]["wk"], enc_out).reshape(b, s_enc, hkv, dh)
+        v = L.linear(lp["cross_attn"]["wv"], enc_out).reshape(b, s_enc, hkv, dh)
+        return {"k": k.transpose(0, 2, 1, 3), "v": v.transpose(0, 2, 1, 3)}
+
+    return jax.lax.map(one, params["dec_periods"])
+
+
+def decode_step(params, tokens, caches, cfg: EncDecConfig, *, sharder=None,
+                backend: str = "ref"):
+    """tokens: (B, 1) -> (logits, new caches).  Self-attn KV appends at
+    ``pos``; cross K/V are static."""
+    from repro.parallel.partition import ParallelPlan, make_sharder
+    sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
+    pos = caches["pos"]
+    x = L.embed(params["embed"], tokens)
+    acfg = cfg.attn_cfg()
+
+    def body(x, inp):
+        lp, pc = inp
+        h = _norm(cfg, lp["ln1"], x)
+        cache = {"k": pc["kv"]["k"], "v": pc["kv"]["v"], "pos": pos}
+        h, new_kv = A.attention(lp["self_attn"], h, acfg, causal=True,
+                                cache=cache, sharder=sharder,
+                                backend=backend)
+        new_pc = {"kv": {"k": sharder.kv_cache(new_kv["k"]),
+                         "v": sharder.kv_cache(new_kv["v"])},
+                  "cross": pc["cross"]}
+        x = x + h
+        h = _norm(cfg, lp["ln_x"], x)
+        # cross attention against static caches (non-causal, full enc length)
+        b, s, _ = h.shape
+        q = L.linear(lp["cross_attn"]["wq"], h).reshape(
+            b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        o = A._ref_decode(q, pc["cross"]["k"], pc["cross"]["v"],
+                          cfg.attn_cfg(rope=False), pos, causal=False)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        x = x + L.linear(lp["cross_attn"]["wo"], o)
+        h = _norm(cfg, lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h, cfg.mlp_kind)
+        return x, new_pc
+
+    x, new_periods = jax.lax.scan(body, x, (params["dec_periods"],
+                                            caches["periods"]))
+    x = _norm(cfg, params["dec_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"])
+    return logits, {"pos": pos + 1, "periods": new_periods}
+
+
+def prefill(params, batch, cfg: EncDecConfig, *, sharder=None,
+            backend: str = "ref", remat: bool = True,
+            fused_switch: bool = True):
+    """Encode the audio features, run the decoder prompt, return
+    (last logits, caches ready for decode_step)."""
+    from repro.parallel.partition import ParallelPlan, make_sharder
+    sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
+    enc = encode(params, batch["feats"], cfg, sharder=sharder,
+                 backend=backend, remat=remat, fused_switch=fused_switch)
+    cross = build_cross_caches(params, enc, cfg)
+    tokens = batch["tokens"]
+    b, s_dec = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    x = sharder.act3(x)
+    acfg = cfg.attn_cfg()
+
+    def body(xc, lp):
+        h = _norm(cfg, lp["ln1"], xc)
+        h, (ck, cv) = A.attention_sp(lp["self_attn"], h, acfg,
+                                     sharder=sharder, backend=backend,
+                                     fused_switch=fused_switch, causal=True,
+                                     return_kv=True)
+        xc = xc + h
+        h = _norm(cfg, lp["ln_x"], xc)
+        h = A.attention_sp(lp["cross_attn"], h, cfg.attn_cfg(rope=False),
+                           sharder=sharder, backend=backend,
+                           fused_switch=fused_switch, causal=False, x_kv=enc)
+        xc = xc + h
+        h = _norm(cfg, lp["ln2"], xc)
+        xc = sharder.act3(xc + L.mlp(lp["mlp"], h, cfg.mlp_kind))
+        return xc, {"kv": {"k": sharder.kv_cache(ck),
+                           "v": sharder.kv_cache(cv)}}
+
+    b_fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    from repro.models.flags import scan_or_unroll
+    x, kv = scan_or_unroll(b_fn, x, params["dec_periods"])
+    x = _norm(cfg, params["dec_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], params["embed"]["table"])
+    caches = {"pos": jnp.asarray(s_dec, jnp.int32),
+              "periods": {"kv": kv["kv"], "cross": cross}}
+    return logits, caches

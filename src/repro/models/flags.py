@@ -1,0 +1,44 @@
+"""Global accounting flags.
+
+FLAT_COST_MODE: compile-time-only mode used by the dry-run's depth-1/depth-2
+cost variants.  XLA's cost_analysis counts a while (lax.scan) body ONCE, so
+inner scans (chunked attention, chunked cross-entropy, grad accumulation)
+would undercount FLOPs.  In flat mode those inner loops compute in straight
+line (huge intermediate SHAPES are fine — nothing is ever executed); the
+only remaining scan is the layer stack, which depth extrapolation corrects.
+"""
+import contextlib
+
+FLAT_COST_MODE = False
+
+
+@contextlib.contextmanager
+def flat_cost_mode():
+    global FLAT_COST_MODE
+    prev = FLAT_COST_MODE
+    FLAT_COST_MODE = True
+    try:
+        yield
+    finally:
+        FLAT_COST_MODE = prev
+
+
+def scan_or_unroll(body, carry, xs):
+    """lax.scan normally; a python-unrolled loop in FLAT_COST_MODE so
+    cost_analysis sees trip_count x body (depth-1 vs depth-2 compiles then
+    differ by exactly one period, which the extrapolation needs)."""
+    import jax
+    import jax.numpy as jnp
+    if not FLAT_COST_MODE:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked

@@ -1,0 +1,192 @@
+"""Common layers — pure-JAX functional style.
+
+Every layer is an (init, apply) pair: ``init_*`` returns a parameter pytree
+(nested dicts of jnp arrays), ``apply`` is a pure function.  Parameter dtype
+is configurable (bf16 for the production configs, f32 for unit tests); all
+norms/softmax accumulate in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initialisation helpers
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: Optional[float] = None):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_norm(d: int, *, bias: bool = False, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rms_norm(p, x, *, eps: float = 1e-6, upcast: bool = True,
+             scale_plus_one: bool = False):
+    dtype = x.dtype
+    if upcast:
+        x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(x.dtype)
+    if scale_plus_one:                      # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    y = x * scale
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y.astype(dtype)
+
+
+def layer_norm(p, x, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, *, kind: str = "silu_glu",
+             bias: bool = False, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("silu_glu", "gelu_glu"):
+        return {"wi": init_linear(k1, d_model, d_ff, bias=bias, dtype=dtype),
+                "wg": init_linear(k2, d_model, d_ff, bias=bias, dtype=dtype),
+                "wo": init_linear(k3, d_ff, d_model, bias=bias, dtype=dtype)}
+    if kind in ("relu", "gelu"):
+        return {"wi": init_linear(k1, d_model, d_ff, bias=bias, dtype=dtype),
+                "wo": init_linear(k2, d_ff, d_model, bias=bias, dtype=dtype)}
+    raise ValueError(kind)
+
+
+def mlp(p, x, kind: str = "silu_glu"):
+    if kind == "silu_glu":
+        h = jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x)
+    elif kind == "gelu_glu":
+        h = jax.nn.gelu(linear(p["wg"], x), approximate=True) * linear(p["wi"], x)
+    elif kind == "relu":
+        h = jax.nn.relu(linear(p["wi"], x))
+    elif kind == "gelu":
+        h = jax.nn.gelu(linear(p["wi"], x), approximate=True)
+    else:
+        raise ValueError(kind)
+    return linear(p["wo"], h)
+
+
+def mlp_param_count(d_model: int, d_ff: int, kind: str) -> int:
+    return d_model * d_ff * (3 if kind.endswith("_glu") else 2)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, *, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D) with positions (S,).  Rotates half-split pairs
+    (x[i], x[i + D/2]) — the 'non-interleaved' convention."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta=theta)                         # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (S, D/2)
+    cos = jnp.cos(ang)[..., :, None, :]                        # (S, 1, D/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, *, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(p, tokens: jax.Array, *, scale_by_sqrt_dim: bool = False):
+    y = jnp.take(p["table"], tokens, axis=0)
+    if scale_by_sqrt_dim:
+        y = y * math.sqrt(p["table"].shape[-1])
+    return y
+
+
+def unembed(p, x: jax.Array, *, softcap: Optional[float] = None):
+    logits = jnp.einsum("...d,vd->...v", x, p["table"])
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def softcap_logits(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---------------------------------------------------------------------------
+# Patch embedding (transformer2d / ViT-stub frontends)
+# ---------------------------------------------------------------------------
+
+def init_patch_embed(key, in_channels: int, d_model: int, *,
+                     dtype=jnp.float32):
+    """Projects precomputed per-patch/per-frame features to d_model.  The
+    modality frontend itself (VAE / audio encoder / pixel ViT) is a stub:
+    input_specs() supplies its output features directly."""
+    return {"proj": init_linear(key, in_channels, d_model, bias=True, dtype=dtype)}
+
+
+def patch_embed(p, x):
+    return linear(p["proj"], x)
+
+
+# ---------------------------------------------------------------------------
+# DiT timestep modulation (transformer2d)
+# ---------------------------------------------------------------------------
+
+def init_modulation(key, d_model: int, *, dtype=jnp.float32):
+    return {"proj": init_linear(key, d_model, 6 * d_model, bias=True,
+                                dtype=dtype, scale=0.0)}
+
+
+def modulation(p, t_emb):
+    """t_emb: (B, C) -> 6 x (B, 1, C) scale/shift/gate triples (attn, mlp)."""
+    m = linear(p["proj"], jax.nn.silu(t_emb))
+    return jnp.split(m[:, None, :], 6, axis=-1)
+
+
+def timestep_embedding(t: jax.Array, d_model: int, *,
+                       max_period: float = 10000.0) -> jax.Array:
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)

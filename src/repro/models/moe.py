@@ -1,0 +1,239 @@
+"""Mixture-of-Experts: top-k routing, shared experts, dense residual.
+
+Two dispatch implementations:
+
+* ``einsum`` — GShard/T5X-style grouped capacity dispatch.  Tokens are split
+  into groups (sharded over the data axis); each group one-hot-dispatches to
+  per-expert capacity slots.  Expert weights carry the expert dim, which the
+  launcher shards over the ``model`` axis (EP); XLA lowers the dispatch
+  einsums to all-to-alls.  Dispatch *is* a DSP dynamic switch — the sharded
+  dimension moves from the token dim to the expert dim and back (see
+  DESIGN.md §Arch-applicability).
+
+* ``gather`` — exact (dropless) sort-based dispatch for small token counts
+  (decode steps), avoiding the (G,T,E,C) tensor.
+
+Experts whose count doesn't divide the EP axis are padded with never-routed
+dummies (router logits forced to -inf), e.g. qwen2-moe's 60 -> 64.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEArgs:
+    """Static routing metadata (kept out of the param pytree so params stay
+    vmap/scan/shard-able)."""
+    n_experts: int
+    top_k: int
+    e_phys: int                 # physical experts incl. EP padding
+    kind: str = "silu_glu"
+    has_shared: bool = False
+    has_dense: bool = False
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, top_k: int, *,
+             n_shared: int = 0, shared_ff: Optional[int] = None,
+             dense_ff: Optional[int] = None, kind: str = "silu_glu",
+             pad_experts_to: Optional[int] = None, dtype=jnp.float32):
+    """``pad_experts_to``: physical expert count (>= n_experts) for EP
+    divisibility; extra experts are initialised but never routed to."""
+    e_phys = pad_experts_to or n_experts
+    assert e_phys >= n_experts
+    keys = jax.random.split(key, 6)
+    glu = kind.endswith("_glu")
+    scale = 1.0 / math.sqrt(d_model)
+
+    def stack(k, shape, sc):
+        return (jax.random.normal(k, shape) * sc).astype(dtype)
+
+    p = {
+        "router": L.init_linear(keys[0], d_model, e_phys, dtype=jnp.float32),
+        "wi": stack(keys[1], (e_phys, d_model, d_ff), scale),
+        "wo": stack(keys[2], (e_phys, d_ff, d_model), 1.0 / math.sqrt(d_ff)),
+    }
+    if glu:
+        p["wg"] = stack(keys[3], (e_phys, d_model, d_ff), scale)
+    if n_shared > 0:
+        sff = shared_ff if shared_ff is not None else n_shared * d_ff
+        p["shared"] = L.init_mlp(keys[4], d_model, sff, kind=kind, dtype=dtype)
+        p["shared_gate"] = L.init_linear(keys[5], d_model, 1, dtype=dtype)
+    if dense_ff is not None:
+        p["dense"] = L.init_mlp(jax.random.fold_in(key, 7), d_model, dense_ff,
+                                kind=kind, dtype=dtype)
+    return p
+
+
+def _expert_ffn(p, xe, kind: str):
+    """xe: (..., E, C, d) -> (..., E, C, d), batched over experts."""
+    hi = jnp.einsum("...ecd,edf->...ecf", xe, p["wi"])
+    if kind == "silu_glu":
+        hg = jnp.einsum("...ecd,edf->...ecf", xe, p["wg"])
+        h = jax.nn.silu(hg) * hi
+    elif kind == "gelu_glu":
+        hg = jnp.einsum("...ecd,edf->...ecf", xe, p["wg"])
+        h = jax.nn.gelu(hg, approximate=True) * hi
+    elif kind == "relu":
+        h = jax.nn.relu(hi)
+    else:
+        h = jax.nn.gelu(hi, approximate=True)
+    return jnp.einsum("...ecf,efd->...ecd", h, p["wo"])
+
+
+def _router_logits(p, x, meta: MoEArgs):
+    """x: (..., d) -> (..., E_phys) routing logits (f32), padded experts
+    masked to -inf."""
+    logits = L.linear(p["router"], x.astype(jnp.float32))
+    e, e_phys = meta.n_experts, meta.e_phys
+    if e_phys > e:   # mask padded experts
+        neg = jnp.full_like(logits[..., e:], -1e30)
+        logits = jnp.concatenate([logits[..., :e], neg], axis=-1)
+    return logits
+
+
+def moe_einsum(p, x, meta: MoEArgs, *, capacity_factor: float = 1.25,
+               norm_topk: bool = True, expert_hook=None):
+    """x: (B, S, d).  Grouped capacity dispatch; groups = batch dim (sharded
+    over data).  Returns (y, aux) with load-balancing stats.
+    ``expert_hook``: sharding hook applied to the (B, E, C, d) buffers."""
+    e_phys, k = meta.e_phys, meta.top_k
+    b, s, d = x.shape
+    logits = _router_logits(p, x, meta)                        # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (B, S, K)
+    if norm_topk:
+        gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    cap = max(1, int(math.ceil(s * k / e_phys * capacity_factor)))
+    # assignment mask (B, S, K, E)
+    assign = jax.nn.one_hot(gate_idx, e_phys, dtype=jnp.float32)
+    # position of each (token, k) within its expert, counted over (S, K)
+    flat = assign.reshape(b, s * k, e_phys)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # slots before me
+    pos = pos.reshape(b, s, k, e_phys)
+    keep = (pos < cap) * assign
+    slot = jax.nn.one_hot(jnp.sum(pos * assign, -1).astype(jnp.int32), cap,
+                          dtype=jnp.float32)                   # (B, S, K, C)
+    # dispatch: (B, S, E, C)
+    dispatch = jnp.einsum("bske,bskc->bsec", keep, slot)
+    combine = jnp.einsum("bske,bskc,bsk->bsec", keep, slot,
+                         gate_vals.astype(jnp.float32))
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)
+    if expert_hook is not None:
+        xe = expert_hook(xe)
+    ye = _expert_ffn(p, xe, meta.kind)
+    if expert_hook is not None:
+        ye = expert_hook(ye)
+    y = jnp.einsum("becd,bsec->bsd", ye, combine.astype(x.dtype))
+
+    y = y + _shared_and_dense(p, x, meta)
+    # aux: fraction routed per expert + router entropy (load balance loss)
+    frac = jnp.mean(assign.sum(2), axis=(0, 1))
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = {"load_balance": e_phys * jnp.sum(frac * pmean),
+           "dropped": jnp.mean(assign.sum((2, 3)) > keep.sum((2, 3)))}
+    return y.astype(x.dtype), aux
+
+
+def moe_gather(p, x, meta: MoEArgs, *, capacity_factor: float = 2.0,
+               norm_topk: bool = True, expert_hook=None):
+    """Sort-based dispatch, vmapped per batch row (group = row, matching the
+    einsum impl's grouping).  Avoids the (G,T,E,C) one-hot tensor entirely:
+    per row only (S*K,) index vectors and an (E, C, d) buffer exist, so this
+    is the production path for the big-MoE training cells (arctic: 128
+    experts at d=7168 would need a multi-TB dispatch tensor otherwise).
+    ``expert_hook`` shards the (B, E, C, d) buffers over the EP axis."""
+    e_phys, k = meta.e_phys, meta.top_k
+    b, s, d = x.shape
+    logits = _router_logits(p, x, meta)                        # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (B, S, K)
+    if norm_topk:
+        gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    cap = max(1, int(math.ceil(s * k / e_phys * capacity_factor)))
+
+    def dispatch_row(xr, idx_r, gate_r):
+        # xr: (S, d); idx_r/gate_r: (S, K)
+        flat_e = idx_r.reshape(-1)                             # (S*K,)
+        flat_tok = jnp.repeat(jnp.arange(s), k)
+        flat_gate = gate_r.reshape(-1)
+        order = jnp.argsort(flat_e)
+        e_sorted = flat_e[order]
+        tok_sorted = flat_tok[order]
+        gate_sorted = flat_gate[order]
+        # position within expert group via sorted-run arithmetic (O(S*K))
+        idxs = jnp.arange(e_sorted.shape[0])
+        is_start = jnp.concatenate([jnp.ones(1, bool),
+                                    e_sorted[1:] != e_sorted[:-1]])
+        start_idx = jnp.where(is_start, idxs, 0)
+        seg_start = jax.lax.associative_scan(jnp.maximum, start_idx)
+        pos_in_e = idxs - seg_start
+        valid = pos_in_e < cap
+        slot = e_sorted * cap + jnp.where(valid, pos_in_e, 0)
+        buf = jnp.zeros((e_phys * cap, d), x.dtype)
+        buf = buf.at[slot].add(jnp.where(valid[:, None], xr[tok_sorted], 0))
+        return buf, (slot, tok_sorted, gate_sorted, valid)
+
+    buf, (slot, tok_sorted, gate_sorted, valid) = jax.vmap(dispatch_row)(
+        x, gate_idx, gate_vals)
+    buf = buf.reshape(b, e_phys, cap, d)
+    if expert_hook is not None:
+        buf = expert_hook(buf)                                 # EP shard
+    ye = _expert_ffn(p, buf, meta.kind)
+    if expert_hook is not None:
+        ye = expert_hook(ye)
+    ye = ye.reshape(b, e_phys * cap, d)
+
+    def combine_row(ye_r, slot_r, tok_r, gate_r, valid_r):
+        contrib = ye_r[slot_r] * jnp.where(valid_r, gate_r,
+                                           0.0)[:, None].astype(x.dtype)
+        return jnp.zeros((s, d), x.dtype).at[tok_r].add(contrib)
+
+    y = jax.vmap(combine_row)(ye, slot, tok_sorted, gate_sorted, valid)
+    y = y + _shared_and_dense(p, x, meta)
+    frac = jnp.mean(jax.nn.one_hot(gate_idx, e_phys).sum(2), axis=(0, 1))
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = {"load_balance": e_phys * jnp.sum(frac * pmean),
+           "dropped": jnp.mean(~valid)}
+    return y.astype(x.dtype), aux
+
+
+def _shared_and_dense(p, x, meta: MoEArgs):
+    out = 0.0
+    if "shared" in p:
+        sh = L.mlp(p["shared"], x, meta.kind)
+        gate = jax.nn.sigmoid(L.linear(p["shared_gate"], x))
+        out = out + gate * sh
+    if "dense" in p:
+        out = out + L.mlp(p["dense"], x, meta.kind)
+    return out
+
+
+def moe(p, x, meta: MoEArgs, *, impl: str = "gather",
+        capacity_factor: float = 1.25, norm_topk: bool = True,
+        expert_hook=None):
+    if impl == "einsum":
+        return moe_einsum(p, x, meta, capacity_factor=capacity_factor,
+                          norm_topk=norm_topk, expert_hook=expert_hook)
+    return moe_gather(p, x, meta, capacity_factor=max(capacity_factor, 2.0),
+                      norm_topk=norm_topk, expert_hook=expert_hook)
+
+
+def moe_active_params(d_model: int, d_ff: int, top_k: int, kind: str,
+                      n_shared: int = 0, shared_ff: Optional[int] = None,
+                      dense_ff: Optional[int] = None) -> int:
+    per_expert = L.mlp_param_count(d_model, d_ff, kind)
+    total = top_k * per_expert
+    if n_shared:
+        total += L.mlp_param_count(d_model, shared_ff or n_shared * d_ff, kind)
+    if dense_ff:
+        total += L.mlp_param_count(d_model, dense_ff, kind)
+    return total

@@ -1,0 +1,190 @@
+"""Mamba-2 (SSD) block — Gu & Dao 2024, state-space duality formulation.
+
+Structure per block: in_proj -> (z | x | B | C | dt); short causal depthwise
+conv over (x|B|C); SSD scan (Pallas chunked kernel or jnp reference); gated
+RMSNorm; out_proj.  Decode carries (conv_state, ssm_state) — O(1) per token,
+which is what makes the ``long_500k`` cell tractable for SSM/hybrid archs.
+
+DSP applicability (DESIGN.md §Arch-applicability): the scan computes along
+the sequence and is independent across heads/channels, so under sequence
+parallelism the block is entered seq-sharded, *switched* to head-sharded for
+the scan, and switched back — the paper's primitives verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import ssd_scan
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int            # = expand * d_model
+    head_dim: int = 64      # P
+    d_state: int = 128      # S
+    n_groups: int = 1       # G
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+
+def init_ssm(key, cfg: SSMConfig, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    d, di, g, s, h = (cfg.d_model, cfg.d_inner, cfg.n_groups, cfg.d_state,
+                      cfg.n_heads)
+    d_xbc = di + 2 * g * s
+    p = {
+        # fused projection: z (di) | x (di) | B (g*s) | C (g*s) | dt (h)
+        "in_proj": L.init_linear(ks[0], d, 2 * di + 2 * g * s + h, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, d_xbc)) /
+                   math.sqrt(cfg.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_xbc,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": L.init_norm(di, dtype=dtype),
+        "out_proj": L.init_linear(ks[2], di, d, dtype=dtype),
+    }
+    return p
+
+
+def _split_proj(cfg: SSMConfig, zxbcdt):
+    di, g, s, h = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * g * s]
+    dt = zxbcdt[..., 2 * di + 2 * g * s:]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg: SSMConfig, p, xbc):
+    """Depthwise causal conv along L.  xbc: (B, L, D_xbc)."""
+    w = p["conv_w"].astype(xbc.dtype)                    # (K, D)
+    k = cfg.d_conv
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def ssm_block(p, x, cfg: SSMConfig, *, backend: str = "pallas",
+              sharder=None, return_cache: bool = False):
+    """x: (B, L, d_model) -> (B, L, d_model) [, cache].
+
+    DSP switching: the block is entered SEQUENCE-sharded; before the scan
+    (which computes along L, independent across channels) the shard moves to
+    the CHANNEL dim with one all-to-all — applied on the *flat* (B, L,
+    d_inner) tensor so the (H, P) reshape keeps a representable (H-major)
+    sharding; B/C group tensors stay replicated (G may be < the SP degree,
+    and they are ~d_state/d_inner of the activation).  After the scan the
+    shard switches back to the sequence.
+
+    ``return_cache`` (prefill) also returns {"conv", "state"} for decode —
+    the state comes from the reference scan (the Pallas kernel does not emit
+    it; prefill cells run backend="ref")."""
+    b, l, _ = x.shape
+    di, g, s, h, ph = (cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads,
+                       cfg.head_dim)
+
+    def c3(t, *spec):
+        if sharder is None or sharder.mesh is None or \
+                sharder.plan.mode != "dsp":
+            return t
+        import jax as _jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        dp = sharder.dp if len(sharder.dp) > 1 else sharder.dp[0]
+        table = {"dp": dp, "sp": "model", "none": None}
+        dims = [table[d] for d in spec]
+        return _jax.lax.with_sharding_constraint(
+            t, NamedSharding(sharder.mesh, P(*dims)))
+
+    zxbcdt = L.linear(p["in_proj"], x)
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(cfg, p, xbc_raw)
+    xs_flat = xbc[..., :di]
+    # DSP switch: seq-shard -> channel-shard (one all-to-all)
+    xs_flat = c3(xs_flat, "dp", "none", "sp")
+    xs = xs_flat.reshape(b, l, h, ph)
+    bmat = xbc[..., di:di + g * s].reshape(b, l, g, s)
+    cmat = xbc[..., di + g * s:].reshape(b, l, g, s)
+    bmat = c3(bmat, "dp", "none", "none", "none")     # replicated groups
+    cmat = c3(cmat, "dp", "none", "none", "none")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = c3(dt, "dp", "none", "sp")
+    a = -jnp.exp(p["a_log"])
+
+    cache = None
+    if return_cache:
+        from repro.kernels.ref import ssd_ref
+        y, state = ssd_ref(xs, dt.astype(xs.dtype), a, bmat, cmat,
+                           d_skip=p["d_skip"], return_state=True)
+        cache = {"conv": xbc_raw[:, -(cfg.d_conv - 1):, :], "state": state}
+    else:
+        y = ssd_scan(xs, dt.astype(xs.dtype), a, bmat, cmat, p["d_skip"],
+                     chunk=cfg.chunk, backend=backend)
+
+    y = y.reshape(b, l, di)
+    y = c3(y, "dp", "none", "sp")
+    # DSP switch back: channel-shard -> seq-shard
+    y = c3(y, "dp", "sp", "none")
+    y = y * jax.nn.silu(z)
+    y = L.rms_norm(p["norm"], y)
+    out = L.linear(p["out_proj"], y)
+    if return_cache:
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token) path: O(1) state update
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(batch: int, cfg: SSMConfig, *, dtype=jnp.float32):
+    d_xbc = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_xbc), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           jnp.float32),
+    }
+
+
+def ssm_decode_step(p, x, cfg: SSMConfig, cache):
+    """x: (B, 1, d_model) -> (y, new_cache)."""
+    b = x.shape[0]
+    di, g, s, h, ph = (cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads,
+                       cfg.head_dim)
+    zxbcdt = L.linear(p["in_proj"], x)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)                  # (B,1,*)
+    # conv: window = cached K-1 inputs + current
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)    # (B, K, D)
+    w = p["conv_w"].astype(xbc.dtype)
+    conv_out = jnp.einsum("bkd,kd->bd", win, w) + p["conv_b"].astype(xbc.dtype)
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = win[:, 1:, :]
+
+    xs = conv_out[..., :di].reshape(b, h, ph)
+    bmat = conv_out[..., di:di + g * s].reshape(b, g, s)
+    cmat = conv_out[..., di + g * s:].reshape(b, g, s)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtv * a[None, :])                      # (B, H)
+    rep = h // g
+    bfull = jnp.repeat(bmat, rep, axis=1).astype(jnp.float32)   # (B,H,S)
+    cfull = jnp.repeat(cmat, rep, axis=1).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bhs->bhps", dtv[..., None] * xs.astype(jnp.float32),
+                     bfull)
+    state = decay[..., None, None] * cache["state"] + upd
+    y = jnp.einsum("bhps,bhs->bhp", state, cfull)
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype).reshape(b, 1, di) * jax.nn.silu(z)
+    y = L.rms_norm(p["norm"], y)
+    return L.linear(p["out_proj"], y), {"conv": new_conv, "state": state}

@@ -1,0 +1,486 @@
+"""The paper's base model: OpenSora-like 2D (spatial-temporal) DiT.
+
+Input is a latent video tensor ``x: (B, T, S, C_in)`` (the VAE/patch frontend
+is a stub — input_specs() supplies patched latents) plus a diffusion timestep
+``t: (B,)`` for adaLN modulation.  Blocks alternate: a *spatial*
+block (attention over S, independent across B,T) then a *temporal* block
+(attention over T, independent across B,S) — Equation 4/5 of the paper with
+K=2.  ``n_layers`` counts blocks (the paper's "layer" = one spatial + one
+temporal block pair): 28 blocks at d=1152 gives the 720M model, 36 blocks at
+d=2048 the 3B model (Table 4; "2038" is a transcription artifact of 2048).
+
+Parallel modes (paper §4, Appendix A.2), all sharing one parameter pytree:
+
+  dsp        sequence sharded on T; ONE all-to-all switch (T<->S) at each
+             stage boundary => 2 switches, 2M/N volume per layer.
+  ulysses    sharded on T; temporal attention does 4 all-to-alls
+             (q,k,v seq->head + out head->seq) => 4M/N per layer.
+  megatron   sharded on T; every block all-gathers the full sequence in and
+             reduce-scatters out => 8 collectives, 8M per layer.
+  ring       sharded on T; temporal attention rotates K/V around the ring
+             (collective_permute) => 2M per layer.
+
+The explicit (shard_map) implementations live in ``make_spmd_forward``; the
+compiler path (``forward`` + Sharder constraints) expresses DSP as layout
+constraints and is what the production launcher lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import dsp as dsp_core
+from repro.core import ring as ring_core
+from repro.core import ulysses as ulysses_core
+from repro.core import megatron_sp as megatron_core
+from repro.kernels.ops import flash_attention
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class T2DConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    in_dim: int = 64                  # stub latent/patch feature size
+    head_dim: Optional[int] = None
+    mlp_kind: str = "gelu"            # paper's FFN is 2-layer w/ activation
+    modulate: bool = True             # DiT adaLN-zero timestep modulation
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: T2DConfig):
+    ks = jax.random.split(key, 6)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.dh
+    p = {
+        "ln1": L.init_norm(d, dtype=cfg.dtype),
+        "wq": L.init_linear(ks[0], d, h * dh, dtype=cfg.dtype),
+        "wk": L.init_linear(ks[1], d, h * dh, dtype=cfg.dtype),
+        "wv": L.init_linear(ks[2], d, h * dh, dtype=cfg.dtype),
+        "wo": L.init_linear(ks[3], h * dh, d, dtype=cfg.dtype),
+        "ln2": L.init_norm(d, dtype=cfg.dtype),
+        "mlp": L.init_mlp(ks[4], d, cfg.d_ff, kind=cfg.mlp_kind,
+                          dtype=cfg.dtype),
+    }
+    if cfg.modulate:
+        p["mod"] = L.init_modulation(ks[5], d, dtype=cfg.dtype)
+    return p
+
+
+def init_t2d(key, cfg: T2DConfig):
+    assert cfg.n_layers % 2 == 0, "blocks alternate spatial/temporal"
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def one_layer(k):
+        ka, kb = jax.random.split(k)
+        return {"spatial": _init_block(ka, cfg),
+                "temporal": _init_block(kb, cfg)}
+
+    layer_keys = jax.random.split(k1, cfg.n_layers // 2)
+    params = {
+        "layers": jax.vmap(one_layer)(layer_keys),
+        "embed": L.init_patch_embed(k2, cfg.in_dim, cfg.d_model,
+                                    dtype=cfg.dtype),
+        "final_norm": L.init_norm(cfg.d_model, dtype=cfg.dtype),
+        "head": L.init_linear(k3, cfg.d_model, cfg.in_dim, bias=True,
+                              dtype=cfg.dtype),
+        "t_proj": L.init_linear(k4, cfg.d_model, cfg.d_model, bias=True,
+                                dtype=cfg.dtype),
+    }
+    return params
+
+
+def t2d_param_count(cfg: T2DConfig) -> int:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.dh
+    per_block = d * h * dh * 4 + L.mlp_param_count(d, cfg.d_ff, cfg.mlp_kind)
+    if cfg.modulate:
+        per_block += d * 6 * d
+    return cfg.n_layers * per_block + 2 * cfg.in_dim * d + d * d
+
+
+# ---------------------------------------------------------------------------
+# Positional encoding (sinusoidal, offset-aware for sharded dims)
+# ---------------------------------------------------------------------------
+
+def _sincos(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) *
+                    jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def add_pos_embed(x, cfg: T2DConfig, t_offset=0, s_offset=0):
+    """x: (B, T, S, C) local view; offsets give global positions of the
+    local shard (explicit path passes axis_index * local_len)."""
+    _, t, s, c = x.shape
+    pe_t = _sincos(t_offset + jnp.arange(t), c)          # (T, C)
+    pe_s = _sincos(s_offset + jnp.arange(s), c)          # (S, C)
+    return x + pe_t[None, :, None, :].astype(x.dtype) \
+             + pe_s[None, None, :, :].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+AttnImpl = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+def _default_attn(backend: str) -> AttnImpl:
+    def impl(q, k, v):
+        # q,k,v: (B', L, H, D) -> (B', L, H, D); non-causal full attention
+        o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=False,
+                            backend=backend)
+        return o.transpose(0, 2, 1, 3)
+    return impl
+
+
+def _mod6(p, t_emb, cfg: T2DConfig):
+    if not cfg.modulate or t_emb is None:
+        return None
+    return L.modulation(p["mod"], t_emb)     # 6 x (B, 1, C)
+
+
+def _modulate(h, shift, scale):
+    return h * (1.0 + scale) + shift
+
+
+def t2d_block(p, x, cfg: T2DConfig, *, axis: int, t_emb=None,
+              attn_impl: Optional[AttnImpl] = None, backend: str = "pallas",
+              fold_hook=None, stage_hook=None):
+    """One transformer block computing attention along ``axis`` (1=T, 2=S)
+    of x: (B, T, S, C).  The other sequence dim folds into the batch as the
+    MINOR factor of (B*other) so batch stays the sharded MAJOR factor and
+    SPMD layouts survive the reshape; ``fold_hook`` (auto path) re-asserts
+    the composite sharding."""
+    attn_impl = attn_impl or _default_attn(backend)
+    b, t, s, c = x.shape
+    h_heads, dh = cfg.n_heads, cfg.dh
+    mod = _mod6(p, t_emb, cfg)
+
+    def fold(y):       # (B, T, S, C) -> (B*other, L, C)
+        if axis == 1:
+            y = y.transpose(0, 2, 1, 3).reshape(b * s, t, c)
+        else:
+            y = y.reshape(b * t, s, c)
+        return fold_hook(y) if fold_hook is not None else y
+
+    def unfold(y):
+        if axis == 1:
+            return y.reshape(b, s, t, c).transpose(0, 2, 1, 3)
+        return y.reshape(b, t, s, c)
+
+    def bmod(m):       # (B, 1, C) -> (B, 1, 1, C)
+        return m[:, :, None, :].astype(x.dtype)
+
+    def anchor(y):
+        # pin every intra-block 4D tensor to the stage layout: without these
+        # anchors XLA's backward sharding propagation flips layouts mid-block
+        # and re-shards the 4x-wide MLP hidden in f32 (found in the t2d HLO
+        # audit — hundreds of GB of spurious all-to-alls)
+        return stage_hook(y, axis) if stage_hook is not None else y
+
+    h = L.rms_norm(p["ln1"], x)
+    if mod is not None:
+        h = _modulate(h, bmod(mod[0]), bmod(mod[1]))
+    h = anchor(h)
+    hf = fold(h)
+    l = hf.shape[1]
+    q = L.linear(p["wq"], hf).reshape(-1, l, h_heads, dh)
+    k = L.linear(p["wk"], hf).reshape(-1, l, h_heads, dh)
+    v = L.linear(p["wv"], hf).reshape(-1, l, h_heads, dh)
+    o = attn_impl(q, k, v).reshape(-1, l, h_heads * dh)
+    o = anchor(unfold(L.linear(p["wo"], o)))
+    if mod is not None:
+        o = o * bmod(mod[2])
+    x = anchor(x + o)
+
+    h = L.rms_norm(p["ln2"], x)
+    if mod is not None:
+        h = _modulate(h, bmod(mod[3]), bmod(mod[4]))
+    h = anchor(h)
+    h = anchor(L.mlp(p["mlp"], h, cfg.mlp_kind))
+    if mod is not None:
+        h = h * bmod(mod[5])
+    return anchor(x + h)
+
+
+def _megatron_block(p, x, cfg: T2DConfig, *, axis: int, t_emb=None,
+                    axis_name: str = "model", backend: str = "pallas"):
+    """Megatron-SP layout: x arrives sharded along T (dim 1).  AllGather the
+    sequence, compute attention/MLP with locally-sliced heads / hidden
+    (tensor parallel), ReduceScatter partial outputs back.  4 collectives,
+    volume 4M per block (8M per 2-block layer)."""
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    b, t_loc, s, c = x.shape
+    h_heads, dh = cfg.n_heads, cfg.dh
+    assert h_heads % n == 0, "Megatron-SP requires heads % tp == 0"
+    h_loc = h_heads // n
+    mod = _mod6(p, t_emb, cfg)
+
+    def bmod(m):
+        return m[:, :, None, :].astype(x.dtype)
+
+    def slice_cols(w, parts):       # column-parallel slice of (d_in, d_out)
+        size = w.shape[1] // parts
+        return jax.lax.dynamic_slice_in_dim(w, idx * size, size, axis=1)
+
+    def slice_rows(w, parts):
+        size = w.shape[0] // parts
+        return jax.lax.dynamic_slice_in_dim(w, idx * size, size, axis=0)
+
+    # ---- attention: AG -> TP attention -> RS
+    h = L.rms_norm(p["ln1"], x)
+    if mod is not None:
+        h = _modulate(h, bmod(mod[0]), bmod(mod[1]))
+    hg = megatron_core.allgather_seq(h, seq_dim=1, axis_name=axis_name)
+    t = hg.shape[1]
+
+    def fold(y):
+        if axis == 1:
+            return y.transpose(0, 2, 1, 3).reshape(b * s, t, -1)
+        return y.reshape(b * t, s, -1)
+
+    def unfold(y, cdim):
+        if axis == 1:
+            return y.reshape(b, s, t, cdim).transpose(0, 2, 1, 3)
+        return y.reshape(b, t, s, cdim)
+
+    hf = fold(hg)
+    l = hf.shape[1]
+    q = (hf @ slice_cols(p["wq"]["w"], n)).reshape(-1, l, h_loc, dh)
+    k = (hf @ slice_cols(p["wk"]["w"], n)).reshape(-1, l, h_loc, dh)
+    v = (hf @ slice_cols(p["wv"]["w"], n)).reshape(-1, l, h_loc, dh)
+    o = _default_attn(backend)(q, k, v).reshape(-1, l, h_loc * dh)
+    o_part = o @ slice_rows(p["wo"]["w"], n)            # partial sum
+    o_part = unfold(o_part, c)
+    o = megatron_core.reduce_scatter_seq(o_part, seq_dim=1,
+                                         axis_name=axis_name)
+    if mod is not None:
+        o = o * bmod(mod[2])
+    x = x + o
+
+    # ---- MLP: AG -> TP mlp -> RS
+    h = L.rms_norm(p["ln2"], x)
+    if mod is not None:
+        h = _modulate(h, bmod(mod[3]), bmod(mod[4]))
+    hg = megatron_core.allgather_seq(h, seq_dim=1, axis_name=axis_name)
+    wi = slice_cols(p["mlp"]["wi"]["w"], n)
+    wo = slice_rows(p["mlp"]["wo"]["w"], n)
+    act = jax.nn.gelu if cfg.mlp_kind == "gelu" else jax.nn.relu
+    hh = act(hg @ wi) @ wo
+    hh = megatron_core.reduce_scatter_seq(hh, seq_dim=1, axis_name=axis_name)
+    if mod is not None:
+        hh = hh * bmod(mod[5])
+    return x + hh
+
+
+# ---------------------------------------------------------------------------
+# Full forward — local/auto path
+# ---------------------------------------------------------------------------
+
+def forward(params, x, t, cfg: T2DConfig, *, mesh: Optional[Mesh] = None,
+            mode: str = "dsp", backend: str = "pallas", remat: bool = True,
+            remat_group: int = 2, t_offset=0, s_offset=0):
+    """Compiler-path forward.  x: (B, T, S, C_in) global; with a mesh given,
+    DSP layout constraints shard T/S over the ``model`` axis and batch over
+    the data axes; XLA lowers each stage-boundary constraint change to one
+    all-to-all (the dynamic switch)."""
+    dp: Any = None
+    if mesh is not None:
+        dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+        dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def c(y, spec_t, spec_s):
+        if mesh is None or mode != "dsp":
+            return y
+        return jax.lax.with_sharding_constraint(
+            y, NamedSharding(mesh, P(dp, spec_t, spec_s, None)))
+
+    fold_hook = None
+    stage_hook = None
+    attn_impl = None
+    if mesh is not None and mode == "dsp":
+        dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+        comp = P((*dp_axes, "model"), None, None)
+
+        def fold_hook(y):
+            # folded (B*other, L, C): batch major over dp, sharded seq dim
+            # minor over model — composite sharding preserved
+            return jax.lax.with_sharding_constraint(
+                y, NamedSharding(mesh, comp))
+
+        def stage_hook(y, axis):
+            # spatial stage (axis=2): T sharded; temporal (axis=1): S sharded
+            spec = (P(dp, "model", None, None) if axis == 2
+                    else P(dp, None, "model", None))
+            return jax.lax.with_sharding_constraint(
+                y, NamedSharding(mesh, spec))
+
+        from repro.models.attention import chunked_attention, AttnConfig
+        acfg = AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                          n_kv_heads=cfg.n_heads, head_dim=cfg.dh, rope=False)
+
+        def attn_impl(q, k, v):
+            return chunked_attention(q, k, v, acfg, mesh=mesh,
+                                     layout="batch", causal=False,
+                                     backend=backend)
+
+    x = L.patch_embed(params["embed"], x)
+    x = add_pos_embed(x, cfg, t_offset, s_offset)
+    x = c(x, "model", None)                       # enter sharded on T
+    t_emb = None
+    if cfg.modulate and t is not None:
+        t_emb = L.linear(params["t_proj"],
+                         L.timestep_embedding(t, cfg.d_model).astype(x.dtype))
+
+    def layer_body(xc, lp):
+        # spatial stage: computes over S — keep T sharded
+        xc = t2d_block(lp["spatial"], xc, cfg, axis=2, t_emb=t_emb,
+                       backend=backend, attn_impl=attn_impl,
+                       fold_hook=fold_hook, stage_hook=stage_hook)
+        # dynamic switch T -> S (one all-to-all under SPMD)
+        xc = c(xc, None, "model")
+        xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
+                       backend=backend, attn_impl=attn_impl,
+                       fold_hook=fold_hook, stage_hook=stage_hook)
+        # dynamic switch S -> T
+        xc = c(xc, "model", None)
+        return xc, None
+
+    # hierarchical remat: scan over GROUPS of layer pairs so only one
+    # residual carry per group is stored (halves activation-carry memory for
+    # the long-temporal cells at the cost of one extra in-group recompute)
+    layers = params["layers"]
+    n = jax.tree_util.tree_leaves(layers)[0].shape[0]
+    g = remat_group if (remat and n % remat_group == 0) else 1
+
+    def group_body(xc, gp):
+        for i in range(g):
+            xi = jax.tree_util.tree_map(lambda a: a[i], gp)
+            xc, _ = layer_body(xc, xi)
+        return xc, None
+
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((n // g, g) + a.shape[1:]), layers)
+    body = jax.checkpoint(group_body, prevent_cse=False) if remat else group_body
+    from repro.models.flags import scan_or_unroll
+    x, _ = scan_or_unroll(body, x, grouped)
+    x = L.rms_norm(params["final_norm"], x)
+    return L.linear(params["head"], x)
+
+
+def t2d_loss(params, batch, cfg: T2DConfig, **kw):
+    """Diffusion-style MSE against target latents."""
+    pred = forward(params, batch["x"], batch.get("t"), cfg, **kw)
+    err = (pred.astype(jnp.float32) -
+           batch["target"].astype(jnp.float32)) ** 2
+    return jnp.mean(err), {}
+
+
+# ---------------------------------------------------------------------------
+# Explicit shard_map path (paper-faithful DSP + embedded-SP baselines)
+# ---------------------------------------------------------------------------
+
+def make_spmd_forward(cfg: T2DConfig, mesh: Mesh, *, mode: str = "dsp",
+                      axis_name: str = "model", backend: str = "ref",
+                      remat: bool = False):
+    """Build jit-able forward(params, x, t) where x: (B, T, S, C_in) global.
+
+    mode in {"dsp", "ulysses", "ulysses_fused", "ring", "megatron"}.
+    Sequence parallel over ``axis_name`` (T enters sharded); batch over the
+    remaining axes.  Collective counts/volumes match paper Table 3.
+    """
+    dp_axes = tuple(a for a in mesh.axis_names if a != axis_name)
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    n = mesh.shape[axis_name]
+
+    def local_fwd(params, x, t):
+        idx = jax.lax.axis_index(axis_name)
+        t_loc = x.shape[1]
+        x = L.patch_embed(params["embed"], x)
+        x = add_pos_embed(x, cfg, t_offset=idx * t_loc, s_offset=0)
+        t_emb = None
+        if cfg.modulate and t is not None:
+            t_emb = L.linear(params["t_proj"],
+                             L.timestep_embedding(t, cfg.d_model).astype(x.dtype))
+
+        if mode == "dsp":
+            def body(xc, lp):
+                xc = t2d_block(lp["spatial"], xc, cfg, axis=2, t_emb=t_emb,
+                               backend=backend)
+                xc = dsp_core.dynamic_switch(xc, 1, 2, axis_name)   # T -> S
+                xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
+                               backend=backend)
+                xc = dsp_core.dynamic_switch(xc, 2, 1, axis_name)   # S -> T
+                return xc, None
+        elif mode in ("ulysses", "ulysses_fused"):
+            ua = (ulysses_core.ulysses_attention if mode == "ulysses"
+                  else ulysses_core.ulysses_attention_fused)
+
+            def temporal_attn(q, k, v):
+                def inner(qq, kk, vv):
+                    return _default_attn(backend)(qq, kk, vv)
+                return ua(q, k, v, inner, axis_name=axis_name)
+
+            def body(xc, lp):
+                xc = t2d_block(lp["spatial"], xc, cfg, axis=2, t_emb=t_emb,
+                               backend=backend)
+                xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
+                               attn_impl=temporal_attn, backend=backend)
+                return xc, None
+        elif mode == "ring":
+            def temporal_attn(q, k, v):
+                return ring_core.ring_attention(q, k, v, axis_name=axis_name,
+                                                causal=False)
+
+            def body(xc, lp):
+                xc = t2d_block(lp["spatial"], xc, cfg, axis=2, t_emb=t_emb,
+                               backend=backend)
+                xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
+                               attn_impl=temporal_attn, backend=backend)
+                return xc, None
+        elif mode == "megatron":
+            def body(xc, lp):
+                xc = _megatron_block(lp["spatial"], xc, cfg, axis=2,
+                                     t_emb=t_emb, axis_name=axis_name,
+                                     backend=backend)
+                xc = _megatron_block(lp["temporal"], xc, cfg, axis=1,
+                                     t_emb=t_emb, axis_name=axis_name,
+                                     backend=backend)
+                return xc, None
+        else:
+            raise ValueError(mode)
+
+        b = jax.checkpoint(body, prevent_cse=False) if remat else body
+        x, _ = jax.lax.scan(b, x, params["layers"])
+        x = L.rms_norm(params["final_norm"], x)
+        return L.linear(params["head"], x)
+
+    batch_spec = P(dp, axis_name, None, None)    # sharded on T (dim 1)
+    t_spec = P(dp) if dp is not None else P()
+    fwd = jax.shard_map(
+        local_fwd, mesh=mesh,
+        in_specs=(P(), batch_spec, t_spec),
+        out_specs=batch_spec,
+        check_vma=False)
+    return fwd

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (OptConfig, init_opt_state, apply_adamw,
+                               schedule, global_norm, clip_by_global_norm)
+from repro.optim.compress import (compress_with_feedback, init_residuals,
+                                  quantize_int8, dequantize_int8)
+
+__all__ = ["OptConfig", "init_opt_state", "apply_adamw", "schedule",
+           "global_norm", "clip_by_global_norm", "compress_with_feedback",
+           "init_residuals", "quantize_int8", "dequantize_int8"]

@@ -1,0 +1,61 @@
+"""Error-feedback int8 gradient compression (cross-pod all-reduce trick).
+
+Per-leaf symmetric int8 quantisation with an error-feedback residual: the
+quantisation error of step t is added back to the gradient at step t+1, so
+the scheme is unbiased in the long run (1-bit-Adam / EF-SGD family).  The
+trainer applies it to the gradients that cross the ``pod`` axis, cutting
+inter-pod all-reduce bytes 2x (bf16) or 4x (f32).
+
+On the simulated CPU mesh the compression is applied for-real (quantise ->
+dequantise with residual); on hardware the dequantise would sit after the
+inter-pod collective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8.  Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_residuals(grads):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_with_feedback(grads, residuals):
+    """Returns (dequantised grads as would arrive post-allreduce,
+    new residuals).  Leaves smaller than 4096 elements pass through
+    uncompressed (headers would dominate)."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32)
+        if g.size < 4096:
+            return g32, jnp.zeros_like(g32)
+        target = g32 + r
+        q, scale = quantize_int8(target)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), target - deq
+
+    flat_g, td = jax.tree_util.tree_flatten(grads)
+    flat_r = td.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (td.unflatten([o[0] for o in outs]),
+            td.unflatten([o[1] for o in outs]))
+
+
+def compressed_bytes(grads) -> int:
+    """Wire bytes if every eligible leaf ships int8 (vs dtype bytes)."""
+    total = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        total += g.size * (1 if g.size >= 4096 else g.dtype.itemsize)
+    return total

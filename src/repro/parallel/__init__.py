@@ -1,0 +1,4 @@
+from repro.parallel.partition import (ParallelPlan, param_pspecs, Sharder,
+                                      make_sharder)
+
+__all__ = ["ParallelPlan", "param_pspecs", "Sharder", "make_sharder"]

@@ -1,0 +1,291 @@
+"""Partitioning: parameter PartitionSpecs + activation layout ("Sharder").
+
+The production mesh names axes (``pod``, ``data``, ``model``):
+
+* ``pod``   — pure data parallel (inter-pod gradient all-reduce only).
+* ``data``  — data parallel + ZeRO-3/FSDP parameter sharding.
+* ``model`` — per-arch role: DSP sequence parallelism (the paper's
+  technique), Megatron tensor parallelism, and/or expert parallelism.
+
+Parameter specs are derived rule-based from the parameter tree paths (the
+model code owns the naming convention; tests pin it down).  Activation
+layouts are applied through a ``Sharder`` — the model code calls semantic
+hooks (``act3``, ``heads``, ``kv_cache``, ...) and stays mesh-agnostic;
+in DSP mode consecutive hooks whose layouts differ *are* the paper's dynamic
+switch and lower to a single all-to-all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_map_with_path, DictKey, SequenceKey
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """How the ``model`` axis is used for one architecture."""
+
+    mode: str = "dsp"            # "dsp" | "tp" | "none"
+    ep: bool = False             # expert-parallel MoE over the model axis
+    zero: bool = True            # FSDP params over the data axis
+    shard_vocab: bool = True     # embedding table vocab dim over model axis
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _axes_size(entry, axis_sizes: dict) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= axis_sizes.get(a, 1)
+        return n
+    return axis_sizes.get(entry, 1)
+
+
+def _guard(spec, shape, axis_sizes: dict):
+    """jit in_shardings require divisibility; drop (not pad) any axis whose
+    dim doesn't divide — real frameworks pad, but replicating the odd leaf
+    (mamba2's 50280-row embedding, 4-tap conv kernels) is cheaper than
+    threading pad logic through every consumer."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is not None and dim % _axes_size(entry, axis_sizes):
+            entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def _leaf_spec(path: str, leaf, plan: ParallelPlan, fsdp, axis_sizes: dict):
+    """Base spec for an *unstacked* leaf; scan-stacking prepends None.
+    ``fsdp`` is the ZeRO axis spec: "data" in TP mode (the model axis
+    already holds the TP shard) or ("data", "model") in DSP mode (weights
+    are not model-sharded, so ZeRO flattens both axes — full-pod ZeRO-3)."""
+    nd = leaf.ndim
+    tp = plan.mode == "tp"
+    flat_tp = plan.mode == "tp_flat"      # inference: 1-D TP over the
+    both = ("data", "model")              # flattened 256-way pod
+    shape = leaf.shape
+
+    def g(*entries):
+        return _guard(P(*entries), shape, axis_sizes)
+
+    if path.endswith("meta") or not hasattr(leaf, "ndim"):
+        return P()
+
+    # ---- embeddings: vocab over model ONLY.  Sharding d over data would
+    # make every xent chunk re-gather the table (catastrophic collective
+    # volume — found in the gemma2 dry-run audit); V/16 rows per device is
+    # already small ------------------------------------------------------------
+    if "table" in path:
+        if plan.shard_vocab:
+            return g("model", None)
+        return g(fsdp, None)
+
+    # ---- MoE stacked experts (E, d, f) / (E, f, d) ------------------------
+    if nd == 3 and any(path.endswith(s) for s in ("wi", "wg", "wo")):
+        if plan.ep and tp and not plan.zero:
+            # inference layout: experts over model AND per-expert TP over
+            # data => 400B MoEs store sharded with ZERO per-step gathering
+            return (g("model", None, "data") if not path.endswith("wo")
+                    else g("model", "data", None))
+        if plan.ep:
+            return g("model", "data" if plan.zero else None, None)
+        if tp:
+            return (g(None, "data" if plan.zero else None, "model")
+                    if not path.endswith("wo")
+                    else g(None, "model", "data" if plan.zero else None))
+        return g(None, fsdp, None)
+
+    # ---- SSM params: in training never model-sharded (the scan is
+    # seq-wise; DSP switches activations instead) -> ZeRO on whichever dim
+    # divides.  In TP (inference) mode the projections channel-shard so no
+    # per-step weight gathering happens. ---------------------------------------
+    if "/ssm/" in path or path.startswith("ssm/"):
+        if flat_tp and path.endswith("in_proj/w"):
+            return g(None, both)
+        if flat_tp and path.endswith("out_proj/w"):
+            return g(both, None)
+        if tp and path.endswith("in_proj/w"):
+            return g(fsdp, "model")
+        if tp and path.endswith("out_proj/w"):
+            return g("model", fsdp)
+        if nd >= 2:
+            first = g(fsdp, *([None] * (nd - 1)))
+            if tuple(first)[:1] != (None,):
+                return first
+            return g(None, fsdp, *([None] * (nd - 2)))
+        return P(None)
+
+    # ---- dense projections ---------------------------------------------------
+    col = any(f"{n}/w" in path for n in ("wq", "wk", "wv", "wi", "wg"))
+    row = "wo/w" in path or path.endswith("out_proj/w")
+    if nd == 2 and (col or row) and flat_tp:
+        return g(both, None) if row else g(None, both)
+    if nd == 1 and col and flat_tp and path.endswith("/b"):
+        return g(both)
+    if nd == 2 and (col or row) and tp:
+        return (g("model", "data" if plan.zero else None) if row
+                else g("data" if plan.zero else None, "model"))
+    if nd == 2:
+        first = g(fsdp, None)
+        if tuple(first)[:1] != (None,):
+            return first
+        return g(None, fsdp)
+    if nd == 1:
+        if tp and col and path.endswith("/b"):
+            return g("model")
+        return P(None)
+    return P(*([None] * nd))
+
+
+def param_pspecs(params, plan: ParallelPlan, *,
+                 axis_sizes: Optional[dict] = None,
+                 stacked_prefixes: Tuple[str, ...] = ("layers",
+                                                      "periods")):
+    """PartitionSpec tree matching ``params``.
+
+    Leaves under a ``stacked_prefixes`` subtree carry a leading scan
+    (period) dimension; their base rule gets a prepended ``None``.
+    ``axis_sizes`` ({"data": 16, "model": 16}) enables divisibility guards;
+    defaults to the production pod sizes.
+    """
+    axis_sizes = axis_sizes or {"data": 16, "model": 16}
+    if not plan.zero:
+        fsdp = None
+    elif plan.mode == "tp":
+        fsdp = "data"
+    else:
+        fsdp = ("data", "model")     # ZeRO over the full pod in DSP mode
+
+    def rule(path, leaf):
+        s = _path_str(path)
+        stacked = any(s.startswith(p + "/") or f"/{p}/" in s
+                      for p in stacked_prefixes)
+        if stacked:
+            inner = jax.eval_shape(lambda x: x[0], leaf)
+            base = _leaf_spec(s, inner, plan, fsdp, axis_sizes)
+            return P(*((None,) + tuple(base)))
+        return _leaf_spec(s, leaf, plan, fsdp, axis_sizes)
+
+    return tree_map_with_path(rule, params)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Sharder:
+    """Semantic activation-layout hooks.  ``mesh=None`` (unit tests, single
+    device) makes every hook the identity."""
+
+    mesh: Optional[Mesh]
+    plan: ParallelPlan
+    dp: Tuple[str, ...] = ("data",)
+    sp: str = "model"
+
+    def _c(self, x, *spec):
+        if self.mesh is None:
+            return x
+        dims = [d if d != "__dp__" else
+                (self.dp if len(self.dp) > 1 else self.dp[0]) for d in spec]
+        dims = [d if d != "__sp__" else self.sp for d in dims]
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*dims)))
+
+    # -- (B, S, C) residual stream: sequence-sharded in BOTH dsp and tp
+    # (Megatron-SP keeps inter-block activations seq-sharded too; this is
+    # what bounds the 88-layer scan carry) -------------------------------------
+    def act3(self, x):
+        if self.plan.mode in ("dsp", "tp"):
+            return self._c(x, "__dp__", "__sp__", None)     # sequence-sharded
+        return self._c(x, "__dp__", None, None)
+
+    # -- (B, H, S, D) attention heads (post-switch layout) --------------------
+    def heads(self, x):
+        if self.plan.mode in ("dsp", "tp"):
+            return self._c(x, "__dp__", "__sp__", None, None)
+        return self._c(x, "__dp__", None, None, None)
+
+    # -- (3|2, B, H, S, D) stacked q/k/v: ONE constraint -> ONE all-to-all
+    # (the fused DSP switch; beyond-paper optimisation for 1-D archs) ----------
+    def heads_stacked(self, x):
+        if self.plan.mode in ("dsp", "tp"):
+            return self._c(x, None, "__dp__", "__sp__", None, None)
+        return self._c(x, None, "__dp__", None, None, None)
+
+    # -- (B, H, S, D) q/out kept sequence-sharded (kv-gather attention path:
+    # heads don't divide the SP axis; the paper's *gather* primitive applies
+    # to K/V only — see attention_sp) --------------------------------------------
+    def q_seq(self, x):
+        if self.plan.mode == "dsp":
+            return self._c(x, "__dp__", None, "__sp__", None)
+        return self._c(x, "__dp__", None, None, None)
+
+    # -- (2, B, Hkv, S, D) stacked K/V gathered to full sequence ---------------
+    def kv_gathered(self, x):
+        return self._c(x, None, "__dp__", None, None, None)
+
+    # -- (B, S, F) MLP hidden -------------------------------------------------
+    def ffn_hidden(self, x):
+        if self.plan.mode == "dsp":
+            return self._c(x, "__dp__", "__sp__", None)
+        if self.plan.mode == "tp":
+            return self._c(x, "__dp__", None, "__sp__")
+        return self._c(x, "__dp__", None, None)
+
+    # -- (B, L, H, P) ssm scan inputs: switch seq-shard -> head-shard ---------
+    def ssm_heads(self, x):
+        if self.plan.mode == "dsp":
+            return self._c(x, "__dp__", None, "__sp__", None)
+        return self._c(x, "__dp__", None, None, None)
+
+    # -- (B, H, 1, D) decode q/k/v: replicated over model (tiny) so the
+    # attention computes against the LOCAL cache-sequence shard and merges
+    # with small psums — never gathers the cache ------------------------------
+    def decode_heads(self, x):
+        return self._c(x, "__dp__", None, None, None)
+
+    # -- (B, Hkv, S, D) kv cache: decode keeps the *sequence* sharded (DSP);
+    # softmax/psum merge across shards is emitted by SPMD ----------------------
+    def kv_cache(self, x):
+        if self.plan.mode in ("dsp", "tp"):
+            return self._c(x, "__dp__", None, "__sp__", None)
+        return self._c(x, "__dp__", None, None, None)
+
+    # -- (B, E, C, d) MoE dispatch buffer (EP) ---------------------------------
+    def moe_experts(self, x):
+        if self.plan.ep:
+            return self._c(x, "__dp__", "__sp__", None, None)
+        return self._c(x, "__dp__", None, None, None)
+
+    # -- (B, S, V) logits -------------------------------------------------------
+    def logits(self, x):
+        if self.plan.shard_vocab:
+            return self._c(x, "__dp__", None, "__sp__")
+        if self.plan.mode == "dsp":
+            return self._c(x, "__dp__", "__sp__", None)
+        return self._c(x, "__dp__", None, None)
+
+
+def make_sharder(mesh: Optional[Mesh], plan: ParallelPlan) -> Sharder:
+    if mesh is None:
+        return Sharder(mesh=None, plan=plan)
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    return Sharder(mesh=mesh, plan=plan, dp=dp, sp="model")

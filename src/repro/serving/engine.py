@@ -1,0 +1,97 @@
+"""Serving engine: batched prefill + decode with sharded KV/state caches.
+
+The decode caches stay *sequence-sharded* over the model axis in DSP mode
+(Sharder.kv_cache): each device holds a slice of every request's KV history,
+the per-step softmax merge across shards lowers to small all-reduces — the
+DSP answer to decode, where Ulysses-style head sharding would hit the
+kv-head divisibility wall (kv=8 heads on a 16-wide axis).
+
+``ServingEngine`` is the host-side loop used by the serving example:
+accepts requests, runs one shared prefill per request batch, then steps all
+live sequences together (static-batch continuous decoding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as LM
+from repro.parallel.partition import ParallelPlan, Sharder, make_sharder
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: jax.Array            # (S,) int32
+    max_new_tokens: int = 16
+    generated: Optional[list] = None
+
+
+def cache_pspecs(caches, plan: ParallelPlan):
+    """PartitionSpec tree for a cache pytree: KV sharded along the sequence
+    dim (DSP decode); SSM state sharded along heads; conv/pos replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    def rule(path, leaf):
+        keys = [str(getattr(k, "key", "")) for k in path]
+        if "k" in keys or "v" in keys:          # (periods, B, Hkv, S, D)
+            if plan.mode in ("dsp", "tp"):       # seq-sharded KV either way
+                return P(None, "data", None, "model", None)
+            return P(None, "data", None, None, None)
+        if "state" in keys:                      # (periods, B, H, P, S)
+            if plan.mode in ("dsp", "tp"):
+                return P(None, "data", "model", None, None)
+            return P(None, "data", None, None, None)
+        if "conv" in keys:                       # (periods, B, K-1, D)
+            return P(None, "data", None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, caches)
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: LM.LMConfig, *, max_len: int = 512,
+                 sharder: Optional[Sharder] = None, backend: str = "ref"):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
+        self.backend = backend
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl)
+
+    def _prefill_impl(self, tokens):
+        sh = self.sharder
+        logits, caches = LM.forward_prefill(
+            self.params, tokens, self.cfg, sharder=sh, backend=self.backend,
+            remat=False)
+        # widen caches to max_len for subsequent decode appends
+        def widen(path, a):
+            keys = [str(getattr(k, "key", "")) for k in path]
+            if ("k" in keys or "v" in keys) and a.ndim == 5:
+                pad = self.max_len - a.shape[3]
+                if pad > 0:
+                    a = jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+            return a
+        caches = {"pos": caches["pos"],
+                  "periods": jax.tree_util.tree_map_with_path(
+                      widen, caches["periods"])}
+        return logits, caches
+
+    def _decode_impl(self, token, caches):
+        return LM.forward_decode(self.params, token, caches, self.cfg,
+                                 sharder=self.sharder, backend=self.backend)
+
+    def generate(self, prompts: jax.Array, max_new_tokens: int = 16,
+                 greedy: bool = True):
+        """prompts: (B, S) -> (B, max_new_tokens) generated ids."""
+        logits, caches = self._prefill(prompts)
+        out: List[jax.Array] = []
+        token = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        for _ in range(max_new_tokens):
+            out.append(token[:, 0])
+            logits, caches = self._decode(token, caches)
+            token = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return jnp.stack(out, axis=1)

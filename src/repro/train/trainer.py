@@ -1,0 +1,168 @@
+"""Training loop: grad-accumulation, checkpoint/restart, straggler watchdog.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) -> ...
+update (optionally scanning microbatches for gradient accumulation and
+applying error-feedback int8 compression to the gradients that would cross
+the pod axis).  ``Trainer`` owns the host-side loop: periodic async
+checkpoints, resume-from-latest, deterministic data (stateless pipeline), a
+step-time EMA watchdog that flags stragglers, and retry-on-transient-failure
+around the device step (node-failure handling at the single-controller
+level; on a real fleet the same hook triggers the coordinator's
+shrink/regrow path and `restore()` onto the surviving mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import OptConfig, apply_adamw, init_opt_state
+from repro.optim.compress import compress_with_feedback, init_residuals
+from repro.train.checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    total_steps: int = 100
+    grad_accum: int = 1
+    log_every: int = 10
+    ckpt_every: int = 50
+    straggler_factor: float = 3.0      # step slower than 3x EMA => flagged
+    max_retries: int = 2               # transient-failure retries per step
+    grad_compress: bool = False        # int8 EF compression (cross-pod)
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptConfig, *,
+                    grad_accum: int = 1, grad_compress: bool = False):
+    """loss_fn(params, batch) -> (scalar, metrics dict).
+
+    With grad_accum > 1, ``batch`` leaves must carry a leading
+    (grad_accum, micro...) dim; gradients average over microbatches via
+    lax.scan (sequential, constant memory).
+    """
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch, residuals=None):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                loss, _, g = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros(())), batch)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, gsum)
+            loss = loss_sum / grad_accum
+            metrics: Dict[str, Any] = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if grad_compress:
+            assert residuals is not None
+            grads, residuals = compress_with_feedback(grads, residuals)
+
+        params, opt_state, om = apply_adamw(params, grads, opt_state, opt_cfg)
+        out_metrics = {"loss": loss, **metrics, **om}
+        if grad_compress:
+            return params, opt_state, residuals, out_metrics
+        return params, opt_state, out_metrics
+
+    return step
+
+
+class Trainer:
+    def __init__(self, *, loss_fn, params, opt_cfg: OptConfig,
+                 cfg: TrainerConfig, data_fn: Callable[[int], Any],
+                 ckpt_dir: Optional[str] = None,
+                 jit_kwargs: Optional[dict] = None):
+        self.cfg = cfg
+        self.data_fn = data_fn
+        self.params = params
+        self.opt_state = init_opt_state(params, opt_cfg)
+        self.residuals = (init_residuals(params) if cfg.grad_compress
+                          else None)
+        self.ckpt = (CheckpointManager(ckpt_dir) if ckpt_dir else None)
+        self.step_fn = jax.jit(
+            make_train_step(loss_fn, opt_cfg, grad_accum=cfg.grad_accum,
+                            grad_compress=cfg.grad_compress),
+            **(jit_kwargs or {}))
+        self.start_step = 0
+        self.straggler_events = []
+        self.metrics_history = []
+
+    # -- fault tolerance -------------------------------------------------------
+    def try_resume(self):
+        if self.ckpt is None:
+            return
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return
+        template = {"params": self.params, "opt": self.opt_state}
+        _, tree = self.ckpt.restore(template, latest)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.start_step = latest
+        log.info("resumed from step %d", latest)
+
+    def _checkpoint(self, step: int, blocking: bool = False):
+        if self.ckpt is None:
+            return
+        self.ckpt.save(step, {"params": self.params, "opt": self.opt_state},
+                       blocking=blocking)
+
+    # -- loop -------------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        ema = None
+        step = self.start_step
+        while step < self.cfg.total_steps:
+            batch = self.data_fn(step)
+            t0 = time.monotonic()
+            for attempt in range(self.cfg.max_retries + 1):
+                try:
+                    if self.cfg.grad_compress:
+                        (self.params, self.opt_state, self.residuals,
+                         metrics) = self.step_fn(self.params, self.opt_state,
+                                                 batch, self.residuals)
+                    else:
+                        self.params, self.opt_state, metrics = self.step_fn(
+                            self.params, self.opt_state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    break
+                except jax.errors.JaxRuntimeError:
+                    # transient device failure: retry, then restore+reraise
+                    log.warning("step %d attempt %d failed", step, attempt)
+                    if attempt == self.cfg.max_retries:
+                        self._checkpoint(step, blocking=True)
+                        raise
+            dt = time.monotonic() - t0
+            if ema is None:
+                ema = dt
+            if dt > self.cfg.straggler_factor * ema and step > self.start_step + 2:
+                self.straggler_events.append((step, dt, ema))
+                log.warning("straggler: step %d took %.3fs (ema %.3fs)",
+                            step, dt, ema)
+            ema = 0.9 * ema + 0.1 * dt
+            step += 1
+            if step % self.cfg.log_every == 0:
+                self.metrics_history.append(
+                    (step, float(metrics["loss"])))
+                log.info("step %d loss %.4f (%.3fs)", step,
+                         float(metrics["loss"]), dt)
+            if self.cfg.ckpt_every and step % self.cfg.ckpt_every == 0:
+                self._checkpoint(step)
+        self._checkpoint(step, blocking=True)
+        return {"final_step": step,
+                "history": self.metrics_history,
+                "stragglers": self.straggler_events}

@@ -1,0 +1,87 @@
+"""Optimizer + gradient-compression tests (unit + hypothesis properties)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.optim.adamw import (OptConfig, apply_adamw, clip_by_global_norm,
+                               init_opt_state, schedule)
+from repro.optim.compress import (compress_with_feedback, dequantize_int8,
+                                  init_residuals, quantize_int8)
+
+
+def test_adamw_matches_manual_math():
+    cfg = OptConfig(peak_lr=1e-2, warmup_steps=0, total_steps=100,
+                    min_lr_ratio=1.0, b1=0.9, b2=0.99, eps=1e-8,
+                    weight_decay=0.0, grad_clip=None)
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 0.5])}
+    st_ = init_opt_state(p, cfg)
+    p1, st1, _ = apply_adamw(p, g, st_, cfg)
+    # step 1: mhat = g, vhat = g^2 -> update = lr * g/(|g|+eps) = lr*sign(g)
+    expect = np.array([1.0, -2.0]) - 1e-2 * np.array([1.0, 1.0])
+    np.testing.assert_allclose(np.asarray(p1["w"]), expect, atol=1e-5)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=10, total_steps=110,
+                    min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(schedule(cfg, jnp.asarray(110))) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 3.0)}          # norm 6
+    clipped, norm = clip_by_global_norm(g, 3.0)
+    assert float(norm) == pytest.approx(6.0)
+    np.testing.assert_allclose(np.asarray(clipped["a"]),
+                               np.full(4, 1.5), atol=1e-5)
+
+
+def test_bf16_state_variant_runs():
+    cfg = OptConfig(use_master=False, state_dtype=jnp.bfloat16,
+                    grad_clip=1.0)
+    p = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    g = {"w": jnp.full((8, 8), 0.1, jnp.bfloat16)}
+    st_ = init_opt_state(p, cfg)
+    assert st_["m"]["w"].dtype == jnp.bfloat16
+    assert "master" not in st_
+    p1, st1, _ = apply_adamw(p, g, st_, cfg)
+    assert p1["w"].dtype == jnp.bfloat16
+    assert bool(jnp.isfinite(p1["w"].astype(jnp.float32)).all())
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_int8_quantize_bounded_error(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, scale = quantize_int8(x)
+    deq = dequantize_int8(q, scale)
+    # error bounded by half a quantisation step
+    assert float(jnp.abs(deq - x).max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """With a CONSTANT gradient, EF compression must converge so the mean
+    applied gradient equals the true one."""
+    g = {"w": jnp.linspace(-1.0, 1.0, 8192).reshape(64, 128)}
+    res = init_residuals(g)
+    applied = jnp.zeros_like(g["w"])
+    steps = 50
+    for _ in range(steps):
+        deq, res = compress_with_feedback(g, res)
+        applied = applied + deq["w"]
+    mean_err = float(jnp.abs(applied / steps - g["w"]).max())
+    assert mean_err < 1e-3, mean_err
+
+
+def test_small_leaves_pass_through():
+    g = {"tiny": jnp.ones((4,))}
+    res = init_residuals(g)
+    deq, res2 = compress_with_feedback(g, res)
+    np.testing.assert_allclose(np.asarray(deq["tiny"]), np.ones(4))
+    assert float(jnp.abs(res2["tiny"]).max()) == 0.0

@@ -1,0 +1,118 @@
+"""Property tests (hypothesis) for the DSP layout algebra, switch planner,
+and communication-volume model."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.dsp import comm_volume_bytes
+from repro.core.layout import SeqLayout, local_shape
+from repro.core.plan import (Stage, brute_force_plan, plan_switches,
+                             switch_count, transformer2d_stages)
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+@st.composite
+def stage_problems(draw):
+    n_dims = draw(st.integers(2, 4))
+    dims = list(range(1, 1 + n_dims))
+    n_stages = draw(st.integers(1, 7))
+    stages = []
+    for i in range(n_stages):
+        forbid = draw(st.sets(st.sampled_from(dims), min_size=0,
+                              max_size=n_dims - 1))
+        stages.append(Stage(frozenset(forbid), f"s{i}"))
+    initial = draw(st.one_of(st.none(), st.sampled_from(dims)))
+    return stages, dims, initial
+
+
+@given(stage_problems())
+@settings(max_examples=200, deadline=None)
+def test_planner_valid_and_optimal(problem):
+    stages, dims, initial = problem
+    plan = plan_switches(stages, dims, initial)
+    # validity: never sharded on a compute dim
+    for st_, d in zip(stages, plan):
+        assert st_.allows(d)
+    # optimality: Belady greedy == brute force switch count
+    best = brute_force_plan(stages, dims, initial)
+    assert switch_count(plan, initial) == switch_count(best, initial)
+
+
+def test_planner_transformer2d_alternates():
+    stages = transformer2d_stages(4)
+    plan = plan_switches(stages, [1, 2], initial=1)
+    # temporal stage (computes dim 1) must shard dim 2 and vice versa
+    assert plan == [2, 1] * 4
+    # 2 switches per layer (paper §4.1): T->S before temporal, S->T before
+    # the next spatial
+    assert switch_count(plan, initial=1) == 2 * 4
+
+
+def test_planner_no_switch_when_avoidable():
+    # one hot dim that is never computed over: zero switches
+    stages = [Stage(frozenset({1}), "a"), Stage(frozenset({2}), "b"),
+              Stage(frozenset({1}), "c")]
+    plan = plan_switches(stages, [1, 2, 3], initial=3)
+    assert plan == [3, 3, 3]
+    assert switch_count(plan, 3) == 0
+
+
+def test_planner_infeasible_raises():
+    with pytest.raises(ValueError):
+        plan_switches([Stage(frozenset({1, 2}))], [1, 2])
+
+
+# ---------------------------------------------------------------------------
+# Comm-volume model (paper Table 2)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 1 << 34), st.integers(2, 512))
+@settings(max_examples=100, deadline=None)
+def test_comm_volume_table2(m, n):
+    assert comm_volume_bytes("keep", m, n) == 0
+    assert comm_volume_bytes("split", m, n) == 0
+    assert comm_volume_bytes("switch", m, n) == pytest.approx(m / n)
+    assert comm_volume_bytes("gather", m, n) == m
+    # the paper's headline: one DSP layer (2 switches) vs Ulysses (4 a2a)
+    # vs Megatron-SP (8 AG/RS of full M) vs Ring (2M)
+    dsp = 2 * comm_volume_bytes("switch", m, n)
+    ulysses = 4 * comm_volume_bytes("switch", m, n)
+    megatron = 8.0 * m
+    ring = 2.0 * m
+    assert dsp < ulysses < megatron
+    assert dsp <= ring
+
+
+# ---------------------------------------------------------------------------
+# Layout algebra
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 5), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_layout_transitions(ndim, dim):
+    dim = min(dim, ndim - 1)
+    lay = SeqLayout(shard_dim=None, ndim=ndim)
+    s = lay.split(dim)
+    assert s.shard_dim == dim
+    g = s.gathered()
+    assert g.shard_dim is None
+    with pytest.raises(ValueError):
+        lay.switched(dim)            # cannot switch from unsharded
+    with pytest.raises(ValueError):
+        s.split(dim)                 # cannot split when sharded
+    with pytest.raises(ValueError):
+        s.switched(0)                # batch dim is not shardable
+
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 6))
+@settings(max_examples=50, deadline=None)
+def test_local_shape_math(b_mult, s_mult, n):
+    layout = SeqLayout(shard_dim=1, ndim=3)
+    shape = (b_mult * n, s_mult * n, 16)
+    loc = local_shape(shape, layout, n_sp=n, n_dp=n)
+    assert loc == (b_mult, s_mult, 16)
+    with pytest.raises(ValueError):
+        local_shape((n, 5, 16), layout, n_sp=2)   # odd dim over even SP

@@ -1,0 +1,79 @@
+"""HLO collective parser + roofline math unit tests (pure string parsing —
+no devices needed)."""
+import pytest
+
+from repro.analysis.roofline import (Roofline, extrapolate_depth,
+                                     parse_collectives, roofline,
+                                     _shape_bytes, _instruction_result_bytes)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[2,3,4]{2,1,0}") == 96
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("pred[10]") == 10
+    assert _shape_bytes("s32[]") == 4        # scalar
+    assert _shape_bytes("token[]") == 0      # non-numeric type ignored
+
+
+def test_tuple_result_bytes():
+    ln = ("%all-to-all = (f32[2,1,4]{2,1,0}, f32[2,1,4]{2,1,0}) "
+          "all-to-all(%a, %b), replica_groups={{0,1}}")
+    assert _instruction_result_bytes(ln) == 64
+
+
+HLO = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %x = f32[4]{0} get-tuple-element(%p), index=1
+  %ag = f32[8]{0} all-gather(%x), replica_groups={{0,1}}, dimensions={0}
+  %rs = f32[4]{0} reduce-scatter(%ag), replica_groups={{0,1}}, dimensions={0}, to_apply=%add
+  ROOT %t = (s32[], f32[4]) tuple(%i2, %rs)
+}
+
+ENTRY %main () -> f32[] {
+  %init = (s32[], f32[4]) tuple(%c0, %z)
+  %w = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+  %ar = f32[16]{0} all-reduce(%y), replica_groups={{0,1}}, to_apply=%add
+  ROOT %r = f32[] constant(0)
+}
+"""
+
+
+def test_while_trip_count_multiplication():
+    stats = parse_collectives(HLO)
+    # all-gather inside the while: 32 bytes x 7 trips = 224
+    assert stats.by_kind["all-gather"] == 32 * 7
+    # reduce-scatter: result 16B x group 2 x 7 trips = 224
+    assert stats.by_kind["reduce-scatter"] == 16 * 2 * 7
+    # all-reduce outside: 64B x 2 (ring convention)
+    assert stats.by_kind["all-reduce"] == 64 * 2
+    assert stats.by_kind_count["all-gather"] == 7
+
+
+def test_roofline_terms_and_bottleneck():
+    rl = roofline(hlo_flops_per_dev=197e12, hlo_bytes_per_dev=0.0,
+                  collective_bytes_per_dev=0.0, chips=256,
+                  model_flops=197e12 * 256 * 0.5)
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.bottleneck == "compute"
+    assert rl.useful_ratio == pytest.approx(0.5)
+
+    rl = roofline(hlo_flops_per_dev=0.0, hlo_bytes_per_dev=0.0,
+                  collective_bytes_per_dev=50e9 * 2, chips=256,
+                  model_flops=1.0)
+    assert rl.collective_s == pytest.approx(2.0)
+    assert rl.bottleneck == "collective"
+
+
+def test_depth_extrapolation():
+    assert extrapolate_depth(10.0, 13.0, 1) == pytest.approx(10.0)
+    assert extrapolate_depth(10.0, 13.0, 5) == pytest.approx(22.0)
