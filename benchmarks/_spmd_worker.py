@@ -29,8 +29,8 @@ def main():
                     in_dim=cfg_json.get("in_dim", 16),
                     modulate=cfg_json.get("modulate", True),
                     dtype=jnp.float32)
-    mesh = jax.make_mesh((n,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((n,), ("model",))
 
     params = init_t2d(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (b, t, s, cfg.in_dim))

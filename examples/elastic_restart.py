@@ -33,8 +33,8 @@ ckpt_dir = sys.argv[1]
 cfg = LMConfig(name="elastic", n_layers=2, d_model=64, n_heads=4,
                n_kv_heads=2, head_dim=16, d_ff=128, vocab=64,
                dtype=jnp.float32)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 plan = ParallelPlan(mode="dsp")
 sharder = make_sharder(mesh, plan)
 params = init_lm(jax.random.PRNGKey(0), cfg)

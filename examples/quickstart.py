@@ -31,8 +31,8 @@ ref = forward(params, x, t, cfg, backend="ref", remat=False)
 
 # DSP on a (data=2, model=4) mesh: sequence sharded on T, dynamically
 # switched to S for the temporal stage — one all-to-all per switch
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 dsp_fwd = jax.jit(make_spmd_forward(cfg, mesh, mode="dsp", backend="ref"))
 out = dsp_fwd(params, x, t)
 

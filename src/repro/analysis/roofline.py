@@ -199,6 +199,58 @@ def parse_collectives(hlo: str) -> CollectiveStats:
                            {k: v for k, v in by_count.items() if v})
 
 
+def parse_data_collectives(hlo: str) -> CollectiveStats:
+    """``parse_collectives`` minus XLA partitioner artifacts: collectives
+    whose every operand is a broadcast of a SCALAR CONSTANT.  When stage
+    layouts alternate, the partitioner hoists constant broadcasts (norm eps,
+    mean divisors) out of loop bodies and re-tiles them with real
+    collectives that move zero information.  The HLO contract tests
+    (tests/test_hlo_collectives.py) compare THIS count against the planned
+    schedule — one all-to-all per planned switch, on activations."""
+    comps = _split_computations(hlo)
+    mult = _while_map(comps)
+    defs: Dict[str, str] = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = re.match(r"%?([\w.\-]+)\s*=", ln)
+            if m:
+                defs[m.group(1)] = ln
+
+    def scalar_const_broadcast(name: str) -> bool:
+        d = defs.get(name, "")
+        return bool(re.search(r"=\s*\S+\s+broadcast\(\w+\[\]", d))
+
+    def artifact(ln: str, kind: str) -> bool:
+        args = ln.split(f"{kind}(", 1)[-1] if f"{kind}(" in ln else \
+            ln.split(f"{kind}-start(", 1)[-1]
+        # operand list precedes the first attribute (replica_groups/...)
+        args = args.split("), ")[0] if "), " in args else args
+        ops = re.findall(r"%([\w.\-]+)", args)
+        return bool(ops) and all(scalar_const_broadcast(o) for o in ops)
+
+    by_kind: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    by_count: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1)
+        for ln in lines:
+            if "=" not in ln:
+                continue
+            for kind in COLLECTIVES:
+                if re.search(rf"\s{kind}(?:-start)?\(", ln):
+                    if not artifact(ln, kind):
+                        nbytes = _instruction_result_bytes(ln)
+                        if kind == "reduce-scatter":
+                            nbytes *= _group_size(ln)
+                        elif kind == "all-reduce":
+                            nbytes *= 2
+                        by_kind[kind] += nbytes * m
+                        by_count[kind] += m
+                    break
+    return CollectiveStats(sum(by_kind.values()), sum(by_count.values()),
+                           {k: v for k, v in by_kind.items() if v},
+                           {k: v for k, v in by_count.items() if v})
+
+
 @dataclasses.dataclass
 class Roofline:
     compute_s: float

@@ -1,16 +1,23 @@
 """DSP core: dynamic sequence parallelism primitives, layout algebra,
-switch planner, and embedded-SP baselines (Ulysses / Megatron-SP / Ring)."""
+cost-aware switch planner, plan-driven schedule executor, and embedded-SP
+baselines (Ulysses / Megatron-SP / Ring)."""
 from repro.core.dsp import (dynamic_switch, split, gather, dsp_shard_batch,
                             switch_constraint, gather_constraint,
                             split_constraint, comm_volume_bytes)
 from repro.core.layout import SeqLayout, ParallelContext, from_mesh, UNSHARDED
-from repro.core.plan import (Stage, plan_switches, switch_count,
-                             transformer2d_stages, lm_attention_stages)
+from repro.core.plan import (Stage, plan_switches, plan_switches_dp,
+                             make_plan, plan_cost_bytes, switch_count,
+                             transformer2d_stages, lm_attention_stages,
+                             encdec_stages)
+from repro.core.schedule import (Schedule, PeriodicSchedule, Transition,
+                                 plan_schedule, ScheduleExecutor)
 
 __all__ = [
     "dynamic_switch", "split", "gather", "dsp_shard_batch",
     "switch_constraint", "gather_constraint", "split_constraint",
     "comm_volume_bytes", "SeqLayout", "ParallelContext", "from_mesh",
-    "UNSHARDED", "Stage", "plan_switches", "switch_count",
-    "transformer2d_stages", "lm_attention_stages",
+    "UNSHARDED", "Stage", "plan_switches", "plan_switches_dp", "make_plan",
+    "plan_cost_bytes", "switch_count", "transformer2d_stages",
+    "lm_attention_stages", "encdec_stages", "Schedule", "PeriodicSchedule",
+    "Transition", "plan_schedule", "ScheduleExecutor",
 ]

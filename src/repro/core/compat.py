@@ -1,0 +1,50 @@
+"""jax version-compatibility shims.
+
+The production target is a current jax, but CI and some dev containers pin
+older releases (0.4.x) where ``jax.shard_map`` still lives in
+``jax.experimental.shard_map`` (with ``check_rep`` instead of ``check_vma``),
+``jax.sharding.AxisType`` does not exist, and ``jax.lax.pvary`` is absent.
+Every call site routes through here so the rest of the codebase is written
+against the modern API only.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on modern jax; experimental fallback otherwise."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh(shape, axes):
+    """Mesh with explicitly-Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis inside shard_map.  Older jax lacks
+    ``jax.lax.axis_size``; ``psum(1, axis)`` constant-folds to the same int."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return int(jax.lax.psum(1, axis_name))
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` when present (newer jax requires it to mark
+    replicated values inside shard_map); identity on older releases."""
+    fn = getattr(jax.lax, "pvary", None)
+    return x if fn is None else fn(x, axis_names)
+
+
+__all__ = ["shard_map", "make_mesh", "pvary"]

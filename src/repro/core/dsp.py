@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import compat
 from repro.core.layout import SeqLayout, ParallelContext
 
 # ---------------------------------------------------------------------------
@@ -40,7 +41,7 @@ def dynamic_switch(x: jax.Array, cur_shard: int, tgt_shard: int,
     """
     if cur_shard == tgt_shard:
         return x
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     if x.shape[tgt_shard] % n:
         raise ValueError(
             f"dynamic_switch: dim {tgt_shard} (size {x.shape[tgt_shard]}) "
@@ -54,7 +55,7 @@ def split(x: jax.Array, tgt_shard: int, axis_name: str = "model") -> jax.Array:
 
     Zero communication (paper Table 2 row ``s_hat -> s_i``).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     if x.shape[tgt_shard] % n:
         raise ValueError(
@@ -111,14 +112,35 @@ def split_constraint(x: jax.Array, ctx: ParallelContext, layout: SeqLayout,
 
 def comm_volume_bytes(primitive: str, global_bytes: int, n: int) -> float:
     """Per-device communication volume of one DSP primitive on a tensor of
-    ``global_bytes`` with SP size ``n`` (paper Table 2)."""
+    ``global_bytes`` (= M) with SP size ``n`` (= N).
+
+    Convention — paper Table 2 counts the per-device SHARD that a collective
+    re-tiles or materialises, not the on-wire fraction:
+
+      switch  s_i -> s_j   : M/N   one tiled all-to-all re-tiles each
+                                   device's full M/N shard (on the wire each
+                                   device sends (N-1)/N of that shard; the
+                                   paper and this repo fold the constant into
+                                   M/N, and HLO measurement uses the same
+                                   result-bytes convention, see
+                                   analysis.roofline.parse_collectives)
+      gather  s_i -> s_hat : M     all-gather materialises the full sequence
+                                   on every device
+      split   s_hat -> s_i : 0     local slice
+      keep    s_i -> s_i   : 0
+
+    This single constant is shared by the switching planner
+    (``core.plan``), the schedule executor (``core.schedule``), and
+    ``benchmarks/comm_volume.py`` — planned and analytic volumes are
+    comparable by construction.
+    """
     if primitive == "keep":
         return 0.0
-    if primitive == "switch":        # all-to-all: each device sends (N-1)/N of its M/N shard
+    if primitive == "switch":
         return global_bytes / n
     if primitive == "split":
         return 0.0
-    if primitive == "gather":        # all-gather: each device receives M
+    if primitive == "gather":
         return float(global_bytes)
     raise ValueError(f"unknown primitive {primitive!r}")
 

@@ -1,20 +1,46 @@
-"""Switching-plan solver: choose shard dims per computation stage.
+"""Cost-aware switching-plan solver: choose shard dims per computation stage.
 
 The paper leaves "automatically determine the most effective switching
-strategy" as future work (§6).  We implement it: a computation is a sequence
-of *stages*, each declaring the set of sequence dimensions it computes along
-(the shard dim must avoid those).  Every switch costs one all-to-all of M/N,
-so the optimal plan minimises the number of switches.
+strategy" as future work (§6).  We implement it.  A computation is a sequence
+of *stages*; each stage declares the set of sequence dimensions it computes
+along (the shard dim must avoid those) and, optionally, the global shape and
+dtype width of the activation that crosses into it.  Transitions between
+stage layouts are weighted with the paper's Table-2 per-device byte costs
+(``M`` = global activation bytes, ``N`` = SP degree):
 
-This is offline cache replacement with a single slot and per-stage forbidden
-sets; the farthest-next-conflict (Belady) greedy is optimal, which the
-property tests check against brute force on small instances.
+    keep    s_i -> s_i   : 0
+    switch  s_i -> s_j   : M / N      (one tiled all-to-all)
+    split   s_hat -> s_i : 0          (local slice)
+    gather  s_i -> s_hat : M          (one all-gather)
+
+Two solvers share this cost model:
+
+* ``plan_switches`` — the Belady (farthest-next-conflict) greedy.  With
+  uniform per-boundary bytes every switch costs the same, the problem is
+  offline cache replacement with a single slot, and the greedy is exactly
+  optimal (property-tested against brute force).  This is the fast path.
+
+* ``plan_switches_dp`` — exact dynamic program over (stage, shard_dim),
+  O(stages * dims^2).  Required whenever boundary bytes differ (asymmetric
+  T/S extents, enc-dec stage graphs whose encoder tensors dwarf the decoder,
+  SSM scan stages at a different width) or when a *final* layout is pinned
+  (loss/head wants the dataloader split back): the greedy ignores both and
+  can lose.
+
+``make_plan`` dispatches between them; ``plan_cost_bytes`` prices any plan so
+benchmarks can report planned-vs-measured collective volume with the same
+constant (``repro.core.dsp.comm_volume_bytes``) the executor uses.
+
+Models do not call these directly — they declare a ``stages(cfg)`` sequence
+and ``repro.core.schedule`` turns the plan into boundary transitions (the
+one plan-driven executor for both the explicit shard_map path and the auto
+constraint path).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,15 +49,68 @@ class Stage:
 
     ``compute_dims``: logical sequence-dim indices the stage computes along
     (attention over S_i, a scan over S_i, ...).  The shard dim must not be in
-    this set.  ``name`` is cosmetic.
+    this set.  ``name`` is cosmetic.  ``shape``/``dtype_bytes`` describe the
+    global activation entering the stage; when given they weight the cost of
+    the transition at the stage's entry boundary (paper Table 2), when absent
+    the boundary gets unit weight (pure switch counting).
     """
 
     compute_dims: FrozenSet[int]
     name: str = ""
+    shape: Optional[Tuple[int, ...]] = None
+    dtype_bytes: int = 2
 
     def allows(self, dim: int) -> bool:
         return dim not in self.compute_dims
 
+    @property
+    def nbytes(self) -> Optional[float]:
+        if self.shape is None:
+            return None
+        n = 1
+        for d in self.shape:
+            n *= d
+        return float(n) * self.dtype_bytes
+
+
+def transition_kind(src: Optional[int], tgt: Optional[int]) -> str:
+    """Classify a layout change as a paper Table-2 primitive."""
+    if src == tgt:
+        return "keep"
+    if src is None:
+        return "split"
+    if tgt is None:
+        return "gather"
+    return "switch"
+
+
+def transition_bytes(src: Optional[int], tgt: Optional[int],
+                     global_bytes: float, n: int) -> float:
+    """Per-device cost of one layout transition (paper Table 2)."""
+    from repro.core.dsp import comm_volume_bytes
+    return comm_volume_bytes(transition_kind(src, tgt), global_bytes, n)
+
+
+def _boundary_bytes(stages: Sequence[Stage], t: int,
+                    default: float = 1.0) -> float:
+    """Global bytes of the tensor crossing the boundary INTO stage ``t``."""
+    nb = stages[t].nbytes
+    return default if nb is None else nb
+
+
+def _uniform_cost(stages: Sequence[Stage]) -> bool:
+    return len({_boundary_bytes(stages, t) for t in range(len(stages))}) <= 1
+
+
+def _check_feasible(stages: Sequence[Stage], seq_dims: Sequence[int]) -> None:
+    for st in stages:
+        if all(not st.allows(d) for d in seq_dims):
+            raise ValueError(f"stage {st.name!r} forbids every sequence dim")
+
+
+# ---------------------------------------------------------------------------
+# Greedy (uniform-cost fast path)
+# ---------------------------------------------------------------------------
 
 def _next_conflict(stages: Sequence[Stage], start: int, dim: int) -> int:
     """Index of the first stage >= start that forbids ``dim`` (len() if none)."""
@@ -45,6 +124,9 @@ def plan_switches(stages: Sequence[Stage], seq_dims: Sequence[int],
                   initial: Optional[int] = None) -> List[int]:
     """Return shard dim per stage, minimising switch count (Belady greedy).
 
+    Optimal only under uniform boundary costs with a free final layout; use
+    ``make_plan`` to dispatch to the exact DP otherwise.
+
     Args:
       stages: the stage sequence.
       seq_dims: all switchable sequence-dim indices.
@@ -53,9 +135,7 @@ def plan_switches(stages: Sequence[Stage], seq_dims: Sequence[int],
     """
     if not stages:
         return []
-    for st in stages:
-        if all(not st.allows(d) for d in seq_dims):
-            raise ValueError(f"stage {st.name!r} forbids every sequence dim")
+    _check_feasible(stages, seq_dims)
 
     plan: List[int] = []
     cur = initial
@@ -70,6 +150,94 @@ def plan_switches(stages: Sequence[Stage], seq_dims: Sequence[int],
     return plan
 
 
+# ---------------------------------------------------------------------------
+# Exact DP (non-uniform costs / pinned final layout)
+# ---------------------------------------------------------------------------
+
+def plan_switches_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
+                     *, n: int = 2, initial: Optional[int] = None,
+                     final: Optional[int] = None,
+                     final_bytes: Optional[float] = None) -> List[int]:
+    """Exact minimum-byte plan: DP over (stage, shard_dim).
+
+    Transition into stage ``t`` is weighted by the bytes of the activation
+    entering it (``Stage.nbytes``, unit weight when unset); a pinned
+    ``final`` layout adds the exit transition priced at ``final_bytes``
+    (defaults to the last stage's bytes).  Mid-plan gathers never help for
+    n > 1 (gather costs M, a direct switch M/N), so the state space stays on
+    ``seq_dims``.  Ties break toward keeping the current shard, then the
+    smaller dim, so uniform instances reproduce the greedy's plans.
+    """
+    if not stages:
+        return []
+    _check_feasible(stages, seq_dims)
+    dims = list(seq_dims)
+    INF = float("inf")
+
+    nb0 = _boundary_bytes(stages, 0)
+    cost: Dict[int, float] = {
+        d: (transition_bytes(initial, d, nb0, n) if initial is not None
+            else 0.0) if stages[0].allows(d) else INF
+        for d in dims}
+    back: List[Dict[int, Optional[int]]] = []
+
+    for t in range(1, len(stages)):
+        nb = _boundary_bytes(stages, t)
+        ncost: Dict[int, float] = {}
+        bp: Dict[int, Optional[int]] = {}
+        for d in dims:
+            if not stages[t].allows(d):
+                ncost[d], bp[d] = INF, None
+                continue
+            best, arg, best_key = INF, None, None
+            for d0 in dims:
+                c0 = cost[d0]
+                if c0 == INF:
+                    continue
+                c = c0 + transition_bytes(d0, d, nb, n)
+                # tie-break: prefer keeping the shard, then the smaller dim
+                key = (c, d0 != d, d0)
+                if best_key is None or key < best_key:
+                    best, arg, best_key = c, d0, key
+            ncost[d], bp[d] = best, arg
+        back.append(bp)
+        cost = ncost
+
+    if final is not None:
+        fb = final_bytes if final_bytes is not None else _boundary_bytes(
+            stages, len(stages) - 1)
+
+        def total(d):
+            return cost[d] + transition_bytes(d, final, fb, n)
+    else:
+        def total(d):
+            return cost[d]
+
+    feas = [d for d in dims if cost[d] < INF]
+    end = min(feas, key=lambda d: (total(d), d != final, d))
+    plan = [end]
+    for bp in reversed(back):
+        plan.append(bp[plan[-1]])
+    plan.reverse()
+    return plan
+
+
+def make_plan(stages: Sequence[Stage], seq_dims: Sequence[int],
+              *, n: int = 2, initial: Optional[int] = None,
+              final: Optional[int] = None,
+              final_bytes: Optional[float] = None) -> List[int]:
+    """Dispatch: Belady greedy when it is provably optimal (uniform boundary
+    bytes, free final layout), exact DP otherwise."""
+    if final is None and _uniform_cost(stages):
+        return plan_switches(stages, seq_dims, initial)
+    return plan_switches_dp(stages, seq_dims, n=n, initial=initial,
+                            final=final, final_bytes=final_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Plan pricing / oracles
+# ---------------------------------------------------------------------------
+
 def switch_count(plan: Sequence[int], initial: Optional[int] = None) -> int:
     count = 0
     prev = initial
@@ -80,9 +248,28 @@ def switch_count(plan: Sequence[int], initial: Optional[int] = None) -> int:
     return count
 
 
+def plan_cost_bytes(stages: Sequence[Stage], plan: Sequence[int],
+                    *, n: int, initial: Optional[int] = None,
+                    final: Optional[int] = None,
+                    final_bytes: Optional[float] = None) -> float:
+    """Total per-device bytes of a plan under the Table-2 cost model — the
+    same constant the executor and benchmarks use."""
+    total = 0.0
+    prev = initial
+    for t, d in enumerate(plan):
+        if prev is not None:
+            total += transition_bytes(prev, d, _boundary_bytes(stages, t), n)
+        prev = d
+    if final is not None and plan:
+        fb = final_bytes if final_bytes is not None else _boundary_bytes(
+            stages, len(stages) - 1)
+        total += transition_bytes(prev, final, fb, n)
+    return total
+
+
 def brute_force_plan(stages: Sequence[Stage], seq_dims: Sequence[int],
                      initial: Optional[int] = None) -> List[int]:
-    """Exponential exact solver (test oracle only)."""
+    """Exponential exact solver for switch COUNT (test oracle only)."""
     best, best_cost = None, None
     for assign in itertools.product(seq_dims, repeat=len(stages)):
         if any(not st.allows(d) for st, d in zip(stages, assign)):
@@ -95,16 +282,44 @@ def brute_force_plan(stages: Sequence[Stage], seq_dims: Sequence[int],
     return best
 
 
+def brute_force_cost(stages: Sequence[Stage], seq_dims: Sequence[int],
+                     *, n: int = 2, initial: Optional[int] = None,
+                     final: Optional[int] = None,
+                     final_bytes: Optional[float] = None) -> float:
+    """Exponential exact minimum BYTES (test oracle only)."""
+    best = None
+    for assign in itertools.product(seq_dims, repeat=len(stages)):
+        if any(not st.allows(d) for st, d in zip(stages, assign)):
+            continue
+        c = plan_cost_bytes(stages, assign, n=n, initial=initial,
+                            final=final, final_bytes=final_bytes)
+        if best is None or c < best:
+            best = c
+    if best is None:
+        raise ValueError("infeasible stage sequence")
+    return best
+
+
 # Canonical stage sequences ---------------------------------------------------
 
-def transformer2d_stages(num_layers: int) -> List[Stage]:
-    """The paper's OpenSora-like 2D DiT: per layer one temporal block
-    (computes along dim T=1) then one spatial block (dim S=2); tensors are
-    (B, T, S, C)."""
+def transformer2d_stages(num_layers: int,
+                         shape: Optional[Tuple[int, ...]] = None,
+                         dtype_bytes: int = 2) -> List[Stage]:
+    """The paper's OpenSora-like 2D DiT in the PAPER's ordering: per layer
+    one temporal block (computes along dim T=1) then one spatial block
+    (dim S=2); tensors are (B, T, S, C).
+
+    NOTE: ``models/transformer2d.stages`` declares the sequence the repo's
+    model actually EXECUTES (spatial first, matching its block order) —
+    entry/exit switch placement differs between the two orderings, so use
+    the model's declaration when pricing real runs; this builder exists for
+    paper-faithful analysis and the planner tests."""
     out: List[Stage] = []
     for i in range(num_layers):
-        out.append(Stage(frozenset({1}), f"layer{i}.temporal"))
-        out.append(Stage(frozenset({2}), f"layer{i}.spatial"))
+        out.append(Stage(frozenset({1}), f"layer{i}.temporal", shape,
+                         dtype_bytes))
+        out.append(Stage(frozenset({2}), f"layer{i}.spatial", shape,
+                         dtype_bytes))
     return out
 
 
@@ -116,4 +331,38 @@ def lm_attention_stages(num_layers: int) -> List[Stage]:
     for i in range(num_layers):
         out.append(Stage(frozenset({1}), f"layer{i}.attn"))
         out.append(Stage(frozenset(), f"layer{i}.mlp"))
+    return out
+
+
+def encdec_stages(n_enc_layers: int, n_dec_layers: int, *,
+                  s_enc: Optional[int] = None, s_dec: Optional[int] = None,
+                  batch: Optional[int] = None, d_model: Optional[int] = None,
+                  dtype_bytes: int = 2) -> List[Stage]:
+    """Encoder-decoder stage graph on the logical (B, S, H·Dh) view:
+    channel-wise stages (projections / FFN) compute along dim 2, attention
+    cores along dim 1.  Encoder stages carry S_enc-sized tensors, decoder
+    stages S_dec-sized — the asymmetry that makes the byte-weighted DP
+    diverge from pure switch counting."""
+    def shp(s):
+        if None in (s, batch, d_model):
+            return None
+        return (batch, s, d_model)
+
+    out: List[Stage] = []
+    for i in range(n_enc_layers):
+        out.append(Stage(frozenset({2}), f"enc{i}.proj", shp(s_enc),
+                         dtype_bytes))
+        out.append(Stage(frozenset({1}), f"enc{i}.attn", shp(s_enc),
+                         dtype_bytes))
+        out.append(Stage(frozenset({2}), f"enc{i}.mlp", shp(s_enc),
+                         dtype_bytes))
+    for i in range(n_dec_layers):
+        out.append(Stage(frozenset({2}), f"dec{i}.proj", shp(s_dec),
+                         dtype_bytes))
+        out.append(Stage(frozenset({1}), f"dec{i}.self_attn", shp(s_dec),
+                         dtype_bytes))
+        out.append(Stage(frozenset({1}), f"dec{i}.cross_attn", shp(s_dec),
+                         dtype_bytes))
+        out.append(Stage(frozenset({2}), f"dec{i}.mlp", shp(s_dec),
+                         dtype_bytes))
     return out

@@ -14,6 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
+
 NEG_INF = -1e30
 
 
@@ -41,7 +43,7 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                    scale: Optional[float] = None) -> jax.Array:
     """q, k, v: local (B, S/N, H, D) sharded along the sequence.  Returns the
     local output shard (B, S/N, H, D)."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     b, s_local, h, d = q.shape
     scale = scale if scale is not None else d ** -0.5
@@ -71,7 +73,7 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     valid0 = jnp.zeros((b, h, s_local), bool)
     # mark constant-initialised carries as varying over the ring axis so the
     # scan carry types line up under shard_map's vma tracking
-    o0, m0, l0, valid0 = jax.lax.pvary((o0, m0, l0, valid0), (axis_name,))
+    o0, m0, l0, valid0 = compat.pvary((o0, m0, l0, valid0), (axis_name,))
     # fori_loop keeps HLO compact for long rings; unrolled for tiny N is fine too.
     k_f, v_f, o, m, l, any_valid = jax.lax.fori_loop(
         0, n, body, (k, v, o0, m0, l0, valid0))

@@ -1,0 +1,291 @@
+"""Plan-driven DSP schedule executor — the ONE place stage-boundary layout
+transitions are emitted.
+
+``core.plan`` decides *where* the sharded sequence dimension moves (a shard
+dim per stage, minimising paper-Table-2 per-device bytes); this module turns
+that plan into the actual transitions, with two interchangeable backends:
+
+* ``backend="explicit"`` — runs *inside* ``shard_map`` on local arrays and
+  issues the paper's collective primitives directly: ``dynamic_switch`` (one
+  tiled all-to-all, M/N), ``gather`` (one all-gather, M), ``split`` (local
+  slice, 0).
+* ``backend="auto"``     — runs under ``jit`` on globally-shaped arrays and
+  re-constrains the layout (``SeqLayout`` + ``ParallelContext.constrain``);
+  XLA SPMD lowers each constraint change to the identical collective
+  (asserted by tests/test_hlo_collectives.py).
+* ``backend="null"``     — every method is the identity (no mesh / non-DSP
+  modes), so model code stays branch-free.
+
+Scanned models (``jax.lax.scan`` over stacked layer params) execute a
+*periodic* schedule: the plan over the unrolled stage sequence must repeat
+with the layer period (``Schedule.periodic`` validates this) and the scan
+body applies the per-period boundary transitions plus the wrap-around
+transition back to the period's first layout.
+
+Models declare ``stages(cfg)`` and consume an executor; they never call
+``dynamic_switch`` or issue stage-boundary sharding constraints themselves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.plan import (Stage, make_plan, plan_cost_bytes, switch_count,
+                             transition_kind)
+
+# HLO collective emitted per transition kind (None = communication-free).
+COLLECTIVE_OF = {"switch": "all-to-all", "gather": "all-gather",
+                 "split": None, "keep": None}
+
+
+@dataclasses.dataclass(frozen=True)
+class Transition:
+    """One stage-boundary layout change (a paper Table-2 primitive)."""
+
+    kind: str                  # "keep" | "switch" | "split" | "gather"
+    src: Optional[int]
+    tgt: Optional[int]
+
+    @property
+    def collective(self) -> Optional[str]:
+        return COLLECTIVE_OF[self.kind]
+
+
+def classify(src: Optional[int], tgt: Optional[int]) -> Transition:
+    return Transition(transition_kind(src, tgt), src, tgt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A solved plan: shard dim per stage plus entry/exit layouts.
+
+    ``initial`` is the layout the input arrives with (dataloader split);
+    ``final`` pins the exit layout (loss/head) or is None for "free".
+    """
+
+    stages: Tuple[Stage, ...]
+    dims: Tuple[int, ...]
+    initial: Optional[int] = None
+    final: Optional[int] = None
+
+    def __post_init__(self):
+        assert len(self.stages) == len(self.dims), (len(self.stages),
+                                                    len(self.dims))
+
+    # -- boundary transitions ------------------------------------------------
+    def boundary(self, t: int) -> Transition:
+        """Transition INTO stage ``t`` (t == 0: from the initial layout)."""
+        src = self.initial if t == 0 else self.dims[t - 1]
+        return classify(src, self.dims[t])
+
+    def exit(self) -> Transition:
+        src = self.dims[-1] if self.dims else self.initial
+        return classify(src, self.final if self.final is not None else src)
+
+    def transitions(self) -> List[Transition]:
+        out = [self.boundary(t) for t in range(len(self.dims))]
+        if self.final is not None:
+            out.append(self.exit())
+        return out
+
+    # -- accounting ----------------------------------------------------------
+    def n_switches(self) -> int:
+        return sum(1 for tr in self.transitions() if tr.kind == "switch")
+
+    def expected_collectives(self) -> Dict[str, int]:
+        """HLO collective kind -> count this schedule must compile to."""
+        counts: Dict[str, int] = {}
+        for tr in self.transitions():
+            c = tr.collective
+            if c is not None:
+                counts[c] = counts.get(c, 0) + 1
+        return counts
+
+    def per_device_bytes(self, n: int) -> float:
+        """Planned per-device collective bytes (paper Table 2 constant —
+        identical to what benchmarks/comm_volume.py prices)."""
+        return plan_cost_bytes(self.stages, self.dims, n=n,
+                               initial=self.initial, final=self.final)
+
+    # -- periodic (scan) form ------------------------------------------------
+    def periodic(self, period: int) -> "PeriodicSchedule":
+        """Validate the plan is steady-state with the given stage period and
+        return the scan-body view.  Scanned execution cannot vary layouts
+        across iterations, so a non-periodic plan is a hard error."""
+        if len(self.dims) % period:
+            raise ValueError(f"{len(self.dims)} stages not a multiple of "
+                             f"period {period}")
+        for t, d in enumerate(self.dims):
+            if d != self.dims[t % period]:
+                raise ValueError(
+                    f"plan is not periodic with period {period}: stage {t} "
+                    f"shards dim {d} but stage {t % period} shards "
+                    f"{self.dims[t % period]} (scanned layers need a "
+                    f"steady-state plan; pass final=initial or unroll)")
+        return PeriodicSchedule(self, period)
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodicSchedule:
+    """Scan-body view of a periodic schedule: entry transition before the
+    scan, per-period boundaries inside the body, wrap-around at the body's
+    end, exit transition after the scan."""
+
+    schedule: Schedule
+    period: int
+
+    @property
+    def dims(self) -> Tuple[int, ...]:
+        return self.schedule.dims[:self.period]
+
+    def enter(self) -> Transition:
+        return classify(self.schedule.initial, self.dims[0])
+
+    def boundary(self, i: int) -> Transition:
+        """Transition into in-period stage ``i`` (1 <= i < period)."""
+        assert 1 <= i < self.period, i
+        return classify(self.dims[i - 1], self.dims[i])
+
+    def wrap(self) -> Transition:
+        """End-of-body transition back to the period's first layout."""
+        return classify(self.dims[-1], self.dims[0])
+
+    def exit(self) -> Transition:
+        final = self.schedule.final
+        return classify(self.dims[0], final if final is not None
+                        else self.dims[0])
+
+
+def plan_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
+                  n: int = 2, initial: Optional[int] = None,
+                  final: Optional[int] = None) -> Schedule:
+    """Solve the switching plan (``core.plan.make_plan``: Belady greedy on
+    uniform costs, exact DP otherwise) and wrap it as a Schedule."""
+    dims = make_plan(stages, seq_dims, n=n, initial=initial, final=final)
+    return Schedule(tuple(stages), tuple(dims), initial=initial, final=final)
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+class ScheduleExecutor:
+    """Applies a (periodic) schedule's transitions to activations.
+
+    One executor object serves a whole forward pass; models call
+    ``enter`` / ``boundary`` / ``wrap`` / ``exit`` at stage boundaries and
+    ``anchor`` to re-assert the current stage layout on intra-stage tensors
+    (auto path only — XLA's backward propagation otherwise flips layouts
+    mid-stage).
+    """
+
+    def __init__(self, psched: Optional[PeriodicSchedule], *,
+                 backend: str, ctx=None, axis_name: str = "model",
+                 batch_dim: int = 0):
+        if backend not in ("explicit", "auto", "null"):
+            raise ValueError(backend)
+        if backend == "auto" and ctx is None:
+            raise ValueError("auto backend needs a ParallelContext")
+        if backend != "null" and psched is None:
+            raise ValueError(f"{backend} backend needs a schedule")
+        self.psched = psched
+        self.backend = backend
+        self.ctx = ctx
+        self.axis_name = axis_name
+        self.batch_dim = batch_dim
+
+    # -- null factory --------------------------------------------------------
+    @classmethod
+    def null(cls) -> "ScheduleExecutor":
+        return cls(None, backend="null")
+
+    # -- transition application ---------------------------------------------
+    def _constrain(self, x, shard_dim: Optional[int]):
+        from repro.core.layout import SeqLayout
+        layout = SeqLayout(shard_dim=shard_dim, batch_dim=self.batch_dim,
+                           ndim=x.ndim)
+        return self.ctx.constrain(x, layout)
+
+    def apply(self, x, tr: Transition):
+        if self.backend == "null":
+            return x
+        if self.backend == "auto":
+            # re-constrain even on "keep": anchors SPMD propagation at the
+            # boundary, lowers to nothing when the layout is unchanged
+            return self._constrain(x, tr.tgt)
+        # explicit: inside shard_map, call the paper's primitive
+        from repro.core import dsp
+        if tr.kind == "keep":
+            return x
+        if tr.kind == "switch":
+            return dsp.dynamic_switch(x, tr.src, tr.tgt, self.axis_name)
+        if tr.kind == "split":
+            return dsp.split(x, tr.tgt, self.axis_name)
+        if tr.kind == "gather":
+            return dsp.gather(x, tr.src, self.axis_name)
+        raise ValueError(tr.kind)
+
+    # -- periodic-schedule conveniences ---------------------------------------
+    def enter(self, x):
+        return x if self.backend == "null" else self.apply(
+            x, self.psched.enter())
+
+    def boundary(self, x, i: int):
+        return x if self.backend == "null" else self.apply(
+            x, self.psched.boundary(i))
+
+    def wrap(self, x):
+        return x if self.backend == "null" else self.apply(
+            x, self.psched.wrap())
+
+    def exit(self, x):
+        return x if self.backend == "null" else self.apply(
+            x, self.psched.exit())
+
+    def anchor(self, x, i: int):
+        """Re-assert in-period stage ``i``'s layout (auto path; no-op for
+        explicit — local shapes already encode the layout)."""
+        if self.backend != "auto":
+            return x
+        return self._constrain(x, self.psched.dims[i])
+
+    def fold_anchor(self, x):
+        """Anchor a stage-folded view (B*other, L, C) whose batch dim has
+        absorbed the sharded sequence dim as its MINOR factor (auto path).
+        Keeps the composite (dp..., sp) sharding alive across the reshape."""
+        if self.backend != "auto":
+            return x
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ctx = self.ctx
+        entries: list = [None] * x.ndim
+        entries[self.batch_dim] = (*ctx.dp_axes, ctx.sp_axis)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(ctx.mesh, P(*entries)))
+
+    # -- accounting ----------------------------------------------------------
+    def expected_collectives(self, n_periods: int) -> Dict[str, int]:
+        """Collective counts of the full scanned execution (entry + body x
+        n_periods; the exit "keep" adds nothing)."""
+        if self.backend == "null":
+            return {}
+        counts: Dict[str, int] = {}
+
+        def add(tr):
+            c = tr.collective
+            if c is not None:
+                counts[c] = counts.get(c, 0) + 1
+
+        add(self.psched.enter())
+        for _ in range(n_periods):
+            for i in range(1, self.psched.period):
+                add(self.psched.boundary(i))
+            add(self.psched.wrap())
+        add(self.psched.exit())
+        return counts
+
+
+__all__ = [
+    "Transition", "classify", "Schedule", "PeriodicSchedule",
+    "plan_schedule", "ScheduleExecutor", "COLLECTIVE_OF",
+]

@@ -123,9 +123,12 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
         block_q=block_q, block_k=block_k)
 
     try:
-        compiler_params = pltpu.CompilerParams(
+        # renamed across jax releases: CompilerParams <-> TPUCompilerParams
+        cp_cls = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+        compiler_params = cp_cls(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
-    except TypeError:  # older naming
+    except (TypeError, AttributeError):  # older naming
         compiler_params = None
 
     call = pl.pallas_call(

@@ -91,9 +91,12 @@ def ssd_scan_fwd(xdt: jax.Array, da: jax.Array, b: jax.Array, c: jax.Array, *,
     kernel = functools.partial(_ssd_kernel, chunk=chunk, group=group)
 
     try:
-        compiler_params = pltpu.CompilerParams(
+        # renamed across jax releases: CompilerParams <-> TPUCompilerParams
+        cp_cls = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+        compiler_params = cp_cls(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:
+    except (TypeError, AttributeError):
         compiler_params = None
 
     call = pl.pallas_call(

@@ -6,7 +6,7 @@ host device count and smoke tests must keep seeing 1 device.
 """
 from __future__ import annotations
 
-import jax
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,13 +14,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     ``pod`` axis: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/benchmarks (e.g. (8,) single-axis rings)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes))

@@ -116,13 +116,21 @@ def build_lm_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
     cfg, plan = spec.config, spec.plan
     shp = spec.shapes()[shape_name]
     seq, batch, kind = shp["seq"], shp["batch"], shp["step"]
-    sharder = make_sharder(mesh, plan)
+    meta = {"arch": spec.name, "shape": shape_name, "plan": plan.mode,
+            "seq": seq, "batch": batch}
+    schedule = None
+    if plan.mode == "dsp":
+        # planned switching schedule: single source of truth for every
+        # stage-boundary layout in the model forward
+        sp = mesh.shape.get("model", 1)
+        schedule = LM.dsp_schedule(cfg, sp, seq=seq, batch=batch)
+        meta["planned_switches"] = schedule.n_switches()
+        meta["planned_comm_bytes"] = schedule.per_device_bytes(sp)
+    sharder = make_sharder(mesh, plan, schedule=schedule)
     opt_cfg = opt_cfg or auto_opt_cfg(LM.param_counts(cfg)["total"])
 
     params_s = _abstract(lambda: LM.init_lm(jax.random.PRNGKey(0), cfg))
     pspecs = param_pspecs(params_s, plan, axis_sizes=dict(mesh.shape))
-    meta = {"arch": spec.name, "shape": shape_name, "plan": plan.mode,
-            "seq": seq, "batch": batch}
 
     if kind == "train":
         opt_s = _abstract(lambda p: init_opt_state(p, opt_cfg), params_s)
@@ -241,7 +249,16 @@ def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
     shp = spec.shapes()[shape_name]
     seq, batch, kind = shp["seq"], shp["batch"], shp["step"]
     s_dec = max(seq // 4, 128)
-    sharder = make_sharder(mesh, plan)
+    meta = {"arch": spec.name, "shape": shape_name, "plan": plan.mode,
+            "seq": seq, "batch": batch, "s_dec": s_dec}
+    schedule = None
+    if plan.mode == "dsp":
+        sp = mesh.shape.get("model", 1)
+        schedule = ED.dsp_schedule(cfg, sp, s_enc=seq, s_dec=s_dec,
+                                   batch=batch)
+        meta["planned_switches"] = schedule.n_switches()
+        meta["planned_comm_bytes"] = schedule.per_device_bytes(sp)
+    sharder = make_sharder(mesh, plan, schedule=schedule)
     opt_cfg = opt_cfg or OptConfig()
     dp = _dp(mesh)
     seq_ax = "model" if plan.mode == "dsp" else None
@@ -249,8 +266,6 @@ def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
     params_s = _abstract(lambda: ED.init_encdec(jax.random.PRNGKey(0), cfg))
     pspecs = param_pspecs(params_s, plan, axis_sizes=dict(mesh.shape),
                           stacked_prefixes=("enc_periods", "dec_periods"))
-    meta = {"arch": spec.name, "shape": shape_name, "plan": plan.mode,
-            "seq": seq, "batch": batch, "s_dec": s_dec}
 
     if kind in ("train", "prefill"):
         batch_s = {"feats": jax.ShapeDtypeStruct((batch, seq,
@@ -360,11 +375,18 @@ def build_t2d_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
         params, opt_state, om = apply_adamw(params, grads, opt_state, opt_cfg)
         return params, opt_state, {"loss": loss, **om}
 
+    meta = {"arch": spec.name, "shape": shape_name, "plan": mode,
+            "temporal": t_len, "spatial": s_len, "batch": batch}
+    if mode == "dsp":
+        sp = mesh.shape.get("model", 1)
+        psched = T2D.dsp_schedule(cfg, sp, t_len=t_len, s_len=s_len,
+                                  batch=batch)
+        meta["planned_switches"] = psched.schedule.n_switches()
+        meta["planned_comm_bytes"] = psched.schedule.per_device_bytes(sp)
     return Cell(spec.name, shape_name, "train", train_step,
                 (params_s, opt_s, batch_s),
                 (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),
-                {"arch": spec.name, "shape": shape_name, "plan": mode,
-                 "temporal": t_len, "spatial": s_len, "batch": batch},
+                meta,
                 out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
                                _metric_specs(mesh)))
 

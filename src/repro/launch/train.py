@@ -52,8 +52,8 @@ def main(argv=None):
     sharder = None
     if args.mesh:
         dp, mp = (int(x) for x in args.mesh.split(","))
-        mesh = jax.make_mesh((dp, mp), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((dp, mp), ("data", "model"))
         sharder = make_sharder(mesh, spec.plan)
 
     if spec.family == "lm":

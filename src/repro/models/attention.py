@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
 from repro.kernels.ops import flash_attention
 from repro.models import layers as L
 
@@ -180,15 +181,15 @@ def attention_sp(p, x, cfg: AttnConfig, *, sharder, backend: str = "pallas",
     if return_kv:   # decode-cache layout (B, Hkv, S, D), pre-replication
         kv_out = (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
 
-    sp = sharder.mesh.shape.get("model", 1) if sharder.mesh is not None else 1
-    # The head-switch (Ulysses/DSP-1D) layout needs heads % SP == 0.  When
-    # heads don't divide the axis (gemma2: 8 heads on 16), fall back to the
-    # kv-gather layout: Q/O stay *sequence*-sharded and the paper's gather
-    # primitive is applied to K/V only — cheap under GQA (K/V is Hkv/H of the
-    # activation) and free of any head-count constraint.
-    head_switch = (sharder.plan.mode in ("dsp", "tp")) and h % max(sp, 1) == 0
+    sp = sharder.sp_size
+    # The planned head-switch (Ulysses/DSP-1D) layout needs heads % SP == 0.
+    # When heads don't divide the axis (gemma2: 8 heads on 16), fall back to
+    # the kv-gather layout: Q/O stay *sequence*-sharded and the paper's
+    # gather primitive is applied to K/V only — cheap under GQA (K/V is
+    # Hkv/H of the activation) and free of any head-count constraint.
+    head_switch = sharder.wants_head_switch(h)
 
-    if head_switch and sharder.plan.mode in ("dsp", "tp") and hkv < sp:
+    if head_switch and hkv < sp:
         rep = (sp + hkv - 1) // hkv              # replicate KV heads to SP
         k = jnp.repeat(k, rep, axis=2)
         v = jnp.repeat(v, rep, axis=2)
@@ -313,7 +314,7 @@ def chunked_attention(q, k, v, cfg: AttnConfig, *, mesh, layout: str,
                                     backend=backend, chunk=chunk)
             return o.transpose(0, 2, 1, 3)
 
-        fn = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+        fn = compat.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
                            out_specs=spec, check_vma=False)
         return fn(q, k, v)
 
@@ -325,7 +326,7 @@ def chunked_attention(q, k, v, cfg: AttnConfig, *, mesh, layout: str,
                                        q_offset=0, backend=backend,
                                        chunk=chunk)
 
-        fn = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+        fn = compat.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
                            out_specs=spec, check_vma=False)
         return fn(q, k, v)
 
@@ -340,7 +341,7 @@ def chunked_attention(q, k, v, cfg: AttnConfig, *, mesh, layout: str,
                                        q_offset=idx * s_loc, backend="ref",
                                        chunk=chunk)
 
-        fn = jax.shard_map(body, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
+        fn = compat.shard_map(body, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
                            out_specs=qspec, check_vma=False)
         return fn(q, k, v)
 

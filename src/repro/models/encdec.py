@@ -19,6 +19,8 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import Stage, encdec_stages
+from repro.core.schedule import Schedule, plan_schedule
 from repro.models import layers as L
 from repro.models import attention as A
 from repro.parallel.partition import Sharder, ParallelPlan, make_sharder
@@ -44,6 +46,43 @@ class EncDecConfig:
         return A.AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
                             n_kv_heads=self.n_kv_heads,
                             head_dim=self.head_dim, rope=rope, bias=True)
+
+
+# ---------------------------------------------------------------------------
+# DSP stage declaration + planned switching schedule
+# ---------------------------------------------------------------------------
+
+def stages(cfg: EncDecConfig, *, s_enc: Optional[int] = None,
+           s_dec: Optional[int] = None, batch: Optional[int] = None):
+    """Declare the enc-dec stage graph on the logical (B, S, H·Dh) view:
+    channel-wise stages compute along dim 2, attention cores along dim 1.
+    Encoder stages carry S_enc-sized tensors, decoder stages S_dec-sized —
+    the byte asymmetry that makes the cost-aware DP the right solver."""
+    db = jnp.dtype(cfg.dtype).itemsize
+    return encdec_stages(cfg.n_enc_layers, cfg.n_dec_layers, s_enc=s_enc,
+                         s_dec=s_dec, batch=batch, d_model=cfg.d_model,
+                         dtype_bytes=db)
+
+
+def dsp_schedule(cfg: EncDecConfig, n: int, *, s_enc: Optional[int] = None,
+                 s_dec: Optional[int] = None,
+                 batch: Optional[int] = None) -> Schedule:
+    """Solve the switching plan over the full enc-dec stage graph (enter
+    sequence-sharded, exit sequence-sharded for the loss)."""
+    return plan_schedule(stages(cfg, s_enc=s_enc, s_dec=s_dec, batch=batch),
+                         (1, 2), n=max(n, 1), initial=1, final=1)
+
+
+def _with_planned_schedule(sharder, cfg: EncDecConfig,
+                           s_enc: Optional[int] = None,
+                           s_dec: Optional[int] = None,
+                           batch: Optional[int] = None):
+    if (sharder.mesh is None or sharder.plan.mode != "dsp"
+            or sharder.schedule is not None):
+        return sharder
+    return sharder.with_schedule(
+        dsp_schedule(cfg, sharder.sp_size, s_enc=s_enc, s_dec=s_dec,
+                     batch=batch))
 
 
 def _norm(cfg, p, x):
@@ -96,6 +135,8 @@ def encode(params, feats, cfg: EncDecConfig, *, sharder=None,
            fused_switch: bool = True):
     """feats: (B, S_enc, frontend_dim) -> (B, S_enc, d_model)."""
     sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
+    sharder = _with_planned_schedule(sharder, cfg, s_enc=feats.shape[1],
+                                     batch=feats.shape[0])
     x = L.patch_embed(params["frontend"], feats.astype(cfg.dtype))
     x = sharder.act3(x)
 
@@ -120,6 +161,8 @@ def decode(params, tokens, enc_out, cfg: EncDecConfig, *, sharder=None,
            fused_switch: bool = True):
     """tokens: (B, S_dec) -> final decoder hidden (B, S_dec, d_model)."""
     sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
+    sharder = _with_planned_schedule(sharder, cfg, s_dec=tokens.shape[1],
+                                     batch=tokens.shape[0])
     x = L.embed(params["embed"], tokens)
     x = sharder.act3(x)
 

@@ -10,7 +10,10 @@ size stay flat in depth, which matters when dry-running 88-layer models on
 
 Sharding is injected through a ``Sharder`` (repro.parallel): the model calls
 semantic layout hooks and never touches the mesh.  In DSP mode the
-hook-boundary layout changes are the paper's dynamic switches.
+hook-boundary layout changes are the paper's dynamic switches, and WHICH dim
+each stage shards comes from the planned switching schedule
+(``stages``/``dsp_schedule`` -> ``core.plan`` solver), attached to the
+sharder at the top of each forward.
 """
 from __future__ import annotations
 
@@ -22,6 +25,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
+from repro.core.plan import Stage
+from repro.core.schedule import Schedule, plan_schedule
 from repro.models import layers as L
 from repro.models import attention as A
 from repro.models import moe as M
@@ -125,6 +131,59 @@ class LMConfig:
         period = len(self.period_specs())
         assert self.n_layers % period == 0, (self.n_layers, period)
         return self.n_layers // period
+
+
+# ---------------------------------------------------------------------------
+# DSP stage declaration + planned switching schedule
+# ---------------------------------------------------------------------------
+
+def stages(cfg: LMConfig, *, seq: Optional[int] = None,
+           batch: Optional[int] = None) -> List[Stage]:
+    """Declare the model's stage sequence on the logical (B, S, H·Dh) view
+    for the switching planner: channel-wise stages (projections, norms, FFN,
+    MoE) compute along dim 2, the mixer cores (attention softmax / SSD scan)
+    along dim 1 — DSP-1D, where the "second sequence dim" is the head or
+    channel axis.  With extents given, stages carry global shapes so the
+    planner prices transitions in bytes."""
+    specs = cfg.period_specs()
+    shape = (batch, seq, cfg.d_model) if None not in (seq, batch) else None
+    db = jnp.dtype(cfg.dtype).itemsize
+    out: List[Stage] = []
+    for layer in range(cfg.n_layers):
+        spec = specs[layer % len(specs)]
+        out.append(Stage(frozenset({2}), f"L{layer}.proj", shape, db))
+        out.append(Stage(frozenset({1}), f"L{layer}.{spec.mixer}", shape, db))
+        if spec.ffn != "none":
+            out.append(Stage(frozenset({2}), f"L{layer}.{spec.ffn}", shape,
+                             db))
+    return out
+
+
+def stage_period(cfg: LMConfig) -> int:
+    """Stages per scanned layer period."""
+    return sum(2 if s.ffn == "none" else 3 for s in cfg.period_specs())
+
+
+def dsp_schedule(cfg: LMConfig, n: int, *, seq: Optional[int] = None,
+                 batch: Optional[int] = None) -> Schedule:
+    """Solve the switching plan (enter sequence-sharded from the dataloader
+    split, return to it for the loss) and validate it is scan-periodic."""
+    sched = plan_schedule(stages(cfg, seq=seq, batch=batch), (1, 2),
+                          n=max(n, 1), initial=1, final=1)
+    sched.periodic(stage_period(cfg))          # scanned layers: steady state
+    return sched
+
+
+def _with_planned_schedule(sharder: Sharder, cfg: LMConfig,
+                           seq: Optional[int] = None,
+                           batch: Optional[int] = None) -> Sharder:
+    """Attach the planned schedule when running DSP with a mesh and none was
+    provided — the plan, not the model, decides the stage layouts."""
+    if (sharder.mesh is None or sharder.plan.mode != "dsp"
+            or sharder.schedule is not None):
+        return sharder
+    return sharder.with_schedule(
+        dsp_schedule(cfg, sharder.sp_size, seq=seq, batch=batch))
 
 
 # ---------------------------------------------------------------------------
@@ -294,13 +353,13 @@ def sharded_embed(params, tokens, cfg: LMConfig, sharder: Sharder):
             return tbl_c, acc
 
         acc0 = jnp.zeros(tok.shape + (d,), tbl.dtype)
-        acc0 = jax.lax.pvary(acc0, ("model",))
+        acc0 = compat.pvary(acc0, ("model",))
         _, acc = jax.lax.fori_loop(0, sp, body, (tbl, acc0))
         return acc
 
     tok_spec = P(dp, "model") if seq_shard else P(dp, None)
     out_spec = P(dp, "model", None) if seq_shard else P(dp, None, None)
-    fn = jax.shard_map(local, mesh=mesh,
+    fn = compat.shard_map(local, mesh=mesh,
                        in_specs=(P("model", None), tok_spec),
                        out_specs=out_spec, check_vma=False)
     x = fn(table, tokens)
@@ -337,6 +396,8 @@ def forward(params, tokens, cfg: LMConfig, *, sharder: Optional[Sharder] = None,
     first ``frontend_tokens`` embedding positions (VLM stub frontend).
     """
     sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
+    sharder = _with_planned_schedule(sharder, cfg, seq=tokens.shape[1],
+                                     batch=tokens.shape[0])
     specs = cfg.period_specs()
     x = sharded_embed(params, tokens, cfg, sharder)
     if cfg.frontend_dim and extra and "patch_embeds" in extra:
@@ -406,13 +467,9 @@ def chunked_xent(x, table, labels, cfg: LMConfig, *, chunk: int = 512,
 
     xs = x.reshape(b, n, chunk, d).swapaxes(0, 1)
     ls = labels.reshape(b, n, chunk).swapaxes(0, 1)
-    if sharder is not None and sharder.mesh is not None and sp > 1:
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        dp = sharder.dp if len(sharder.dp) > 1 else sharder.dp[0]
-        xs = jax.lax.with_sharding_constraint(
-            xs, NamedSharding(sharder.mesh, P("model", dp, None, None)))
-        ls = jax.lax.with_sharding_constraint(
-            ls, NamedSharding(sharder.mesh, P("model", dp, None)))
+    if sharder is not None:
+        xs = sharder.xent_chunks(xs)
+        ls = sharder.xent_chunks(ls)
     total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
     return total / (b * s)
 
@@ -564,6 +621,8 @@ def forward_prefill(params, tokens, cfg: LMConfig, *,
     """Full-sequence prefill: returns (last-position logits, caches with
     pos = S).  Cache length == prompt length (the decode cells then append)."""
     sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
+    sharder = _with_planned_schedule(sharder, cfg, seq=tokens.shape[1],
+                                     batch=tokens.shape[0])
     specs = cfg.period_specs()
     x = sharded_embed(params, tokens, cfg, sharder)
     if cfg.frontend_dim and extra and "patch_embeds" in extra:

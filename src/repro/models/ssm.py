@@ -94,32 +94,23 @@ def ssm_block(p, x, cfg: SSMConfig, *, backend: str = "pallas",
     b, l, _ = x.shape
     di, g, s, h, ph = (cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads,
                        cfg.head_dim)
-
-    def c3(t, *spec):
-        if sharder is None or sharder.mesh is None or \
-                sharder.plan.mode != "dsp":
-            return t
-        import jax as _jax
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        dp = sharder.dp if len(sharder.dp) > 1 else sharder.dp[0]
-        table = {"dp": dp, "sp": "model", "none": None}
-        dims = [table[d] for d in spec]
-        return _jax.lax.with_sharding_constraint(
-            t, NamedSharding(sharder.mesh, P(*dims)))
+    if sharder is None:
+        from repro.parallel.partition import ParallelPlan, make_sharder
+        sharder = make_sharder(None, ParallelPlan(mode="none"))
 
     zxbcdt = L.linear(p["in_proj"], x)
     z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
     xbc = _causal_conv(cfg, p, xbc_raw)
     xs_flat = xbc[..., :di]
-    # DSP switch: seq-shard -> channel-shard (one all-to-all)
-    xs_flat = c3(xs_flat, "dp", "none", "sp")
+    # planned DSP switch: seq-shard -> channel-shard (one all-to-all)
+    xs_flat = sharder.channels3(xs_flat)
     xs = xs_flat.reshape(b, l, h, ph)
     bmat = xbc[..., di:di + g * s].reshape(b, l, g, s)
     cmat = xbc[..., di + g * s:].reshape(b, l, g, s)
-    bmat = c3(bmat, "dp", "none", "none", "none")     # replicated groups
-    cmat = c3(cmat, "dp", "none", "none", "none")
+    bmat = sharder.replicated(bmat)                   # replicated groups
+    cmat = sharder.replicated(cmat)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
-    dt = c3(dt, "dp", "none", "sp")
+    dt = sharder.channels3(dt)
     a = -jnp.exp(p["a_log"])
 
     cache = None
@@ -133,9 +124,9 @@ def ssm_block(p, x, cfg: SSMConfig, *, backend: str = "pallas",
                      chunk=cfg.chunk, backend=backend)
 
     y = y.reshape(b, l, di)
-    y = c3(y, "dp", "none", "sp")
-    # DSP switch back: channel-shard -> seq-shard
-    y = c3(y, "dp", "sp", "none")
+    y = sharder.channels3(y)
+    # planned DSP switch back: channel-shard -> seq-shard
+    y = sharder.scan_out3(y)
     y = y * jax.nn.silu(z)
     y = L.rms_norm(p["norm"], y)
     out = L.linear(p["out_proj"], y)

@@ -21,8 +21,11 @@ Parallel modes (paper §4, Appendix A.2), all sharing one parameter pytree:
              (collective_permute) => 2M per layer.
 
 The explicit (shard_map) implementations live in ``make_spmd_forward``; the
-compiler path (``forward`` + Sharder constraints) expresses DSP as layout
-constraints and is what the production launcher lowers.
+compiler path (``forward``) expresses DSP as layout constraints and is what
+the production launcher lowers.  BOTH DSP paths execute the SAME planned
+switching schedule (``stages``/``dsp_schedule`` -> ``core.plan`` solver)
+through the ``core.schedule.ScheduleExecutor`` — this module declares stages
+and never issues a switch or stage-boundary constraint itself.
 """
 from __future__ import annotations
 
@@ -35,10 +38,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import dsp as dsp_core
+from repro.core import compat
 from repro.core import ring as ring_core
 from repro.core import ulysses as ulysses_core
 from repro.core import megatron_sp as megatron_core
+from repro.core.layout import from_mesh
+from repro.core.plan import Stage
+from repro.core.schedule import (PeriodicSchedule, ScheduleExecutor,
+                                 plan_schedule)
 from repro.kernels.ops import flash_attention
 from repro.models import layers as L
 
@@ -112,6 +119,51 @@ def t2d_param_count(cfg: T2DConfig) -> int:
     if cfg.modulate:
         per_block += d * 6 * d
     return cfg.n_layers * per_block + 2 * cfg.in_dim * d + d * d
+
+
+# ---------------------------------------------------------------------------
+# DSP stage declaration + planned switching schedule
+# ---------------------------------------------------------------------------
+
+def stages(cfg: T2DConfig, *, t_len: Optional[int] = None,
+           s_len: Optional[int] = None, batch: Optional[int] = None):
+    """Declare the model's stage sequence for the switching planner, in
+    EXECUTION order: per layer one spatial block (computes along S = dim 2,
+    so the shard must sit on T) then one temporal block (computes along
+    T = dim 1).  Tensors are (B, T, S, C); with extents given, each stage
+    carries the global activation shape so the planner prices transitions in
+    paper-Table-2 bytes."""
+    shape = None
+    if None not in (t_len, s_len, batch):
+        shape = (batch, t_len, s_len, cfg.d_model)
+    db = jnp.dtype(cfg.dtype).itemsize
+    out = []
+    for i in range(cfg.n_layers // 2):
+        out.append(Stage(frozenset({2}), f"layer{i}.spatial", shape, db))
+        out.append(Stage(frozenset({1}), f"layer{i}.temporal", shape, db))
+    return out
+
+
+def dsp_schedule(cfg: T2DConfig, n: int, *, t_len: Optional[int] = None,
+                 s_len: Optional[int] = None, batch: Optional[int] = None,
+                 initial: int = 1) -> PeriodicSchedule:
+    """Solve the switching plan for this model (enter sharded on T, return
+    to T for the loss/head) and validate it is scan-periodic with the
+    2-stage layer period.
+
+    Both dims stay candidates regardless of divisibility: with only two
+    sequence dims and each stage forbidding one, excluding either leaves
+    some stage infeasible — non-divisible extents are instead handled
+    downstream (the auto path pads; the explicit path rejects them in
+    ``dynamic_switch``)."""
+    sched = plan_schedule(
+        stages(cfg, t_len=t_len, s_len=s_len, batch=batch), [1, 2],
+        n=max(n, 1), initial=initial, final=initial)
+    return sched.periodic(2)
+
+
+# in-period stage index by the block's compute axis (spatial computes S=2)
+_STAGE_OF_AXIS = {2: 0, 1: 1}
 
 
 # ---------------------------------------------------------------------------
@@ -229,7 +281,7 @@ def _megatron_block(p, x, cfg: T2DConfig, *, axis: int, t_emb=None,
     sequence, compute attention/MLP with locally-sliced heads / hidden
     (tensor parallel), ReduceScatter partial outputs back.  4 collectives,
     volume 4M per block (8M per 2-block layer)."""
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     b, t_loc, s, c = x.shape
     h_heads, dh = cfg.n_heads, cfg.dh
@@ -302,39 +354,27 @@ def forward(params, x, t, cfg: T2DConfig, *, mesh: Optional[Mesh] = None,
             mode: str = "dsp", backend: str = "pallas", remat: bool = True,
             remat_group: int = 2, t_offset=0, s_offset=0):
     """Compiler-path forward.  x: (B, T, S, C_in) global; with a mesh given,
-    DSP layout constraints shard T/S over the ``model`` axis and batch over
-    the data axes; XLA lowers each stage-boundary constraint change to one
-    all-to-all (the dynamic switch)."""
-    dp: Any = None
-    if mesh is not None:
-        dp_axes = tuple(a for a in mesh.axis_names if a != "model")
-        dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
-
-    def c(y, spec_t, spec_s):
-        if mesh is None or mode != "dsp":
-            return y
-        return jax.lax.with_sharding_constraint(
-            y, NamedSharding(mesh, P(dp, spec_t, spec_s, None)))
-
+    the planned DSP schedule (``dsp_schedule``) drives every stage-boundary
+    layout change through the auto-backend ScheduleExecutor; XLA lowers each
+    boundary constraint change to one all-to-all (the dynamic switch)."""
+    ex = ScheduleExecutor.null()
     fold_hook = None
     stage_hook = None
     attn_impl = None
     if mesh is not None and mode == "dsp":
-        dp_axes = tuple(a for a in mesh.axis_names if a != "model")
-        comp = P((*dp_axes, "model"), None, None)
+        ctx = from_mesh(mesh)
+        psched = dsp_schedule(cfg, ctx.sp_size, t_len=x.shape[1],
+                              s_len=x.shape[2], batch=x.shape[0])
+        ex = ScheduleExecutor(psched, backend="auto", ctx=ctx)
 
         def fold_hook(y):
             # folded (B*other, L, C): batch major over dp, sharded seq dim
             # minor over model — composite sharding preserved
-            return jax.lax.with_sharding_constraint(
-                y, NamedSharding(mesh, comp))
+            return ex.fold_anchor(y)
 
         def stage_hook(y, axis):
-            # spatial stage (axis=2): T sharded; temporal (axis=1): S sharded
-            spec = (P(dp, "model", None, None) if axis == 2
-                    else P(dp, None, "model", None))
-            return jax.lax.with_sharding_constraint(
-                y, NamedSharding(mesh, spec))
+            # re-assert the planned stage layout on intra-block tensors
+            return ex.anchor(y, _STAGE_OF_AXIS[axis])
 
         from repro.models.attention import chunked_attention, AttnConfig
         acfg = AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
@@ -347,24 +387,24 @@ def forward(params, x, t, cfg: T2DConfig, *, mesh: Optional[Mesh] = None,
 
     x = L.patch_embed(params["embed"], x)
     x = add_pos_embed(x, cfg, t_offset, s_offset)
-    x = c(x, "model", None)                       # enter sharded on T
+    x = ex.enter(x)                   # planned entry (dataloader split on T)
     t_emb = None
     if cfg.modulate and t is not None:
         t_emb = L.linear(params["t_proj"],
                          L.timestep_embedding(t, cfg.d_model).astype(x.dtype))
 
     def layer_body(xc, lp):
-        # spatial stage: computes over S — keep T sharded
+        # spatial stage: computes over S — planned shard stays on T
         xc = t2d_block(lp["spatial"], xc, cfg, axis=2, t_emb=t_emb,
                        backend=backend, attn_impl=attn_impl,
                        fold_hook=fold_hook, stage_hook=stage_hook)
-        # dynamic switch T -> S (one all-to-all under SPMD)
-        xc = c(xc, None, "model")
+        # planned boundary: dynamic switch T -> S (one all-to-all)
+        xc = ex.boundary(xc, 1)
         xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
                        backend=backend, attn_impl=attn_impl,
                        fold_hook=fold_hook, stage_hook=stage_hook)
-        # dynamic switch S -> T
-        xc = c(xc, "model", None)
+        # planned wrap-around: dynamic switch S -> T
+        xc = ex.wrap(xc)
         return xc, None
 
     # hierarchical remat: scan over GROUPS of layer pairs so only one
@@ -385,6 +425,7 @@ def forward(params, x, t, cfg: T2DConfig, *, mesh: Optional[Mesh] = None,
     body = jax.checkpoint(group_body, prevent_cse=False) if remat else group_body
     from repro.models.flags import scan_or_unroll
     x, _ = scan_or_unroll(body, x, grouped)
+    x = ex.exit(x)                    # planned final layout (loss/head on T)
     x = L.rms_norm(params["final_norm"], x)
     return L.linear(params["head"], x)
 
@@ -425,13 +466,20 @@ def make_spmd_forward(cfg: T2DConfig, mesh: Mesh, *, mode: str = "dsp",
                              L.timestep_embedding(t, cfg.d_model).astype(x.dtype))
 
         if mode == "dsp":
+            # the SAME planned schedule as the auto path, explicit backend:
+            # transitions are the paper's collectives inside shard_map
+            psched = dsp_schedule(cfg, n, t_len=x.shape[1] * n,
+                                  s_len=x.shape[2], batch=x.shape[0])
+            ex = ScheduleExecutor(psched, backend="explicit",
+                                  axis_name=axis_name)
+
             def body(xc, lp):
                 xc = t2d_block(lp["spatial"], xc, cfg, axis=2, t_emb=t_emb,
                                backend=backend)
-                xc = dsp_core.dynamic_switch(xc, 1, 2, axis_name)   # T -> S
+                xc = ex.boundary(xc, 1)              # planned switch T -> S
                 xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
                                backend=backend)
-                xc = dsp_core.dynamic_switch(xc, 2, 1, axis_name)   # S -> T
+                xc = ex.wrap(xc)                     # planned switch S -> T
                 return xc, None
         elif mode in ("ulysses", "ulysses_fused"):
             ua = (ulysses_core.ulysses_attention if mode == "ulysses"
@@ -478,7 +526,7 @@ def make_spmd_forward(cfg: T2DConfig, mesh: Mesh, *, mode: str = "dsp",
 
     batch_spec = P(dp, axis_name, None, None)    # sharded on T (dim 1)
     t_spec = P(dp) if dp is not None else P()
-    fwd = jax.shard_map(
+    fwd = compat.shard_map(
         local_fwd, mesh=mesh,
         in_specs=(P(), batch_spec, t_spec),
         out_specs=batch_spec,

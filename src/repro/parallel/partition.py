@@ -13,11 +13,20 @@ layouts are applied through a ``Sharder`` — the model code calls semantic
 hooks (``act3``, ``heads``, ``kv_cache``, ...) and stays mesh-agnostic;
 in DSP mode consecutive hooks whose layouts differ *are* the paper's dynamic
 switch and lower to a single all-to-all.
+
+The hook layouts are PLAN-DRIVEN: ``make_sharder`` accepts the solved
+switching schedule (``core.schedule.Schedule`` over the model's logical
+(B, S, H·Dh) stage view) and derives which dim the residual/channel stages
+and the mixer (attention / scan) stages shard.  Without a schedule the
+legacy mode-based defaults apply (dsp/tp: residual seq-sharded, mixer
+head-sharded), which is exactly what the planner derives for these
+alternating-stage models — the schedule is the source of truth, the
+defaults its fixed point.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -193,12 +202,36 @@ def param_pspecs(params, plan: ParallelPlan, *,
 @dataclasses.dataclass(frozen=True)
 class Sharder:
     """Semantic activation-layout hooks.  ``mesh=None`` (unit tests, single
-    device) makes every hook the identity."""
+    device) makes every hook the identity.
+
+    ``schedule`` is the planned switching schedule on the model's logical
+    (B, S, H·Dh) stage view; ``resid_dim``/``mixer_dim`` cache the planned
+    shard dim of the residual/channel stages (dim 1 = sequence) and of the
+    mixer stages (dim 2 = heads/channels) — consecutive hooks whose planned
+    dims differ are the paper's dynamic switches."""
 
     mesh: Optional[Mesh]
     plan: ParallelPlan
     dp: Tuple[str, ...] = ("data",)
     sp: str = "model"
+    schedule: Optional[Any] = None
+    resid_dim: Optional[int] = None
+    mixer_dim: Optional[int] = None
+
+    def with_schedule(self, schedule) -> "Sharder":
+        resid, mixer = _stage_dims(self.plan, schedule)
+        return dataclasses.replace(self, schedule=schedule,
+                                   resid_dim=resid, mixer_dim=mixer)
+
+    @property
+    def sp_size(self) -> int:
+        return self.mesh.shape.get(self.sp, 1) if self.mesh is not None else 1
+
+    def wants_head_switch(self, n_heads: int) -> bool:
+        """True when the planned mixer layout is head-sharded and the head
+        count divides the SP axis (attention_sp falls back to the kv-gather
+        layout otherwise)."""
+        return self.mixer_dim == 2 and n_heads % max(self.sp_size, 1) == 0
 
     def _c(self, x, *spec):
         if self.mesh is None:
@@ -209,25 +242,32 @@ class Sharder:
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(self.mesh, P(*dims)))
 
-    # -- (B, S, C) residual stream: sequence-sharded in BOTH dsp and tp
-    # (Megatron-SP keeps inter-block activations seq-sharded too; this is
-    # what bounds the 88-layer scan carry) -------------------------------------
+    # -- (B, S, C) residual stream: the planned resid-stage layout.  The
+    # planner keeps it sequence-sharded in BOTH dsp and tp (Megatron-SP keeps
+    # inter-block activations seq-sharded too; this is what bounds the
+    # 88-layer scan carry) -----------------------------------------------------
     def act3(self, x):
-        if self.plan.mode in ("dsp", "tp"):
+        if self.resid_dim == 1:
             return self._c(x, "__dp__", "__sp__", None)     # sequence-sharded
+        if self.resid_dim == 2:
+            return self._c(x, "__dp__", None, "__sp__")     # channel-sharded
         return self._c(x, "__dp__", None, None)
 
-    # -- (B, H, S, D) attention heads (post-switch layout) --------------------
+    # -- (B, H, S, D) attention heads: the planned mixer-stage layout ----------
     def heads(self, x):
-        if self.plan.mode in ("dsp", "tp"):
+        if self.mixer_dim == 2:
             return self._c(x, "__dp__", "__sp__", None, None)
+        if self.mixer_dim == 1:
+            return self._c(x, "__dp__", None, "__sp__", None)
         return self._c(x, "__dp__", None, None, None)
 
     # -- (3|2, B, H, S, D) stacked q/k/v: ONE constraint -> ONE all-to-all
     # (the fused DSP switch; beyond-paper optimisation for 1-D archs) ----------
     def heads_stacked(self, x):
-        if self.plan.mode in ("dsp", "tp"):
+        if self.mixer_dim == 2:
             return self._c(x, None, "__dp__", "__sp__", None, None)
+        if self.mixer_dim == 1:
+            return self._c(x, None, "__dp__", None, "__sp__", None)
         return self._c(x, None, "__dp__", None, None, None)
 
     # -- (B, H, S, D) q/out kept sequence-sharded (kv-gather attention path:
@@ -245,16 +285,45 @@ class Sharder:
     # -- (B, S, F) MLP hidden -------------------------------------------------
     def ffn_hidden(self, x):
         if self.plan.mode == "dsp":
+            if self.resid_dim == 2:
+                return self._c(x, "__dp__", None, "__sp__")
             return self._c(x, "__dp__", "__sp__", None)
         if self.plan.mode == "tp":
             return self._c(x, "__dp__", None, "__sp__")
         return self._c(x, "__dp__", None, None)
 
-    # -- (B, L, H, P) ssm scan inputs: switch seq-shard -> head-shard ---------
+    # -- (B, L, H, P) ssm scan inputs: planned mixer layout (switch
+    # seq-shard -> head-shard) ------------------------------------------------
     def ssm_heads(self, x):
-        if self.plan.mode == "dsp":
+        if self.plan.mode == "dsp" and self.mixer_dim == 2:
             return self._c(x, "__dp__", None, "__sp__", None)
         return self._c(x, "__dp__", None, None, None)
+
+    # -- (B, L, D) flat ssm scan operands: planned mixer layout on the flat
+    # channel dim (the (H, P) reshape keeps an H-major representable shard).
+    # Applies in tp mode too: the scan is sequential along L, so L must be
+    # LOCAL — channel-sharding is the only parallel layout for it, and it is
+    # exactly the input layout the row-parallel out_proj wants -----------------
+    def channels3(self, x):
+        if self.plan.mode not in ("dsp", "tp"):
+            return x
+        if self.mixer_dim == 2:
+            return self._c(x, "__dp__", None, "__sp__")
+        return self._c(x, "__dp__", None, None)
+
+    # -- (B, L, D) scan output: planned switch back to the resid-stage layout
+    # (dsp only — tp never moved the activation shard into the scan) -----------
+    def scan_out3(self, x):
+        if self.plan.mode != "dsp":
+            return x
+        return self.act3(x)
+
+    # -- replicated-by-plan small tensors (SSM B/C groups: G may undershoot
+    # the SP degree and they are ~d_state/d_inner of the activation) -----------
+    def replicated(self, x):
+        if self.plan.mode not in ("dsp", "tp"):
+            return x
+        return self._c(x, "__dp__", *([None] * (x.ndim - 1)))
 
     # -- (B, H, 1, D) decode q/k/v: replicated over model (tiny) so the
     # attention computes against the LOCAL cache-sequence shard and merges
@@ -275,6 +344,14 @@ class Sharder:
             return self._c(x, "__dp__", "__sp__", None, None)
         return self._c(x, "__dp__", None, None, None)
 
+    # -- (n_chunks, B, chunk, ...) xent chunk-scan operands: the chunked loss
+    # reshapes the sequence-sharded x so the shard stays the MAJOR chunk
+    # factor (scanned dim over sp) ---------------------------------------------
+    def xent_chunks(self, x):
+        if self.sp_size <= 1:
+            return x
+        return self._c(x, "__sp__", "__dp__", *([None] * (x.ndim - 2)))
+
     # -- (B, S, V) logits -------------------------------------------------------
     def logits(self, x):
         if self.plan.shard_vocab:
@@ -284,8 +361,48 @@ class Sharder:
         return self._c(x, "__dp__", None, None)
 
 
-def make_sharder(mesh: Optional[Mesh], plan: ParallelPlan) -> Sharder:
+def _stage_dims(plan: ParallelPlan, schedule) -> Tuple[Optional[int],
+                                                       Optional[int]]:
+    """Planned (resid_dim, mixer_dim) of the logical (B, S, H·Dh) stage view.
+
+    Mixer stages compute along the sequence (dim 1 in ``compute_dims``);
+    everything else is a residual/channel stage.  Without a schedule the
+    mode-based defaults apply — identical to what the planner derives for
+    the alternating stage graphs of the models in this repo.
+
+    The hook mechanism executes ONE layout per stage class, so a plan that
+    assigns different dims to same-class stages cannot be expressed through
+    it — that is rejected loudly (a future per-stage executor path is the
+    fix, not a silent last-wins collapse)."""
+    if schedule is not None:
+        resid = mixer = None
+        for st, d in zip(schedule.stages, schedule.dims):
+            if 1 in st.compute_dims:
+                if mixer is not None and mixer != d:
+                    raise ValueError(
+                        f"non-uniform plan: mixer stage {st.name!r} shards "
+                        f"dim {d}, earlier mixer stages shard {mixer}; the "
+                        f"Sharder hook path needs one layout per stage class")
+                mixer = d
+            else:
+                if resid is not None and resid != d:
+                    raise ValueError(
+                        f"non-uniform plan: stage {st.name!r} shards dim "
+                        f"{d}, earlier resid stages shard {resid}; the "
+                        f"Sharder hook path needs one layout per stage class")
+                resid = d
+        return resid, mixer
+    if plan.mode in ("dsp", "tp"):
+        return 1, 2
+    return None, None
+
+
+def make_sharder(mesh: Optional[Mesh], plan: ParallelPlan,
+                 schedule=None) -> Sharder:
+    resid, mixer = _stage_dims(plan, schedule)
     if mesh is None:
-        return Sharder(mesh=None, plan=plan)
+        return Sharder(mesh=None, plan=plan, schedule=schedule,
+                       resid_dim=resid, mixer_dim=mixer)
     dp = tuple(a for a in mesh.axis_names if a != "model")
-    return Sharder(mesh=mesh, plan=plan, dp=dp, sp="model")
+    return Sharder(mesh=mesh, plan=plan, dp=dp, sp="model",
+                   schedule=schedule, resid_dim=resid, mixer_dim=mixer)

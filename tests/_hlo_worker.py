@@ -1,0 +1,72 @@
+"""Subprocess worker for tests/test_hlo_collectives.py.
+
+Runs with XLA_FLAGS=--xla_force_host_platform_device_count=8; compiles the
+transformer2d DSP forward through BOTH executor backends (auto constraints
+under jit, explicit collectives inside shard_map) plus a bare ``split``, and
+prints one JSON line with the parsed HLO collective counts next to the
+planned counts from the schedule executor.
+"""
+import json
+import sys
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis.roofline import parse_data_collectives
+    from repro.core import compat
+    from repro.core.schedule import ScheduleExecutor
+    from repro.models.transformer2d import (T2DConfig, dsp_schedule, forward,
+                                            init_t2d, make_spmd_forward)
+
+    cfg = T2DConfig(name="hlo", n_layers=4, d_model=64, n_heads=4, d_ff=128,
+                    in_dim=16, modulate=False, dtype=jnp.float32)
+    b, t, s = 2, 8, 16
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
+    params = init_t2d(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, s, cfg.in_dim))
+    tt = jnp.zeros((b,))
+
+    # the planned schedule both backends execute
+    psched = dsp_schedule(cfg, mesh.shape["model"], t_len=t, s_len=s, batch=b)
+    ex = ScheduleExecutor(psched, backend="explicit")
+    planned = ex.expected_collectives(cfg.n_layers // 2)
+
+    def counts(hlo_text):
+        # data-moving collectives only: scalar-constant broadcast re-tiling
+        # artifacts are excluded (see parse_data_collectives)
+        st = parse_data_collectives(hlo_text)
+        return {k: int(v) for k, v in st.by_kind_count.items()}
+
+    # auto backend: layout constraints under jit
+    auto_fn = jax.jit(lambda p, xx, ttt: forward(p, xx, ttt, cfg, mesh=mesh,
+                                                 mode="dsp", backend="ref",
+                                                 remat=False))
+    auto = counts(auto_fn.lower(params, x, tt).compile().as_text())
+
+    # explicit backend: collectives inside shard_map
+    exp_fn = jax.jit(make_spmd_forward(cfg, mesh, mode="dsp", backend="ref"))
+    explicit = counts(exp_fn.lower(params, x, tt).compile().as_text())
+
+    # split is communication-free (paper Table 2): a shard_map body that only
+    # splits a replicated tensor must compile to ZERO collectives
+    from repro.core.dsp import split as dsp_split
+    split_fn = jax.jit(compat.shard_map(
+        lambda y: dsp_split(y, 1), mesh=mesh,
+        in_specs=P(None, None), out_specs=P(None, "model")))
+    split_counts = counts(split_fn.lower(
+        jnp.zeros((4, 8), jnp.float32)).compile().as_text())
+
+    print(json.dumps({
+        "planned": planned,
+        "auto": auto,
+        "explicit": explicit,
+        "split": split_counts,
+        "n_periods": cfg.n_layers // 2,
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -11,9 +11,8 @@ import numpy as np
 
 
 def _mesh(shape, axes):
-    import jax
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro.core import compat
+    return compat.make_mesh(shape, axes)
 
 
 def scenario_dsp_primitives():
@@ -28,8 +27,9 @@ def scenario_dsp_primitives():
         z = dynamic_switch(y, 2, 1)
         return split(gather(z, 1), 1)
 
-    f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(None, "model"),
-                              out_specs=P(None, "model")))
+    from repro.core import compat
+    f = jax.jit(compat.shard_map(body, mesh=mesh, in_specs=P(None, "model"),
+                                 out_specs=P(None, "model")))
     assert np.allclose(f(x), x)
 
     # switch changes local shapes as Table 2 prescribes
@@ -37,8 +37,8 @@ def scenario_dsp_primitives():
         y = dynamic_switch(x, 1, 2)
         return jnp.asarray(y.shape)
 
-    g = jax.jit(jax.shard_map(lambda x: probe(x), mesh=mesh,
-                              in_specs=P(None, "model"), out_specs=P(None)))
+    g = jax.jit(compat.shard_map(lambda x: probe(x), mesh=mesh,
+                                 in_specs=P(None, "model"), out_specs=P(None)))
     local = np.asarray(g(x))
     assert tuple(local) == (2, 8, 2, 6)          # T restored, S divided
 
@@ -188,8 +188,9 @@ def scenario_grad_allreduce_compression():
         deq = dequantize_int8(q, scale)
         return jax.lax.pmean(deq, "pod")
 
-    f = jax.jit(jax.shard_map(grad_allreduce, mesh=mesh, in_specs=P("pod"),
-                              out_specs=P("pod")))
+    from repro.core import compat
+    f = jax.jit(compat.shard_map(grad_allreduce, mesh=mesh, in_specs=P("pod"),
+                                 out_specs=P("pod")))
     out = f(w)
     want = jnp.broadcast_to(w.mean(0), w.shape)
     err = float(jnp.abs(out - want).max())

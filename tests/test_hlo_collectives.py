@@ -1,0 +1,62 @@
+"""The compiled-HLO contract of the plan-driven executor (referenced by
+core/dsp.py): for the SAME planned schedule, the auto path (sharding
+constraints under jit) and the explicit path (collectives inside shard_map)
+must both compile to EXACTLY one all-to-all per planned switch, and the
+``split`` primitive to zero collectives.
+
+Runs the compile in a subprocess with 8 simulated CPU devices so the main
+pytest process keeps its 1-device default (same pattern as
+tests/test_multidevice.py).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+@pytest.fixture(scope="module")
+def hlo_counts():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_hlo_worker.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"HLO worker failed:\nSTDOUT:\n{proc.stdout}\n"
+        f"STDERR:\n{proc.stderr[-4000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_planned_switch_count_is_table3(hlo_counts):
+    # 2 switches per layer pair (paper §4.1 / Table 3), nothing else
+    planned = hlo_counts["planned"]
+    assert planned == {"all-to-all": 2 * hlo_counts["n_periods"]}
+
+
+def test_auto_path_matches_plan(hlo_counts):
+    """XLA SPMD must lower each planned switch to exactly one all-to-all."""
+    auto = hlo_counts["auto"]
+    planned = hlo_counts["planned"]
+    assert auto.get("all-to-all", 0) == planned["all-to-all"], hlo_counts
+    # no stray gathers from the constraint path
+    assert auto.get("all-gather", 0) == 0, hlo_counts
+
+
+def test_explicit_path_matches_plan(hlo_counts):
+    """The explicit backend issues the collectives itself — count must equal
+    the SAME plan the auto path executed (one executor, two backends)."""
+    explicit = hlo_counts["explicit"]
+    planned = hlo_counts["planned"]
+    assert explicit.get("all-to-all", 0) == planned["all-to-all"], hlo_counts
+    assert explicit.get("all-gather", 0) == 0, hlo_counts
+
+
+def test_split_is_communication_free(hlo_counts):
+    """Paper Table 2: s_hat -> s_i is a local slice — zero collectives."""
+    assert hlo_counts["split"] == {}, hlo_counts

@@ -1,9 +1,15 @@
-"""Optimizer + gradient-compression tests (unit + hypothesis properties)."""
+"""Optimizer + gradient-compression tests (unit + hypothesis properties).
+
+``hypothesis`` is an optional dev dependency (see requirements.txt); the
+importorskip guard keeps the suite collectable on environments without it.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.optim.adamw import (OptConfig, apply_adamw, clip_by_global_norm,

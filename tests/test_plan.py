@@ -1,13 +1,23 @@
 """Property tests (hypothesis) for the DSP layout algebra, switch planner,
-and communication-volume model."""
-import hypothesis.strategies as st
+and communication-volume model.
+
+``hypothesis`` is an optional dev dependency (see requirements.txt); the
+importorskip guard keeps the suite collectable on environments without it —
+the hypothesis-free planner/executor tests live in tests/test_schedule.py
+and run everywhere.
+"""
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.dsp import comm_volume_bytes
 from repro.core.layout import SeqLayout, local_shape
-from repro.core.plan import (Stage, brute_force_plan, plan_switches,
-                             switch_count, transformer2d_stages)
+from repro.core.plan import (Stage, brute_force_cost, brute_force_plan,
+                             plan_cost_bytes, plan_switches,
+                             plan_switches_dp, switch_count,
+                             transformer2d_stages)
 
 
 # ---------------------------------------------------------------------------
@@ -63,6 +73,56 @@ def test_planner_no_switch_when_avoidable():
 def test_planner_infeasible_raises():
     with pytest.raises(ValueError):
         plan_switches([Stage(frozenset({1, 2}))], [1, 2])
+
+
+# ---------------------------------------------------------------------------
+# Cost-aware planner (exact DP) properties
+# ---------------------------------------------------------------------------
+
+@given(stage_problems())
+@settings(max_examples=200, deadline=None)
+def test_dp_matches_greedy_on_uniform_costs(problem):
+    """With unit boundary weights and a free final layout the Belady greedy
+    is optimal — the DP must tie it in cost."""
+    stages, dims, initial = problem
+    g = plan_switches(stages, dims, initial)
+    d = plan_switches_dp(stages, dims, n=4, initial=initial)
+    for st_, dd in zip(stages, d):
+        assert st_.allows(dd)
+    cg = plan_cost_bytes(stages, g, n=4, initial=initial)
+    cd = plan_cost_bytes(stages, d, n=4, initial=initial)
+    assert cd == pytest.approx(cg)
+
+
+@st.composite
+def weighted_stage_problems(draw):
+    n_dims = draw(st.integers(2, 3))
+    dims = list(range(1, 1 + n_dims))
+    n_stages = draw(st.integers(1, 5))
+    stages = []
+    for i in range(n_stages):
+        forbid = draw(st.sets(st.sampled_from(dims), min_size=0,
+                              max_size=n_dims - 1))
+        size = draw(st.sampled_from([4, 64, 1024]))
+        stages.append(Stage(frozenset(forbid), f"s{i}", (2, size, 8)))
+    initial = draw(st.one_of(st.none(), st.sampled_from(dims)))
+    final = draw(st.one_of(st.none(), st.sampled_from(dims)))
+    return stages, dims, initial, final
+
+
+@given(weighted_stage_problems())
+@settings(max_examples=150, deadline=None)
+def test_dp_exact_on_weighted_instances(problem):
+    """The DP must match the exponential oracle on byte-weighted instances
+    with pinned final layouts — and never lose to the greedy."""
+    stages, dims, initial, final = problem
+    d = plan_switches_dp(stages, dims, n=8, initial=initial, final=final)
+    cd = plan_cost_bytes(stages, d, n=8, initial=initial, final=final)
+    bf = brute_force_cost(stages, dims, n=8, initial=initial, final=final)
+    assert cd == pytest.approx(bf)
+    g = plan_switches(stages, dims, initial)
+    cg = plan_cost_bytes(stages, g, n=8, initial=initial, final=final)
+    assert cd <= cg + 1e-9
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,235 @@
+"""Cost-aware planner + schedule-executor tests (no optional deps — these
+run everywhere; the hypothesis property tests live in tests/test_plan.py)."""
+import pytest
+
+from repro.core.dsp import comm_volume_bytes
+from repro.core.plan import (Stage, brute_force_cost, make_plan,
+                             plan_cost_bytes, plan_switches,
+                             plan_switches_dp, switch_count)
+from repro.core.schedule import (PeriodicSchedule, Schedule, ScheduleExecutor,
+                                 classify, plan_schedule)
+
+
+# ---------------------------------------------------------------------------
+# Cost-aware planner
+# ---------------------------------------------------------------------------
+
+def test_dp_ties_greedy_on_uniform_randomish_instances():
+    import itertools
+    import random
+    rng = random.Random(0)
+    for _ in range(200):
+        dims = list(range(1, rng.randint(2, 4) + 1))
+        stages = []
+        for i in range(rng.randint(1, 6)):
+            forbid = set(rng.sample(dims, rng.randint(0, len(dims) - 1)))
+            stages.append(Stage(frozenset(forbid), f"s{i}"))
+        initial = rng.choice([None] + dims)
+        g = plan_switches(stages, dims, initial)
+        d = plan_switches_dp(stages, dims, n=4, initial=initial)
+        cg = plan_cost_bytes(stages, g, n=4, initial=initial)
+        cd = plan_cost_bytes(stages, d, n=4, initial=initial)
+        assert cd == pytest.approx(cg)
+        assert cd == pytest.approx(
+            brute_force_cost(stages, dims, n=4, initial=initial))
+
+
+def test_dp_beats_greedy_on_asymmetric_dims():
+    """Crafted instance: the greedy defers the forced switch to an expensive
+    boundary; the cost-aware DP pays it early on the cheap one."""
+    small, big = (1, 4, 64), (1, 1024, 64)
+    stages = [Stage(frozenset({1}), "cheap", small),
+              Stage(frozenset(), "wide", big),
+              Stage(frozenset({2}), "wide2", big)]
+    g = plan_switches(stages, [1, 2, 3], initial=2)
+    d = plan_switches_dp(stages, [1, 2, 3], n=4, initial=2)
+    cg = plan_cost_bytes(stages, g, n=4, initial=2)
+    cd = plan_cost_bytes(stages, d, n=4, initial=2)
+    assert cd < cg                       # strictly better, not just a tie
+    assert cd == pytest.approx(
+        brute_force_cost(stages, [1, 2, 3], n=4, initial=2))
+
+
+def test_dp_respects_final_layout():
+    stages = [Stage(frozenset({1}), "a"), Stage(frozenset(), "b")]
+    d = plan_switches_dp(stages, [1, 2, 3], n=4, initial=3, final=2)
+    c = plan_cost_bytes(stages, d, n=4, initial=3, final=2)
+    assert c == pytest.approx(
+        brute_force_cost(stages, [1, 2, 3], n=4, initial=3, final=2))
+    # staying on 3 throughout would pay an exit switch; DP may move early but
+    # never does worse than one switch total
+    assert c <= comm_volume_bytes("switch", 1.0, 4) + 1e-12
+
+
+def test_encdec_stage_graph_regression():
+    """Enc-dec regression (satellite): encoder tensors are 4x the decoder's.
+    The planner must produce the standard seq/head alternation, price
+    encoder switches 4x the decoder ones, and the DP must match the greedy
+    count here (alternation is forced — every boundary is a forced switch)."""
+    from repro.core.plan import encdec_stages
+    st = encdec_stages(2, 2, s_enc=64, s_dec=16, batch=2, d_model=8,
+                       dtype_bytes=4)
+    plan = make_plan(st, (1, 2), n=4, initial=1, final=1)
+    # proj/mlp stages shard the seq (1), attention cores shard heads (2)
+    want = [1, 2, 1] * 2 + [1, 2, 2, 1] * 2
+    assert plan == want
+    cost = plan_cost_bytes(st, plan, n=4, initial=1, final=1)
+    enc_m = 2 * 64 * 8 * 4
+    dec_m = 2 * 16 * 8 * 4
+    # per enc layer: 2 switches of enc_m/4; per dec layer: cross_attn keeps
+    # the head shard (free) so 2 switches of dec_m/4
+    want_cost = 2 * (2 * enc_m / 4) + 2 * (2 * dec_m / 4)
+    assert cost == pytest.approx(want_cost)
+    assert cost == pytest.approx(
+        brute_force_cost(st, (1, 2), n=4, initial=1, final=1))
+
+
+def test_make_plan_dispatch():
+    uniform = [Stage(frozenset({1}), "a"), Stage(frozenset({2}), "b")]
+    assert make_plan(uniform, (1, 2), initial=1) == \
+        plan_switches(uniform, (1, 2), 1)
+    weighted = [Stage(frozenset({1}), "a", (2, 8, 4)),
+                Stage(frozenset({2}), "b", (2, 64, 4))]
+    assert make_plan(weighted, (1, 2), n=4, initial=1) == \
+        plan_switches_dp(weighted, (1, 2), n=4, initial=1)
+
+
+# ---------------------------------------------------------------------------
+# Schedule + executor accounting
+# ---------------------------------------------------------------------------
+
+def _t2d_like(n_pairs, shape=None):
+    out = []
+    for i in range(n_pairs):
+        out.append(Stage(frozenset({2}), f"l{i}.spatial", shape))
+        out.append(Stage(frozenset({1}), f"l{i}.temporal", shape))
+    return out
+
+
+def test_schedule_transitions_and_counts():
+    sched = plan_schedule(_t2d_like(3), (1, 2), n=8, initial=1, final=1)
+    assert sched.dims == (1, 2) * 3
+    trs = sched.transitions()
+    kinds = [t.kind for t in trs]
+    # entry keep, 5 forced boundary switches, exit switch back to T (the
+    # scan wrap of the last layer)
+    assert kinds == ["keep"] + ["switch"] * 6
+    assert sched.n_switches() == 6
+    assert sched.expected_collectives() == {"all-to-all": 6}
+
+
+def test_schedule_per_device_bytes_matches_table2():
+    shape = (2, 16, 32, 8)
+    m = 2 * 16 * 32 * 8 * 2                      # dtype_bytes=2 default
+    sched = plan_schedule(_t2d_like(2, shape), (1, 2), n=8, initial=1,
+                          final=1)
+    # 4 switches of M/8 (the final wrap is priced by final=initial at exit?
+    # no: stage boundaries give 3 switches + exit switch = 4)
+    assert sched.per_device_bytes(8) == pytest.approx(4 * m / 8)
+    assert comm_volume_bytes("switch", m, 8) == pytest.approx(m / 8)
+
+
+def test_periodic_validation():
+    sched = plan_schedule(_t2d_like(4), (1, 2), n=8, initial=1, final=1)
+    ps = sched.periodic(2)
+    assert ps.enter().kind == "keep"
+    assert ps.boundary(1).kind == "switch"
+    assert ps.wrap().kind == "switch"
+    assert ps.exit().kind == "keep"
+    # non-periodic plan must be rejected
+    bad = Schedule(tuple(_t2d_like(2)), (1, 2, 2, 1), initial=1)
+    with pytest.raises(ValueError):
+        bad.periodic(2)
+    with pytest.raises(ValueError):
+        sched.periodic(3)                         # 8 stages % 3 != 0
+
+
+def test_executor_expected_collectives_scanned():
+    sched = plan_schedule(_t2d_like(4), (1, 2), n=8, initial=1, final=1)
+    ex = ScheduleExecutor(sched.periodic(2), backend="explicit")
+    # scan of 4 layer pairs: 2 all-to-alls per pair, keep at entry/exit
+    assert ex.expected_collectives(4) == {"all-to-all": 8}
+    assert ScheduleExecutor.null().expected_collectives(4) == {}
+
+
+def test_executor_null_is_identity():
+    ex = ScheduleExecutor.null()
+    x = object()
+    assert ex.enter(x) is x and ex.wrap(x) is x and ex.exit(x) is x
+    assert ex.boundary(x, 1) is x and ex.anchor(x, 0) is x
+
+
+def test_classify_covers_table2():
+    assert classify(1, 1).kind == "keep"
+    assert classify(1, 2).kind == "switch"
+    assert classify(None, 1).kind == "split"
+    assert classify(1, None).kind == "gather"
+    assert classify(1, 2).collective == "all-to-all"
+    assert classify(1, None).collective == "all-gather"
+    assert classify(None, 1).collective is None
+
+
+# ---------------------------------------------------------------------------
+# Model stage declarations consume the planner
+# ---------------------------------------------------------------------------
+
+def test_t2d_model_schedule():
+    import jax.numpy as jnp
+    from repro.models.transformer2d import T2DConfig, dsp_schedule
+    cfg = T2DConfig(name="t", n_layers=4, d_model=64, n_heads=4, d_ff=128,
+                    dtype=jnp.float32)
+    ps = dsp_schedule(cfg, 8, t_len=16, s_len=32, batch=2)
+    assert ps.dims == (1, 2)                     # spatial on T, temporal on S
+    assert ps.schedule.n_switches() == 2 * 2     # 2 per layer pair
+    m = 2 * 16 * 32 * 64 * 4
+    assert ps.schedule.per_device_bytes(8) == pytest.approx(4 * m / 8)
+
+
+def test_t2d_schedule_indivisible_dim_falls_back():
+    import jax.numpy as jnp
+    from repro.models.transformer2d import T2DConfig, dsp_schedule
+    cfg = T2DConfig(name="t", n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                    dtype=jnp.float32)
+    # S=30 not divisible by 8: excluding it would leave the temporal stage
+    # infeasible, so the planner falls back to the full dim set (matching
+    # the auto path, which pads non-divisible shardings)
+    ps = dsp_schedule(cfg, 8, t_len=16, s_len=30, batch=2)
+    assert ps.dims == (1, 2)
+
+
+def test_lm_model_schedule():
+    import jax.numpy as jnp
+    from repro.models.lm import LMConfig, dsp_schedule, stage_period
+    cfg = LMConfig(name="t", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+                   head_dim=16, d_ff=128, vocab=64, dtype=jnp.float32)
+    sched = dsp_schedule(cfg, 8, seq=64, batch=2)
+    assert stage_period(cfg) == 3
+    assert sched.dims[:3] == (1, 2, 1)           # resid seq, mixer heads
+    assert sched.n_switches() == 2 * cfg.n_layers
+
+
+def test_sharder_dims_follow_schedule():
+    import jax.numpy as jnp
+    from repro.models.lm import LMConfig, dsp_schedule
+    from repro.parallel.partition import ParallelPlan, make_sharder
+    cfg = LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                   head_dim=16, d_ff=128, vocab=64, dtype=jnp.float32)
+    sched = dsp_schedule(cfg, 8, seq=64, batch=2)
+    s = make_sharder(None, ParallelPlan(mode="dsp"), schedule=sched)
+    assert (s.resid_dim, s.mixer_dim) == (1, 2)
+    # schedule-less default is the planner's fixed point for these models
+    s2 = make_sharder(None, ParallelPlan(mode="dsp"))
+    assert (s2.resid_dim, s2.mixer_dim) == (1, 2)
+    s3 = make_sharder(None, ParallelPlan(mode="none"))
+    assert (s3.resid_dim, s3.mixer_dim) == (None, None)
+
+
+def test_encdec_model_schedule():
+    import jax.numpy as jnp
+    from repro.models.encdec import EncDecConfig, dsp_schedule
+    cfg = EncDecConfig(name="t", n_enc_layers=2, n_dec_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+                       vocab=64, dtype=jnp.float32)
+    sched = dsp_schedule(cfg, 8, s_enc=64, s_dec=16, batch=2)
+    assert sched.dims[:3] == (1, 2, 1)
+    assert sched.dims[6:10] == (1, 2, 2, 1)      # cross-attn keeps heads
