@@ -66,6 +66,19 @@ def main():
          f"ratio={measured_total/max(planned_total, 1):.2f};"
          f"planned_switches={psched.schedule.n_switches()}")
 
+    # planned SECONDS next to planned bytes: the same schedule priced on two
+    # modeled fabrics (flat ICI ring vs the SP group spanning 2 hosts over
+    # DCN) — bytes are identical, time is not, which is exactly why the
+    # planner optimises seconds on a Topology
+    from repro.core.topology import Topology
+    for label, topo in (("ici", Topology.flat_ici(N)),
+                        ("ici_dcn", Topology.multihost(2, N // 2))):
+        secs = psched.schedule.per_device_seconds(topo)
+        emit(f"table3/planned_seconds/{label}", None,
+             f"planned_bytes={planned_total:.0f};"
+             f"planned_seconds={secs:.3e};"
+             f"bottleneck_gbps={topo.bottleneck_bandwidth/1e9:.1f}")
+
     # the paper's headline ordering must hold in the measured HLO
     assert rows["dsp"] < rows["ulysses"] < rows["megatron"]
     assert rows["dsp"] < rows["ring"]

@@ -14,7 +14,8 @@ Reported: FLOPS/chip per method per point + the 0.5M->4M FLOPS drop (paper:
 DSP drops <= 23%, baselines >= 40%).
 """
 from benchmarks.common import emit
-from repro.analysis.roofline import PEAK_FLOPS, ICI_BW
+from repro.analysis.roofline import PEAK_FLOPS
+from repro.core.topology import ICI_BW
 
 CHIPS = 128
 PARAMS = 670e6

@@ -5,7 +5,8 @@ the paper's strong-scaling setting: compute/N + measured comm bytes/ICI.
 Reported as relative latency vs DSP (paper: DSP 29-63% faster).
 """
 from benchmarks.common import spmd_measure, emit
-from repro.analysis.roofline import PEAK_FLOPS, ICI_BW
+from repro.analysis.roofline import PEAK_FLOPS
+from repro.core.topology import ICI_BW
 
 PARAMS = 670e6
 SP = 8

@@ -10,7 +10,8 @@ Strong scaling: total workload fixed, N grows; per-device compute shrinks
 so efficiency holds longest.
 """
 from benchmarks.common import spmd_measure, emit
-from repro.analysis.roofline import PEAK_FLOPS, ICI_BW
+from repro.analysis.roofline import PEAK_FLOPS
+from repro.core.topology import ICI_BW
 
 
 def main():

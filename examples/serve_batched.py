@@ -11,7 +11,7 @@ import numpy as np
 from repro.data.pipeline import DataConfig, make_batch
 from repro.models.lm import LMConfig, init_lm, lm_loss
 from repro.optim.adamw import OptConfig
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import Request, ServingEngine
 from repro.train.trainer import Trainer, TrainerConfig
 
 cfg = LMConfig(name="shift-lm", n_layers=2, d_model=128, n_heads=4,
@@ -37,4 +37,15 @@ acc = float((gen == want).mean())
 print("generations:", gen.tolist())
 print(f"shift-rule accuracy: {acc:.2%}")
 assert acc > 0.9, "the served model should follow the learned +1 rule"
+
+# per-request decode budgets: the same batch, each request stopping at its
+# own max_new_tokens (masked rows keep stepping through the one jitted
+# decode — no retraces, no ragged batch)
+reqs = [Request(prompt=prompts[i], max_new_tokens=m)
+        for i, m in enumerate((8, 2, 5, 1))]
+engine.serve(reqs)
+for i, r in enumerate(reqs):
+    assert len(r.generated) == r.max_new_tokens
+    assert r.generated == gen[i, :r.max_new_tokens].tolist()
+    print(f"req{i} (budget {r.max_new_tokens}): {r.generated}")
 print("OK")

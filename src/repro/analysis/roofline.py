@@ -4,7 +4,10 @@ Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
 
   compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
   memory     = HLO_bytes / (chips * 819e9 B/s HBM)
-  collective = collective_bytes / (chips * 50e9 B/s ICI link)
+  collective = priced on a ``core.topology.Topology`` (per-link alpha+beta
+               model; defaults to the flat-ICI line rate, bytes / 50e9 B/s —
+               the ICI_BW constant now lives in ``core.topology`` and is
+               re-exported here)
 
 Two XLA accounting gotchas handled here:
 
@@ -27,10 +30,12 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-# TPU v5e, per chip
+from repro.core.topology import ICI_BW, Topology  # single source of truth
+
+# TPU v5e, per chip (compute/memory ceilings; link constants live in
+# core.topology)
 PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s
-ICI_BW = 50e9                # bytes/s per link (conservative single-link)
 
 COLLECTIVES = ("all-to-all", "all-gather", "all-reduce", "reduce-scatter",
                "collective-permute")
@@ -269,10 +274,17 @@ class Roofline:
 
 def roofline(*, hlo_flops_per_dev: float, hlo_bytes_per_dev: float,
              collective_bytes_per_dev: float, chips: int,
-             model_flops: float) -> Roofline:
+             model_flops: float,
+             topology: Optional[Topology] = None) -> Roofline:
+    """``topology`` prices the collective term on the modeled fabric
+    (bottleneck link of an ICI x DCN mesh, etc.); default is the flat-ICI
+    line rate — bytes / ICI_BW, the historical behaviour."""
     compute_s = hlo_flops_per_dev / PEAK_FLOPS
     memory_s = hlo_bytes_per_dev / HBM_BW
-    collective_s = collective_bytes_per_dev / ICI_BW
+    if topology is None:
+        collective_s = collective_bytes_per_dev / ICI_BW
+    else:
+        collective_s = topology.seconds_for_bytes(collective_bytes_per_dev)
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": collective_s}
     bott = max(terms, key=terms.get)

@@ -13,6 +13,14 @@ stage layouts are weighted with the paper's Table-2 per-device byte costs
     split   s_hat -> s_i : 0          (local slice)
     gather  s_i -> s_hat : M          (one all-gather)
 
+Bytes are not time, though: the same byte count over a DCN hop costs far
+more than over ICI.  Both solvers therefore price transitions in SECONDS on
+a ``repro.core.topology.Topology`` (per-link bandwidth/latency, alpha+beta
+collective models) when one is given; with ``topology=None`` the byte model
+applies unchanged — and ``Topology.uniform(n)`` is constructed so its
+seconds equal the Table-2 byte counts exactly, making the byte model the
+uniform special case (plans reproduce bit-for-bit; property-tested).
+
 Two solvers share this cost model:
 
 * ``plan_switches`` — the Belady (farthest-next-conflict) greedy.  With
@@ -23,13 +31,15 @@ Two solvers share this cost model:
 * ``plan_switches_dp`` — exact dynamic program over (stage, shard_dim),
   O(stages * dims^2).  Required whenever boundary bytes differ (asymmetric
   T/S extents, enc-dec stage graphs whose encoder tensors dwarf the decoder,
-  SSM scan stages at a different width) or when a *final* layout is pinned
-  (loss/head wants the dataloader split back): the greedy ignores both and
-  can lose.
+  SSM scan stages at a different width), when a *final* layout is pinned
+  (loss/head wants the dataloader split back), or when a non-uniform
+  topology makes per-(src, tgt) switch costs differ (ICI-local dims vs
+  DCN-crossing dims): the greedy ignores all three and can lose.
 
 ``make_plan`` dispatches between them; ``plan_cost_bytes`` prices any plan so
 benchmarks can report planned-vs-measured collective volume with the same
-constant (``repro.core.dsp.comm_volume_bytes``) the executor uses.
+constant (``repro.core.dsp.comm_volume_bytes``) the executor uses, and
+``plan_cost_seconds`` prices it on a Topology.
 
 Models do not call these directly — they declare a ``stages(cfg)`` sequence
 and ``repro.core.schedule`` turns the plan into boundary transitions (the
@@ -89,6 +99,22 @@ def transition_bytes(src: Optional[int], tgt: Optional[int],
     """Per-device cost of one layout transition (paper Table 2)."""
     from repro.core.dsp import comm_volume_bytes
     return comm_volume_bytes(transition_kind(src, tgt), global_bytes, n)
+
+
+def transition_seconds(src: Optional[int], tgt: Optional[int],
+                       global_bytes: float, topology) -> float:
+    """Seconds of one layout transition on a Topology (alpha+beta models)."""
+    return topology.transition_seconds(transition_kind(src, tgt),
+                                       global_bytes, src, tgt)
+
+
+def _transition_cost(src: Optional[int], tgt: Optional[int],
+                     global_bytes: float, n: int, topology) -> float:
+    """The ONE edge weight both solvers and all pricers use: Table-2 bytes
+    without a topology, seconds on it otherwise."""
+    if topology is None:
+        return transition_bytes(src, tgt, global_bytes, n)
+    return transition_seconds(src, tgt, global_bytes, topology)
 
 
 def _boundary_bytes(stages: Sequence[Stage], t: int,
@@ -157,16 +183,21 @@ def plan_switches(stages: Sequence[Stage], seq_dims: Sequence[int],
 def plan_switches_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
                      *, n: int = 2, initial: Optional[int] = None,
                      final: Optional[int] = None,
-                     final_bytes: Optional[float] = None) -> List[int]:
-    """Exact minimum-byte plan: DP over (stage, shard_dim).
+                     final_bytes: Optional[float] = None,
+                     topology=None) -> List[int]:
+    """Exact minimum-cost plan: DP over (stage, shard_dim).
 
     Transition into stage ``t`` is weighted by the bytes of the activation
-    entering it (``Stage.nbytes``, unit weight when unset); a pinned
-    ``final`` layout adds the exit transition priced at ``final_bytes``
-    (defaults to the last stage's bytes).  Mid-plan gathers never help for
-    n > 1 (gather costs M, a direct switch M/N), so the state space stays on
-    ``seq_dims``.  Ties break toward keeping the current shard, then the
-    smaller dim, so uniform instances reproduce the greedy's plans.
+    entering it (``Stage.nbytes``, unit weight when unset) — in Table-2
+    bytes by default, in seconds on ``topology`` when one is given (per-dim
+    placements then make switch costs depend on WHICH dims are involved,
+    e.g. ICI-local vs DCN-crossing); a pinned ``final`` layout adds the exit
+    transition priced at ``final_bytes`` (defaults to the last stage's
+    bytes).  Mid-plan gathers never help for n > 1 (gather moves the full M
+    over the group's bottleneck link, a direct switch only the re-tiled
+    shard), so the state space stays on ``seq_dims``.  Ties break toward
+    keeping the current shard, then the smaller dim, so uniform instances
+    reproduce the greedy's plans.
     """
     if not stages:
         return []
@@ -176,8 +207,8 @@ def plan_switches_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
 
     nb0 = _boundary_bytes(stages, 0)
     cost: Dict[int, float] = {
-        d: (transition_bytes(initial, d, nb0, n) if initial is not None
-            else 0.0) if stages[0].allows(d) else INF
+        d: (_transition_cost(initial, d, nb0, n, topology)
+            if initial is not None else 0.0) if stages[0].allows(d) else INF
         for d in dims}
     back: List[Dict[int, Optional[int]]] = []
 
@@ -194,7 +225,7 @@ def plan_switches_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
                 c0 = cost[d0]
                 if c0 == INF:
                     continue
-                c = c0 + transition_bytes(d0, d, nb, n)
+                c = c0 + _transition_cost(d0, d, nb, n, topology)
                 # tie-break: prefer keeping the shard, then the smaller dim
                 key = (c, d0 != d, d0)
                 if best_key is None or key < best_key:
@@ -208,7 +239,7 @@ def plan_switches_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
             stages, len(stages) - 1)
 
         def total(d):
-            return cost[d] + transition_bytes(d, final, fb, n)
+            return cost[d] + _transition_cost(d, final, fb, n, topology)
     else:
         def total(d):
             return cost[d]
@@ -225,13 +256,17 @@ def plan_switches_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
 def make_plan(stages: Sequence[Stage], seq_dims: Sequence[int],
               *, n: int = 2, initial: Optional[int] = None,
               final: Optional[int] = None,
-              final_bytes: Optional[float] = None) -> List[int]:
+              final_bytes: Optional[float] = None,
+              topology=None) -> List[int]:
     """Dispatch: Belady greedy when it is provably optimal (uniform boundary
-    bytes, free final layout), exact DP otherwise."""
-    if final is None and _uniform_cost(stages):
+    costs — uniform bytes AND a cost-uniform topology — with a free final
+    layout), exact DP otherwise."""
+    topo_uniform = topology is None or topology.is_uniform
+    if final is None and topo_uniform and _uniform_cost(stages):
         return plan_switches(stages, seq_dims, initial)
     return plan_switches_dp(stages, seq_dims, n=n, initial=initial,
-                            final=final, final_bytes=final_bytes)
+                            final=final, final_bytes=final_bytes,
+                            topology=topology)
 
 
 # ---------------------------------------------------------------------------
@@ -248,23 +283,43 @@ def switch_count(plan: Sequence[int], initial: Optional[int] = None) -> int:
     return count
 
 
+def _plan_cost(stages: Sequence[Stage], plan: Sequence[int],
+               *, n: int, initial: Optional[int], final: Optional[int],
+               final_bytes: Optional[float], topology) -> float:
+    total = 0.0
+    prev = initial
+    for t, d in enumerate(plan):
+        if prev is not None:
+            total += _transition_cost(prev, d, _boundary_bytes(stages, t), n,
+                                      topology)
+        prev = d
+    if final is not None and plan:
+        fb = final_bytes if final_bytes is not None else _boundary_bytes(
+            stages, len(stages) - 1)
+        total += _transition_cost(prev, final, fb, n, topology)
+    return total
+
+
 def plan_cost_bytes(stages: Sequence[Stage], plan: Sequence[int],
                     *, n: int, initial: Optional[int] = None,
                     final: Optional[int] = None,
                     final_bytes: Optional[float] = None) -> float:
     """Total per-device bytes of a plan under the Table-2 cost model — the
     same constant the executor and benchmarks use."""
-    total = 0.0
-    prev = initial
-    for t, d in enumerate(plan):
-        if prev is not None:
-            total += transition_bytes(prev, d, _boundary_bytes(stages, t), n)
-        prev = d
-    if final is not None and plan:
-        fb = final_bytes if final_bytes is not None else _boundary_bytes(
-            stages, len(stages) - 1)
-        total += transition_bytes(prev, final, fb, n)
-    return total
+    return _plan_cost(stages, plan, n=n, initial=initial, final=final,
+                      final_bytes=final_bytes, topology=None)
+
+
+def plan_cost_seconds(stages: Sequence[Stage], plan: Sequence[int],
+                      topology, *, initial: Optional[int] = None,
+                      final: Optional[int] = None,
+                      final_bytes: Optional[float] = None) -> float:
+    """Total seconds of a plan on a Topology (alpha+beta collective models)
+    — what benchmarks report next to planned bytes, and the objective the
+    topology-aware DP minimises."""
+    return _plan_cost(stages, plan, n=topology.size, initial=initial,
+                      final=final, final_bytes=final_bytes,
+                      topology=topology)
 
 
 def brute_force_plan(stages: Sequence[Stage], seq_dims: Sequence[int],
@@ -285,14 +340,17 @@ def brute_force_plan(stages: Sequence[Stage], seq_dims: Sequence[int],
 def brute_force_cost(stages: Sequence[Stage], seq_dims: Sequence[int],
                      *, n: int = 2, initial: Optional[int] = None,
                      final: Optional[int] = None,
-                     final_bytes: Optional[float] = None) -> float:
-    """Exponential exact minimum BYTES (test oracle only)."""
+                     final_bytes: Optional[float] = None,
+                     topology=None) -> float:
+    """Exponential exact minimum cost — bytes, or seconds on ``topology``
+    (test oracle only)."""
     best = None
     for assign in itertools.product(seq_dims, repeat=len(stages)):
         if any(not st.allows(d) for st, d in zip(stages, assign)):
             continue
-        c = plan_cost_bytes(stages, assign, n=n, initial=initial,
-                            final=final, final_bytes=final_bytes)
+        c = _plan_cost(stages, assign, n=n, initial=initial,
+                       final=final, final_bytes=final_bytes,
+                       topology=topology)
         if best is None or c < best:
             best = c
     if best is None:

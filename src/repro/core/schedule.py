@@ -30,7 +30,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.plan import (Stage, make_plan, plan_cost_bytes, switch_count,
+from repro.core.plan import (Stage, make_plan, plan_cost_bytes,
+                             plan_cost_seconds, switch_count,
                              transition_kind)
 
 # HLO collective emitted per transition kind (None = communication-free).
@@ -61,12 +62,16 @@ class Schedule:
 
     ``initial`` is the layout the input arrives with (dataloader split);
     ``final`` pins the exit layout (loss/head) or is None for "free".
+    ``topology`` is the mesh model the plan was solved against (None = the
+    byte-uniform model); it travels with the plan so every consumer — the
+    Sharder, the serving engine, benchmarks — prices it consistently.
     """
 
     stages: Tuple[Stage, ...]
     dims: Tuple[int, ...]
     initial: Optional[int] = None
     final: Optional[int] = None
+    topology: Optional[object] = None
 
     def __post_init__(self):
         assert len(self.stages) == len(self.dims), (len(self.stages),
@@ -106,6 +111,16 @@ class Schedule:
         identical to what benchmarks/comm_volume.py prices)."""
         return plan_cost_bytes(self.stages, self.dims, n=n,
                                initial=self.initial, final=self.final)
+
+    def per_device_seconds(self, topology=None) -> float:
+        """Planned collective seconds on ``topology`` (defaults to the
+        topology the plan was solved against)."""
+        topo = topology if topology is not None else self.topology
+        if topo is None:
+            raise ValueError("per_device_seconds needs a Topology (none was "
+                             "attached at plan time)")
+        return plan_cost_seconds(self.stages, self.dims, topo,
+                                 initial=self.initial, final=self.final)
 
     # -- periodic (scan) form ------------------------------------------------
     def periodic(self, period: int) -> "PeriodicSchedule":
@@ -158,11 +173,14 @@ class PeriodicSchedule:
 
 def plan_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
                   n: int = 2, initial: Optional[int] = None,
-                  final: Optional[int] = None) -> Schedule:
+                  final: Optional[int] = None, topology=None) -> Schedule:
     """Solve the switching plan (``core.plan.make_plan``: Belady greedy on
-    uniform costs, exact DP otherwise) and wrap it as a Schedule."""
-    dims = make_plan(stages, seq_dims, n=n, initial=initial, final=final)
-    return Schedule(tuple(stages), tuple(dims), initial=initial, final=final)
+    uniform costs, exact DP otherwise — in seconds when a Topology is given)
+    and wrap it as a Schedule carrying that topology."""
+    dims = make_plan(stages, seq_dims, n=n, initial=initial, final=final,
+                     topology=topology)
+    return Schedule(tuple(stages), tuple(dims), initial=initial, final=final,
+                    topology=topology)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,367 @@
+"""Topology-aware communication cost model: price DSP plans in SECONDS.
+
+The planner (``core.plan``) originally weighted stage-boundary transitions
+with paper-Table-2 per-device *bytes* (switch = M/N, gather = M).  Bytes are
+not time: an all-to-all over a slow DCN hop costs far more per byte than one
+over ICI, which is exactly why hybrid sequence parallelism must be placed
+topology-aware (USP, Fang & Zhao 2024) and why Ulysses reports its advantage
+in link-bandwidth terms (Jacobs et al. 2023).  This module describes the
+device mesh as *links* with per-link bandwidth/latency and prices the
+paper's primitives with standard alpha+beta collective models.
+
+Model
+-----
+A ``Topology`` is an ordered tuple of ``Link`` axes (outermost first); the
+SP group is their product.  Each axis ``a`` has ``size`` s_a, ``bandwidth``
+beta_a (bytes/s per device link) and ``latency`` alpha_a (seconds per hop).
+For a collective over a sub-group G with N = prod s_a and global payload M:
+
+  all-gather   (ring)        t = sum_a (s_a - 1) * alpha_a  +  M / min_a beta_a
+  all-reduce   (ring RS+AG)  t = 2 * sum_a (s_a - 1) * alpha_a + 2M / min beta
+  all-to-all   (tiled)       t = sum_a (s_a - 1) * alpha_a
+                                 + sum_a (M/N) * phi_a / beta_a,
+                             phi_a = N (s_a - 1) / (s_a (N - 1))
+
+``phi_a`` is the wire-true fraction of a device's M/N shard whose peers
+differ along axis ``a`` ((s_a-1)/s_a), renormalised by N/(N-1) so the
+single-axis case folds to exactly M/N — the same Table-2 convention the
+whole repo uses (``core.dsp.comm_volume_bytes`` counts the re-tiled shard,
+not the on-wire (N-1)/N fraction, and HLO measurement uses result bytes).
+Hierarchical groups therefore pay each axis phase sequentially, with the
+slow (DCN) axis contributing its share at its own bandwidth.
+
+Mapping to paper Table 2 (``transition_seconds``):
+
+  keep    s_i -> s_i   : 0
+  split   s_hat -> s_i : 0                         (local slice)
+  switch  s_i -> s_j   : all_to_all_seconds(M, G)  (one tiled all-to-all)
+  gather  s_i -> s_hat : all_gather_seconds(M, G)  (one all-gather)
+
+``Topology.uniform(n)`` — one axis, bandwidth 1, latency 0 — makes every
+transition *numerically equal to its Table-2 byte count*, so the byte model
+is the uniform special case and all pre-topology plans are reproduced
+bit-for-bit (property-tested in tests/test_topology.py).
+
+Per-dim placement
+-----------------
+``placement`` optionally maps a logical sequence dim to the sub-axes that
+shard it.  A dim placed on the inner ICI axis only (e.g. its extent divides
+the per-host group but not the full pod) switches with ICI-local
+all-to-alls; dims placed on the full (DCN x ICI) group pay the DCN share on
+every switch.  This is what lets the DP *avoid switching across the slow
+axis when an ICI-local dim is free* — the topology-aware regression in
+tests/test_plan.py.  Switching between dims with different placements is
+priced as an all-to-all over the union of both groups plus an all-gather of
+the target shard over the axes that stop sharding (the tensor becomes
+replicated along them).
+
+Hardware constants live here (single source of truth; ``analysis.roofline``
+and the benchmarks import them instead of hard-coding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+# TPU v5e link constants (per chip).  ICI: conservative single-link; DCN:
+# per-host WAN share.  These were previously hard-coded in
+# analysis/roofline.py (ICI_BW) — this is now the single source of truth.
+ICI_BW = 50e9                # bytes/s per ICI link
+DCN_BW = 2.5e9               # bytes/s per host over the data-center network
+ICI_LATENCY = 1e-6           # seconds per ICI hop
+DCN_LATENCY = 10e-6          # seconds per DCN hop
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """One mesh axis: ``size`` devices connected by links of ``bandwidth``
+    bytes/s and ``latency`` seconds per hop (the alpha term)."""
+
+    name: str
+    size: int
+    bandwidth: float
+    latency: float = 0.0
+
+    def __post_init__(self):
+        if self.size < 1:
+            raise ValueError(f"axis {self.name!r}: size {self.size} < 1")
+        if self.bandwidth <= 0:
+            raise ValueError(f"axis {self.name!r}: bandwidth must be > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Device-mesh communication model for one SP group.
+
+    ``axes``: ordered outermost-first (the DCN axis, when present, comes
+    first).  ``placement``: optional map from logical sequence dim to the
+    tuple of axis names sharding that dim; dims absent from the map (and all
+    dims when ``placement`` is None) shard over the full group.
+    """
+
+    axes: Tuple[Link, ...]
+    placement: Optional[Mapping[int, Tuple[str, ...]]] = None
+
+    def __post_init__(self):
+        names = [a.name for a in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate axis names {names}")
+        if self.placement:
+            for dim, grp in self.placement.items():
+                for nm in grp:
+                    if nm not in names:
+                        raise ValueError(
+                            f"placement of dim {dim} names unknown axis "
+                            f"{nm!r} (have {names})")
+            # frozen dataclass + dict field: freeze to a hashable view
+            object.__setattr__(self, "placement",
+                               {d: tuple(g) for d, g in
+                                sorted(self.placement.items())})
+
+    # -- group selection -----------------------------------------------------
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for a in self.axes:
+            n *= a.size
+        return n
+
+    def axis(self, name: str) -> Link:
+        for a in self.axes:
+            if a.name == name:
+                return a
+        raise KeyError(name)
+
+    def group(self, dim: Optional[int]) -> Tuple[Link, ...]:
+        """Axes sharding logical dim ``dim`` (full group by default)."""
+        if dim is None or not self.placement or dim not in self.placement:
+            return self.axes
+        names = self.placement[dim]
+        return tuple(a for a in self.axes if a.name in names)
+
+    def group_size(self, dim: Optional[int]) -> int:
+        n = 1
+        for a in self.group(dim):
+            n *= a.size
+        return n
+
+    def _select(self, axes) -> Tuple[Link, ...]:
+        if axes is None:
+            return self.axes
+        out = []
+        for a in axes:
+            out.append(a if isinstance(a, Link) else self.axis(a))
+        return tuple(out)
+
+    @property
+    def is_uniform(self) -> bool:
+        """True when every transition cost is a fixed multiple of its byte
+        count: one effective link class, no latency, no per-dim placement."""
+        return (not self.placement
+                and len({(a.bandwidth, a.latency) for a in self.axes}) == 1
+                and all(a.latency == 0.0 for a in self.axes))
+
+    @property
+    def bottleneck_bandwidth(self) -> float:
+        return min(a.bandwidth for a in self.axes)
+
+    # -- alpha+beta collective models ----------------------------------------
+
+    @staticmethod
+    def _alpha(group: Tuple[Link, ...]) -> float:
+        return sum((a.size - 1) * a.latency for a in group)
+
+    def all_gather_seconds(self, nbytes: float, axes=None) -> float:
+        """Ring all-gather of a globally ``nbytes`` tensor over the group:
+        every device ends with the full M (Table-2 gather convention)."""
+        group = self._select(axes)
+        n = 1
+        for a in group:
+            n *= a.size
+        if n <= 1:
+            return 0.0
+        return self._alpha(group) + nbytes / min(a.bandwidth for a in group)
+
+    def all_reduce_seconds(self, nbytes: float, axes=None) -> float:
+        """Ring all-reduce = reduce-scatter + all-gather: 2M over the
+        bottleneck link (the same 2x convention roofline's HLO parser
+        applies to all-reduce result bytes)."""
+        group = self._select(axes)
+        n = 1
+        for a in group:
+            n *= a.size
+        if n <= 1:
+            return 0.0
+        return (2 * self._alpha(group)
+                + 2 * nbytes / min(a.bandwidth for a in group))
+
+    def all_to_all_seconds(self, nbytes: float, axes=None) -> float:
+        """Tiled all-to-all re-tiling each device's M/N shard.  Hierarchical
+        groups pay one phase per axis; phi_a folds the single-axis case to
+        exactly M/N (see module docstring)."""
+        group = self._select(axes)
+        n = 1
+        for a in group:
+            n *= a.size
+        if n <= 1:
+            return 0.0
+        shard = nbytes / n
+        t = self._alpha(group)
+        for a in group:
+            if a.size == 1:
+                continue
+            phi = n * (a.size - 1) / (a.size * (n - 1))
+            t += shard * phi / a.bandwidth
+        return t
+
+    def seconds_for_bytes(self, nbytes: float) -> float:
+        """Price an already-counted per-device collective byte volume at the
+        bottleneck link (the roofline collective term)."""
+        return nbytes / self.bottleneck_bandwidth
+
+    # -- paper Table-2 transitions -------------------------------------------
+
+    def switch_seconds(self, nbytes: float, src: int, tgt: int) -> float:
+        """s_i -> s_j: one tiled all-to-all over the dims' shard group.
+        Different placements re-tile over the union of both groups and
+        additionally all-gather the target shard over axes that stop
+        sharding (the tensor becomes replicated along them)."""
+        gs, gt = self.group(src), self.group(tgt)
+        if gs == gt:
+            return self.all_to_all_seconds(nbytes, gs)
+        in_either = {a.name for a in gs} | {a.name for a in gt}
+        union = tuple(a for a in self.axes if a.name in in_either)
+        t = self.all_to_all_seconds(nbytes, union)
+        dropped = tuple(a for a in union if a not in gt)
+        if dropped:
+            n_tgt = 1
+            for a in gt:
+                n_tgt *= a.size
+            t += self.all_gather_seconds(nbytes / n_tgt, dropped)
+        return t
+
+    def gather_seconds(self, nbytes: float, src: int) -> float:
+        return self.all_gather_seconds(nbytes, self.group(src))
+
+    def transition_seconds(self, kind: str, nbytes: float,
+                           src: Optional[int], tgt: Optional[int]) -> float:
+        """Seconds of one Table-2 primitive (same kinds as
+        ``core.dsp.comm_volume_bytes``)."""
+        if kind in ("keep", "split"):
+            return 0.0
+        if kind == "switch":
+            return self.switch_seconds(nbytes, src, tgt)
+        if kind == "gather":
+            return self.gather_seconds(nbytes, src)
+        raise ValueError(f"unknown primitive {kind!r}")
+
+    # -- elastic resize ------------------------------------------------------
+
+    def resized(self, n: int) -> "Topology":
+        """Best-effort model of the same fabric at SP degree ``n`` (elastic
+        serving resize).  Outer axes keep their sizes while the innermost
+        axis absorbs the change when divisible — axis names and per-dim
+        placements survive, so ICI-local pinnings keep steering the re-plan.
+        Otherwise the group collapses to one flat axis at the bottleneck
+        bandwidth (placements become meaningless there: a single axis IS the
+        full group, which is every dim's default)."""
+        if n == self.size:
+            return self
+        if n < 1:
+            raise ValueError(f"resized({n})")
+        outer = 1
+        for a in self.axes[:-1]:
+            outer *= a.size
+        if len(self.axes) > 1 and n % outer == 0 and n // outer >= 1:
+            inner = dataclasses.replace(self.axes[-1], size=n // outer)
+            return Topology(self.axes[:-1] + (inner,),
+                            placement=self.placement)
+        slowest = min(self.axes, key=lambda a: a.bandwidth)
+        return Topology((dataclasses.replace(slowest, size=n),))
+
+    # -- presets -------------------------------------------------------------
+
+    @classmethod
+    def uniform(cls, n: int, bandwidth: float = 1.0,
+                latency: float = 0.0) -> "Topology":
+        """The byte model as a topology: with the defaults (bandwidth 1,
+        latency 0) every transition costs exactly its Table-2 byte count, so
+        plans solved on it reproduce the byte-uniform plans bit-for-bit."""
+        return cls((Link("sp", n, bandwidth, latency),))
+
+    @classmethod
+    def flat_ici(cls, n: int, bandwidth: float = ICI_BW,
+                 latency: float = ICI_LATENCY) -> "Topology":
+        """Single-pod ring/mesh: every link is ICI."""
+        return cls((Link("ici", n, bandwidth, latency),))
+
+    @classmethod
+    def torus_2d(cls, nx: int, ny: int, bandwidth: float = ICI_BW,
+                 latency: float = ICI_LATENCY) -> "Topology":
+        """2D ICI torus (e.g. a TPU pod slice): two ICI axes, collectives
+        decompose into per-axis phases."""
+        return cls((Link("ici_x", nx, bandwidth, latency),
+                    Link("ici_y", ny, bandwidth, latency)))
+
+    @classmethod
+    def multihost(cls, n_hosts: int, per_host: int, *,
+                  dcn_bandwidth: float = DCN_BW,
+                  ici_bandwidth: float = ICI_BW,
+                  dcn_latency: float = DCN_LATENCY,
+                  ici_latency: float = ICI_LATENCY,
+                  placement: Optional[Mapping[int, Tuple[str, ...]]] = None,
+                  ) -> "Topology":
+        """ICI x DCN: ``n_hosts`` hosts of ``per_host`` ICI-connected chips,
+        hosts linked over DCN.  The DCN axis is outermost.  ``placement``
+        may pin dims to the inner ``"ici"`` axis (dims whose extent divides
+        only the per-host group, or that serving keeps host-local)."""
+        return cls((Link("dcn", n_hosts, dcn_bandwidth, dcn_latency),
+                    Link("ici", per_host, ici_bandwidth, ici_latency)),
+                   placement=placement)
+
+    @classmethod
+    def from_profile(cls, n: int,
+                     samples: Sequence[Tuple[float, float]],
+                     name: str = "measured") -> "Topology":
+        """Fit a single-axis alpha+beta model from measured collectives.
+
+        ``samples``: (global_bytes, seconds) pairs from timed all-gathers
+        over the n-device group.  Least-squares fit of t = a + M/beta gives
+        per-hop latency a/(n-1) and link bandwidth beta — the measured
+        counterpart of the datasheet presets.
+        """
+        if n < 2:
+            raise ValueError("from_profile needs a group of >= 2 devices")
+        if len(samples) < 2:
+            raise ValueError("from_profile needs >= 2 (bytes, seconds) "
+                             "samples")
+        xs = [float(b) for b, _ in samples]
+        ys = [float(t) for _, t in samples]
+        k = len(xs)
+        mx, my = sum(xs) / k, sum(ys) / k
+        sxx = sum((x - mx) ** 2 for x in xs)
+        if sxx == 0:
+            raise ValueError("from_profile samples must vary in bytes")
+        slope = sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / sxx
+        if slope <= 0:
+            raise ValueError(
+                f"non-physical fit: seconds must grow with bytes "
+                f"(slope {slope:.3e})")
+        intercept = max(my - slope * mx, 0.0)
+        return cls((Link(name, n, 1.0 / slope, intercept / (n - 1)),))
+
+
+def plan_seconds(topology: Topology, kinds_bytes: Sequence[Tuple[str, float,
+                                                                 Optional[int],
+                                                                 Optional[int]]]
+                 ) -> float:
+    """Sum transition_seconds over (kind, bytes, src, tgt) tuples."""
+    return sum(topology.transition_seconds(k, b, s, t)
+               for k, b, s, t in kinds_bytes)
+
+
+__all__ = [
+    "Link", "Topology", "plan_seconds",
+    "ICI_BW", "DCN_BW", "ICI_LATENCY", "DCN_LATENCY",
+]

@@ -1,12 +1,21 @@
-"""Production mesh construction.
+"""Production mesh construction + the Topology modelling its links.
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state — required because the dry-run overrides the
 host device count and smoke tests must keep seeing 1 device.
+
+A jax ``Mesh`` only names axes and sizes; the communication model (which
+links back the SP axis, at what bandwidth/latency) lives in a
+``core.topology.Topology`` built HERE, next to the mesh it describes, so
+every consumer — planner, serving engine, roofline, benchmarks — prices
+collectives on the same fabric the mesh actually runs on.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 from repro.core import compat
+from repro.core.topology import Topology
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,3 +29,52 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/benchmarks (e.g. (8,) single-axis rings)."""
     return compat.make_mesh(tuple(shape), tuple(axes))
+
+
+def production_topology(*, multi_pod: bool = False) -> Topology:
+    """Topology of the production mesh's SP (``model``) axis: 16 chips on
+    ICI.  The pod axis is DCN but carries only DP gradient all-reduces, so
+    the SP fabric is identical in both configurations."""
+    del multi_pod
+    return Topology.flat_ici(16)
+
+
+def mesh_topology(mesh, kind: str = "ici", *, sp_axis: str = "model",
+                  n_hosts: Optional[int] = None) -> Topology:
+    """Build the Topology describing ``mesh``'s SP axis.
+
+    ``kind``:
+      "ici"      — every SP link is ICI (single host / pod slice).
+      "torus"    — 2D ICI torus over the SP axis (near-square factoring).
+      "ici_dcn"  — the SP axis spans ``n_hosts`` hosts (default 2): outer
+                   DCN axis x inner per-host ICI axis.
+      "uniform"  — the byte model (bandwidth 1, latency 0); plans solved on
+                   it match the pre-topology byte-uniform plans exactly.
+    """
+    sp = mesh.shape.get(sp_axis, 1) if mesh is not None else 1
+    return topology_preset(kind, sp, n_hosts=n_hosts)
+
+
+def topology_preset(kind: str, sp: int, *,
+                    n_hosts: Optional[int] = None) -> Topology:
+    """Named Topology presets keyed by SP degree (the serve driver's
+    ``--topology`` flag resolves through this)."""
+    if kind in ("ici", "flat"):
+        return Topology.flat_ici(sp)
+    if kind == "uniform":
+        return Topology.uniform(sp)
+    if kind == "torus":
+        nx = 1
+        for f in range(int(sp ** 0.5), 0, -1):
+            if sp % f == 0:
+                nx = f
+                break
+        return Topology.torus_2d(nx, sp // nx)
+    if kind == "ici_dcn":
+        hosts = n_hosts or 2
+        if sp % hosts:
+            raise ValueError(f"SP degree {sp} not divisible by "
+                             f"{hosts} hosts")
+        return Topology.multihost(hosts, sp // hosts)
+    raise ValueError(f"unknown topology kind {kind!r} "
+                     "(want ici|torus|ici_dcn|uniform)")

@@ -1,7 +1,13 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id>``.
 
-Loads (or initialises) a model, runs batched prefill + greedy decode through
-the ServingEngine — the same serve_step the decode_* dry-run cells lower.
+Loads (or initialises) a model and runs batched prefill + greedy decode
+through the plan-aware ServingEngine.  ``--devices N --mode dsp`` actually
+serves SHARDED: the driver builds the (data x model) mesh, the Topology
+modelling its links (``--topology``), and hands both to the engine, which
+derives its (plan, schedule, sharder) triple from them; the KV caches are
+asserted to land sequence-sharded on the mesh.  ``--replan M`` then
+exercises the elastic-resize path: the engine re-plans onto M devices and
+serves the same prompts again.
 """
 import argparse
 import os
@@ -14,7 +20,22 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="simulate N host devices (XLA flag; 0 = leave as-is)")
+    ap.add_argument("--mode", default="dsp",
+                    choices=["dsp", "tp", "none"],
+                    help="model-axis role when serving sharded")
+    ap.add_argument("--topology", default="ici",
+                    choices=["ici", "torus", "ici_dcn", "uniform"],
+                    help="link model of the SP axis (prices the plan in "
+                    "seconds)")
+    ap.add_argument("--hosts", type=int, default=None,
+                    help="host count for --topology ici_dcn")
+    ap.add_argument("--data", type=int, default=1,
+                    help="data-parallel axis size (model = devices / data)")
+    ap.add_argument("--replan", type=int, default=0,
+                    help="after serving, re-plan onto this many devices and "
+                    "serve again (elastic resize)")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -24,6 +45,7 @@ def main(argv=None):
     import jax
     from repro import configs
     from repro.models.lm import init_lm
+    from repro.parallel.partition import ParallelPlan
     from repro.serving.engine import ServingEngine
 
     spec = configs.get(args.arch)
@@ -37,14 +59,51 @@ def main(argv=None):
         params = tree["params"]
         print(f"restored step {step}")
 
-    eng = ServingEngine(params, cfg,
-                        max_len=args.prompt_len + args.new_tokens)
+    n_dev = len(jax.devices())
+    mesh = topo = None
+    plan = ParallelPlan(mode="none")
+    if args.mode != "none" and n_dev > 1:
+        from repro.launch.mesh import make_mesh, mesh_topology
+        if n_dev % args.data:
+            raise SystemExit(f"{n_dev} devices not divisible by "
+                             f"--data {args.data}")
+        mesh = make_mesh((args.data, n_dev // args.data), ("data", "model"))
+        topo = mesh_topology(mesh, args.topology, n_hosts=args.hosts)
+        plan = ParallelPlan(mode=args.mode)
+        print(f"mesh {dict(mesh.shape)}; topology "
+              f"{[(a.name, a.size) for a in topo.axes]} "
+              f"bottleneck {topo.bottleneck_bandwidth/1e9:.1f} GB/s")
+
+    max_len = args.prompt_len + args.new_tokens
+    eng = ServingEngine(params, cfg, max_len=max_len, mesh=mesh, plan=plan,
+                        topology=topo)
+    if eng.schedule is not None:
+        print(f"planned switches={eng.schedule.n_switches()} "
+              f"seconds/step={eng.schedule.per_device_seconds():.3e}")
+
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
-    out = eng.generate(prompts, max_new_tokens=args.new_tokens)
-    for i in range(args.batch):
-        print(f"req{i}: prompt={prompts[i].tolist()[:8]}... "
-              f"generated={out[i].tolist()}")
+
+    def run(tag):
+        # check_sharding asserts the KV caches of the ONE prefill generate
+        # runs landed sequence-sharded on the mesh
+        out = eng.generate(prompts, max_new_tokens=args.new_tokens,
+                           check_sharding=True)
+        if eng.mesh is not None:
+            print(f"{tag}: KV caches sequence-sharded over "
+                  f"{eng.sp_degree}-way model axis: OK")
+        for i in range(args.batch):
+            print(f"{tag} req{i}: prompt={prompts[i].tolist()[:8]}... "
+                  f"generated={out[i].tolist()}")
+        return out
+
+    out = run(f"serve[{n_dev}dev]")
+    if args.replan:
+        eng.replan(args.replan)
+        out2 = run(f"replan[{args.replan}dev]")
+        import numpy as np
+        same = bool(np.array_equal(np.asarray(out), np.asarray(out2)))
+        print(f"replan output identical: {same}")
     return out
 
 

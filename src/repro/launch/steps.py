@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchSpec
+from repro.launch.mesh import mesh_topology
 from repro.models import lm as LM
 from repro.models import encdec as ED
 from repro.models import transformer2d as T2D
@@ -123,9 +124,12 @@ def build_lm_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
         # planned switching schedule: single source of truth for every
         # stage-boundary layout in the model forward
         sp = mesh.shape.get("model", 1)
-        schedule = LM.dsp_schedule(cfg, sp, seq=seq, batch=batch)
+        topo = mesh_topology(mesh, "ici")
+        schedule = LM.dsp_schedule(cfg, sp, seq=seq, batch=batch,
+                                   topology=topo)
         meta["planned_switches"] = schedule.n_switches()
         meta["planned_comm_bytes"] = schedule.per_device_bytes(sp)
+        meta["planned_comm_seconds"] = schedule.per_device_seconds()
     sharder = make_sharder(mesh, plan, schedule=schedule)
     opt_cfg = opt_cfg or auto_opt_cfg(LM.param_counts(cfg)["total"])
 
@@ -258,6 +262,8 @@ def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
                                    batch=batch)
         meta["planned_switches"] = schedule.n_switches()
         meta["planned_comm_bytes"] = schedule.per_device_bytes(sp)
+        meta["planned_comm_seconds"] = schedule.per_device_seconds(
+            mesh_topology(mesh, "ici"))
     sharder = make_sharder(mesh, plan, schedule=schedule)
     opt_cfg = opt_cfg or OptConfig()
     dp = _dp(mesh)
@@ -383,6 +389,8 @@ def build_t2d_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
                                   batch=batch)
         meta["planned_switches"] = psched.schedule.n_switches()
         meta["planned_comm_bytes"] = psched.schedule.per_device_bytes(sp)
+        meta["planned_comm_seconds"] = psched.schedule.per_device_seconds(
+            mesh_topology(mesh, "ici"))
     return Cell(spec.name, shape_name, "train", train_step,
                 (params_s, opt_s, batch_s),
                 (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),

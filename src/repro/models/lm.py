@@ -165,11 +165,13 @@ def stage_period(cfg: LMConfig) -> int:
 
 
 def dsp_schedule(cfg: LMConfig, n: int, *, seq: Optional[int] = None,
-                 batch: Optional[int] = None) -> Schedule:
+                 batch: Optional[int] = None, topology=None) -> Schedule:
     """Solve the switching plan (enter sequence-sharded from the dataloader
-    split, return to it for the loss) and validate it is scan-periodic."""
+    split, return to it for the loss) and validate it is scan-periodic.
+    ``topology`` prices the plan in seconds on the mesh's links (byte model
+    when None)."""
     sched = plan_schedule(stages(cfg, seq=seq, batch=batch), (1, 2),
-                          n=max(n, 1), initial=1, final=1)
+                          n=max(n, 1), initial=1, final=1, topology=topology)
     sched.periodic(stage_period(cfg))          # scanned layers: steady state
     return sched
 
@@ -178,12 +180,14 @@ def _with_planned_schedule(sharder: Sharder, cfg: LMConfig,
                            seq: Optional[int] = None,
                            batch: Optional[int] = None) -> Sharder:
     """Attach the planned schedule when running DSP with a mesh and none was
-    provided — the plan, not the model, decides the stage layouts."""
+    provided — the plan, not the model, decides the stage layouts, priced on
+    the sharder's topology when it carries one."""
     if (sharder.mesh is None or sharder.plan.mode != "dsp"
             or sharder.schedule is not None):
         return sharder
     return sharder.with_schedule(
-        dsp_schedule(cfg, sharder.sp_size, seq=seq, batch=batch))
+        dsp_schedule(cfg, sharder.sp_size, seq=seq, batch=batch,
+                     topology=sharder.topology))
 
 
 # ---------------------------------------------------------------------------

@@ -217,11 +217,18 @@ class Sharder:
     schedule: Optional[Any] = None
     resid_dim: Optional[int] = None
     mixer_dim: Optional[int] = None
+    # mesh communication model (core.topology.Topology) the schedule was (or
+    # will be) solved against — carried alongside the plan so model forwards
+    # that attach a schedule late price it on the same fabric
+    topology: Optional[Any] = None
 
     def with_schedule(self, schedule) -> "Sharder":
         resid, mixer = _stage_dims(self.plan, schedule)
+        topo = (schedule.topology if getattr(schedule, "topology", None)
+                is not None else self.topology)
         return dataclasses.replace(self, schedule=schedule,
-                                   resid_dim=resid, mixer_dim=mixer)
+                                   resid_dim=resid, mixer_dim=mixer,
+                                   topology=topo)
 
     @property
     def sp_size(self) -> int:
@@ -398,11 +405,17 @@ def _stage_dims(plan: ParallelPlan, schedule) -> Tuple[Optional[int],
 
 
 def make_sharder(mesh: Optional[Mesh], plan: ParallelPlan,
-                 schedule=None) -> Sharder:
+                 schedule=None, topology=None) -> Sharder:
+    """``topology`` (core.topology.Topology) models the SP axis's links;
+    when ``schedule`` already carries one it wins (the plan was solved on
+    it)."""
     resid, mixer = _stage_dims(plan, schedule)
+    if schedule is not None and getattr(schedule, "topology", None) is not None:
+        topology = schedule.topology
     if mesh is None:
         return Sharder(mesh=None, plan=plan, schedule=schedule,
-                       resid_dim=resid, mixer_dim=mixer)
+                       resid_dim=resid, mixer_dim=mixer, topology=topology)
     dp = tuple(a for a in mesh.axis_names if a != "model")
     return Sharder(mesh=mesh, plan=plan, dp=dp, sp="model",
-                   schedule=schedule, resid_dim=resid, mixer_dim=mixer)
+                   schedule=schedule, resid_dim=resid, mixer_dim=mixer,
+                   topology=topology)

@@ -1,4 +1,5 @@
-"""Serving engine: batched prefill + decode with sharded KV/state caches.
+"""Plan-aware serving engine: batched prefill + decode with sharded KV/state
+caches, re-planning itself on elastic resize.
 
 The decode caches stay *sequence-sharded* over the model axis in DSP mode
 (Sharder.kv_cache): each device holds a slice of every request's KV history,
@@ -6,20 +7,33 @@ the per-step softmax merge across shards lowers to small all-reduces — the
 DSP answer to decode, where Ulysses-style head sharding would hit the
 kv-head divisibility wall (kv=8 heads on a 16-wide axis).
 
-``ServingEngine`` is the host-side loop used by the serving example:
-accepts requests, runs one shared prefill per request batch, then steps all
-live sequences together (static-batch continuous decoding).
+``ServingEngine`` owns the full parallel configuration as a derived triple
+``(plan, schedule, sharder)``: from cfg + mesh + ``core.topology.Topology``
+it solves the switching schedule (priced in seconds on the topology), builds
+the Sharder, places the parameters, and jit-compiles prefill/decode.
+``replan(n_devices)`` re-derives the whole triple when elastic SP resize
+changes the device count — new mesh over the surviving devices, topology
+resized, schedule re-solved, params re-placed — which is the serving-side
+answer to "the plan depends on N".
+
+``generate`` is the host-side static-batch loop: one shared prefill, then
+all live sequences step together.  Per-request ``max_new_tokens`` and EOS
+early-exit are handled by masking OUTSIDE the jitted decode step (its
+shapes never change, so no retraces); the loop exits early once every row
+has finished.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import lm as LM
-from repro.parallel.partition import ParallelPlan, Sharder, make_sharder
+from repro.parallel.partition import (ParallelPlan, Sharder, make_sharder,
+                                      param_pspecs)
 
 
 @dataclasses.dataclass
@@ -29,6 +43,17 @@ class Request:
     generated: Optional[list] = None
 
 
+KV_SEQ_DIM = 3          # (periods, B, Hkv, S, D): the sequence axis
+
+
+def _is_kv_leaf(path, leaf) -> bool:
+    """The ONE definition of 'this cache leaf is a stacked KV tensor' —
+    shared by cache_pspecs, the sharding assert, and the prefill widener so
+    a cache-layout change cannot silently desynchronise them."""
+    keys = [str(getattr(k, "key", "")) for k in path]
+    return ("k" in keys or "v" in keys) and getattr(leaf, "ndim", 0) == 5
+
+
 def cache_pspecs(caches, plan: ParallelPlan):
     """PartitionSpec tree for a cache pytree: KV sharded along the sequence
     dim (DSP decode); SSM state sharded along heads; conv/pos replicated."""
@@ -36,7 +61,7 @@ def cache_pspecs(caches, plan: ParallelPlan):
 
     def rule(path, leaf):
         keys = [str(getattr(k, "key", "")) for k in path]
-        if "k" in keys or "v" in keys:          # (periods, B, Hkv, S, D)
+        if "k" in keys or "v" in keys:          # KV leaves (see _is_kv_leaf)
             if plan.mode in ("dsp", "tp"):       # seq-sharded KV either way
                 return P(None, "data", None, "model", None)
             return P(None, "data", None, None, None)
@@ -51,16 +76,151 @@ def cache_pspecs(caches, plan: ParallelPlan):
     return jax.tree_util.tree_map_with_path(rule, caches)
 
 
+def assert_kv_cache_on_mesh(caches, mesh, plan: ParallelPlan):
+    """Assert every KV leaf of a prefill/decode cache actually landed
+    sequence-sharded over the mesh's SP axis (the contract ``cache_pspecs``
+    declares).  Uses ``shard_shape`` so it holds for any concrete sharding
+    type jit produced."""
+    sp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if sp <= 1 or plan.mode not in ("dsp", "tp"):
+        return
+
+    def check(path, leaf):
+        if _is_kv_leaf(path, leaf):
+            shard = leaf.sharding.shard_shape(leaf.shape)
+            assert shard[KV_SEQ_DIM] * sp == leaf.shape[KV_SEQ_DIM], (
+                f"KV cache leaf not sequence-sharded over the {sp}-way "
+                f"model axis: global {leaf.shape}, per-device {shard}")
+
+    jax.tree_util.tree_map_with_path(check, caches)
+
+
+def _submesh(n_devices: int, data: int, axis_names=("data", "model")):
+    """Mesh over the first ``n_devices`` (the elastic-resize survivor set):
+    (data, n_devices // data).  Built from an explicit device array so it
+    works for any subset size, unlike make_mesh which wants all devices."""
+    from jax.sharding import Mesh
+    if n_devices % data:
+        raise ValueError(f"{n_devices} devices not divisible by data={data}")
+    devs = np.array(jax.devices()[:n_devices]).reshape(
+        data, n_devices // data)
+    return Mesh(devs, axis_names)
+
+
 class ServingEngine:
+    """``mesh``/``plan``/``topology`` derive the engine's parallel triple;
+    all three default to the unsharded single-device engine.  A pre-built
+    ``sharder`` is still accepted (tests, custom layouts) and wins over the
+    derived one."""
+
     def __init__(self, params, cfg: LM.LMConfig, *, max_len: int = 512,
-                 sharder: Optional[Sharder] = None, backend: str = "ref"):
-        self.params = params
+                 mesh=None, plan: Optional[ParallelPlan] = None,
+                 topology=None, sharder: Optional[Sharder] = None,
+                 backend: str = "ref"):
         self.cfg = cfg
         self.max_len = max_len
-        self.sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
         self.backend = backend
+        self._build(mesh=mesh, plan=plan, topology=topology,
+                    sharder=sharder, params=params)
+        # from the ADOPTED mesh (a pre-built sharder brings its own), so a
+        # replan preserves the data-parallel axis size
+        self._data_axis = (self.mesh.shape.get("data", 1)
+                           if self.mesh is not None else 1)
+        # remembered across replans: a downsize to 1 device degenerates the
+        # LIVE plan to mode "none", but a later upsize must restore the
+        # sharded plan and the original fabric model, not the degenerate one
+        self._plan_template = self.plan if self.plan.mode != "none" else None
+        self._topology_template = self.topology
+
+    # -- (plan, schedule, sharder) derivation --------------------------------
+
+    def _build(self, *, mesh, plan, topology, sharder, params):
+        if sharder is not None:
+            plan = sharder.plan
+            mesh = sharder.mesh
+            topology = sharder.topology
+        if plan is None:
+            plan = (ParallelPlan(mode="dsp") if mesh is not None
+                    else ParallelPlan(mode="none"))
+        sp = mesh.shape.get("model", 1) if mesh is not None else 1
+        if topology is None and mesh is not None and sp > 1:
+            from repro.core.topology import Topology
+            topology = Topology.flat_ici(sp)
+        schedule = None
+        if sharder is None and plan.mode == "dsp" and sp > 1:
+            if self.max_len % sp:
+                raise ValueError(
+                    f"max_len {self.max_len} must be divisible by the SP "
+                    f"degree {sp} (the KV cache is sequence-sharded)")
+            schedule = LM.dsp_schedule(self.cfg, sp, topology=topology)
+        self.mesh = mesh
+        self.plan = plan
+        self.topology = topology
+        self.schedule = schedule
+        self.sharder = sharder if sharder is not None else make_sharder(
+            mesh, plan, schedule=schedule, topology=topology)
+        self.params = self._place_params(params)
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
+
+    def _place_params(self, params):
+        if self.mesh is None:
+            return params
+        from jax.sharding import NamedSharding
+        specs = param_pspecs(params, self.plan,
+                             axis_sizes=dict(self.mesh.shape))
+        return jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
+            params, specs)
+
+    @property
+    def sp_degree(self) -> int:
+        return self.sharder.sp_size
+
+    def replan(self, n_devices: int, *, topology=None):
+        """Elastic resize: re-derive (plan, schedule, sharder) for a new
+        device count, rebuild the mesh over the surviving devices, re-place
+        the parameters, and re-jit.  ``topology`` overrides the resized
+        model of the current fabric.  Returns self.
+
+        Callers holding live caches migrate them with ``shard_caches``
+        (sequence-resharding is one all-to-all per leaf under the hood);
+        ``generate`` prefills per batch so it needs nothing extra.
+        """
+        avail = len(jax.devices())
+        if n_devices > avail:
+            raise ValueError(f"replan({n_devices}): only {avail} devices")
+        data = self._data_axis if n_devices % self._data_axis == 0 else 1
+        if n_devices == 1:
+            if topology is not None:
+                self._topology_template = topology  # honoured on next upsize
+            mesh, plan, topology = None, ParallelPlan(mode="none"), None
+        else:
+            mesh = _submesh(n_devices, data)
+            sp = mesh.shape["model"]
+            # restore the remembered sharded plan/fabric, not whatever a
+            # previous downsize degenerated the live ones to
+            plan = self._plan_template or ParallelPlan(mode="dsp")
+            if topology is not None:
+                self._topology_template = topology
+            elif self._topology_template is not None and sp > 1:
+                topology = self._topology_template.resized(sp)
+        self._build(mesh=mesh, plan=plan, topology=topology, sharder=None,
+                    params=self.params)
+        return self
+
+    def shard_caches(self, caches):
+        """Move a cache pytree onto the engine's current mesh (elastic
+        resize migration of in-flight decode state)."""
+        if self.mesh is None:
+            return jax.device_put(caches)
+        from jax.sharding import NamedSharding
+        specs = cache_pspecs(caches, self.plan)
+        return jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
+            caches, specs)
+
+    # -- compiled steps ------------------------------------------------------
 
     def _prefill_impl(self, tokens):
         sh = self.sharder
@@ -69,29 +229,120 @@ class ServingEngine:
             remat=False)
         # widen caches to max_len for subsequent decode appends
         def widen(path, a):
-            keys = [str(getattr(k, "key", "")) for k in path]
-            if ("k" in keys or "v" in keys) and a.ndim == 5:
-                pad = self.max_len - a.shape[3]
+            if _is_kv_leaf(path, a):
+                pad = self.max_len - a.shape[KV_SEQ_DIM]
                 if pad > 0:
-                    a = jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+                    widths = [(0, 0)] * a.ndim
+                    widths[KV_SEQ_DIM] = (0, pad)
+                    a = jnp.pad(a, widths)
             return a
-        caches = {"pos": caches["pos"],
-                  "periods": jax.tree_util.tree_map_with_path(
-                      widen, caches["periods"])}
+        periods = jax.tree_util.tree_map_with_path(widen, caches["periods"])
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            specs = cache_pspecs(periods, self.plan)
+            periods = jax.tree_util.tree_map(
+                lambda a, s: jax.lax.with_sharding_constraint(
+                    a, NamedSharding(self.mesh, s)),
+                periods, specs)
+        caches = {"pos": caches["pos"], "periods": periods}
         return logits, caches
 
     def _decode_impl(self, token, caches):
         return LM.forward_decode(self.params, token, caches, self.cfg,
                                  sharder=self.sharder, backend=self.backend)
 
-    def generate(self, prompts: jax.Array, max_new_tokens: int = 16,
-                 greedy: bool = True):
-        """prompts: (B, S) -> (B, max_new_tokens) generated ids."""
+    # -- host-side serving loop ----------------------------------------------
+
+    def generate(self, prompts: jax.Array,
+                 max_new_tokens: Union[int, Sequence[int]] = 16,
+                 greedy: bool = True, *, eos_id: Optional[int] = None,
+                 pad_id: int = 0, check_sharding: bool = False):
+        """prompts: (B, S) -> (B, max(max_new_tokens)) generated ids.
+
+        ``max_new_tokens`` may be one int or a per-request sequence; rows
+        that hit their budget (or emit ``eos_id``) keep stepping through the
+        SAME jitted decode — their outputs are masked to ``pad_id``.
+        Without an EOS the masks depend only on (step, budgets), so the
+        loop stays fully async (no per-step host sync); with ``eos_id`` the
+        host inspects each token and exits early once every row finished.
+        ``check_sharding`` asserts the prefill KV caches landed on the mesh
+        (the contract the serve driver verifies).
+        """
+        b = prompts.shape[0]
+        if isinstance(max_new_tokens, (int, np.integer)):
+            limits = np.full((b,), int(max_new_tokens), np.int64)
+        else:
+            limits = np.asarray(max_new_tokens, np.int64)
+            if limits.shape != (b,):
+                raise ValueError(f"max_new_tokens shape {limits.shape} "
+                                 f"!= batch ({b},)")
+        if limits.min() < 1:
+            raise ValueError("max_new_tokens must be >= 1 per request")
+        steps = int(limits.max())
+        if prompts.shape[1] + steps > self.max_len:
+            raise ValueError(
+                f"prompt {prompts.shape[1]} + new {steps} exceeds "
+                f"max_len {self.max_len}")
+
         logits, caches = self._prefill(prompts)
-        out: List[jax.Array] = []
+        if check_sharding:
+            assert_kv_cache_on_mesh(caches["periods"], self.mesh, self.plan)
         token = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        for _ in range(max_new_tokens):
-            out.append(token[:, 0])
+
+        if eos_id is None:
+            # no EOS: the budget masks depend only on (t, limits), never on
+            # token VALUES, so the whole loop stays on device and jit
+            # dispatch runs ahead of the host (the serving hot path — a
+            # per-step host sync would serialize a device round-trip into
+            # every generated token); ragged budgets mask once at the end
+            out: List[jax.Array] = []
+            for t in range(steps):
+                out.append(token[:, 0])
+                if t + 1 < steps:
+                    logits, caches = self._decode(token, caches)
+                    token = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            stacked = jnp.stack(out, axis=1)
+            if int(limits.min()) < steps:
+                stacked = jnp.where(
+                    jnp.asarray(limits)[:, None] > jnp.arange(steps)[None],
+                    stacked, pad_id)
+            return stacked
+
+        done = np.zeros((b,), bool)
+        cols: List[np.ndarray] = []
+        for t in range(steps):
+            cur = np.asarray(token[:, 0])
+            active = (~done) & (t < limits)
+            cols.append(np.where(active, cur, pad_id))
+            if eos_id is not None:
+                done |= active & (cur == eos_id)
+            done |= (t + 1) >= limits
+            if t + 1 >= steps:
+                break
+            if done.all():
+                cols.extend([np.full((b,), pad_id, cols[0].dtype)]
+                            * (steps - t - 1))
+                break
             logits, caches = self._decode(token, caches)
             token = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        return jnp.stack(out, axis=1)
+        return jnp.asarray(np.stack(cols, axis=1))
+
+    def serve(self, requests: List[Request], *,
+              eos_id: Optional[int] = None, pad_id: int = 0):
+        """Static-batch a list of Requests (equal prompt lengths), honouring
+        each request's ``max_new_tokens``; fills ``Request.generated``."""
+        lens = {int(r.prompt.shape[0]) for r in requests}
+        if len(lens) != 1:
+            raise ValueError(f"static batch needs equal prompt lengths, "
+                             f"got {sorted(lens)}")
+        prompts = jnp.stack([r.prompt for r in requests])
+        out = self.generate(prompts,
+                            [r.max_new_tokens for r in requests],
+                            eos_id=eos_id, pad_id=pad_id)
+        arr = np.asarray(out)
+        for i, r in enumerate(requests):
+            row = arr[i, :r.max_new_tokens]
+            if eos_id is not None and (row == eos_id).any():
+                row = row[:int(np.argmax(row == eos_id)) + 1]
+            r.generated = row.tolist()
+        return requests

@@ -15,9 +15,10 @@ from hypothesis import given, settings
 from repro.core.dsp import comm_volume_bytes
 from repro.core.layout import SeqLayout, local_shape
 from repro.core.plan import (Stage, brute_force_cost, brute_force_plan,
-                             plan_cost_bytes, plan_switches,
-                             plan_switches_dp, switch_count,
+                             plan_cost_bytes, plan_cost_seconds,
+                             plan_switches, plan_switches_dp, switch_count,
                              transformer2d_stages)
+from repro.core.topology import Topology
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +124,70 @@ def test_dp_exact_on_weighted_instances(problem):
     g = plan_switches(stages, dims, initial)
     cg = plan_cost_bytes(stages, g, n=8, initial=initial, final=final)
     assert cd <= cg + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Topology-aware pricing (seconds on a modeled mesh)
+# ---------------------------------------------------------------------------
+
+@given(weighted_stage_problems())
+@settings(max_examples=150, deadline=None)
+def test_uniform_topology_reproduces_byte_plans(problem):
+    """``Topology.uniform(n)`` IS the byte model: the DP run on it must
+    return bit-for-bit the plan the byte-uniform DP returns, at the same
+    cost (seconds on unit bandwidth == Table-2 bytes)."""
+    stages, dims, initial, final = problem
+    for n in (2, 8):
+        byte_plan = plan_switches_dp(stages, dims, n=n, initial=initial,
+                                     final=final)
+        topo_plan = plan_switches_dp(stages, dims, n=n, initial=initial,
+                                     final=final,
+                                     topology=Topology.uniform(n))
+        assert byte_plan == topo_plan
+        assert plan_cost_seconds(stages, topo_plan, Topology.uniform(n),
+                                 initial=initial, final=final) == \
+            pytest.approx(plan_cost_bytes(stages, byte_plan, n=n,
+                                          initial=initial, final=final))
+
+
+def test_dp_topology_regression_ici_dcn():
+    """REGRESSION (topology-aware planning): on an ICI x DCN mesh (2 hosts
+    x 4 chips, dims 3/4 host-local) the DP must keep every switch on the
+    fast ICI axis, returning a strictly cheaper plan IN SECONDS than the
+    byte-uniform plan on the same stage list — the byte model is blind to
+    the difference (identical byte cost) and picks DCN-crossing dims."""
+    topo = Topology.multihost(2, 4, placement={3: ("ici",), 4: ("ici",)})
+    stages = [Stage(frozenset({1, 3}), "a"),
+              Stage(frozenset({2, 4}), "b")] * 4
+    dims = [1, 2, 3, 4]
+    byte_plan = plan_switches_dp(stages, dims, n=topo.size)
+    topo_plan = plan_switches_dp(stages, dims, n=topo.size, topology=topo)
+    assert set(byte_plan) <= {1, 2}          # byte model crosses DCN
+    assert set(topo_plan) <= {3, 4}          # topology plan never does
+    s_byte = plan_cost_seconds(stages, byte_plan, topo)
+    s_topo = plan_cost_seconds(stages, topo_plan, topo)
+    assert s_topo < s_byte                   # strictly cheaper in seconds
+    # both plans are byte-identical — only the topology can tell them apart
+    assert plan_cost_bytes(stages, byte_plan, n=topo.size) == \
+        pytest.approx(plan_cost_bytes(stages, topo_plan, n=topo.size))
+    # exactness: the topology DP matches the exponential oracle
+    assert s_topo == pytest.approx(
+        brute_force_cost(stages, dims, n=topo.size, topology=topo))
+
+
+@given(weighted_stage_problems())
+@settings(max_examples=75, deadline=None)
+def test_dp_exact_on_ici_dcn_topology(problem):
+    """The DP stays exact (== exponential oracle) under asymmetric per-dim
+    link placements, not just under byte weights."""
+    stages, dims, initial, final = problem
+    topo = Topology.multihost(2, 2, placement={d: ("ici",)
+                                               for d in dims[1:]})
+    d = plan_switches_dp(stages, dims, n=4, initial=initial, final=final,
+                         topology=topo)
+    cd = plan_cost_seconds(stages, d, topo, initial=initial, final=final)
+    assert cd == pytest.approx(brute_force_cost(
+        stages, dims, n=4, initial=initial, final=final, topology=topo))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,250 @@
+"""Topology cost model + topology-aware planner tests (no optional deps —
+these run everywhere; the hypothesis property variants live in
+tests/test_plan.py).
+
+The two contracts under test:
+
+1. ``Topology.uniform(n)`` IS the byte model: every transition's seconds
+   equal its Table-2 byte count, and plans solved on it are bit-for-bit the
+   plans the byte-uniform solver produces.
+2. On an asymmetric ICI x DCN topology the DP never switches across the
+   slow axis when an ICI-local dim is free, and its plan is strictly
+   cheaper in seconds than the byte-uniform plan on the same stage list.
+"""
+import random
+
+import pytest
+
+from repro.core.dsp import comm_volume_bytes
+from repro.core.plan import (Stage, brute_force_cost, make_plan,
+                             plan_cost_bytes, plan_cost_seconds,
+                             plan_switches_dp, transition_seconds)
+from repro.core.schedule import plan_schedule
+from repro.core.topology import (DCN_BW, ICI_BW, Link, Topology)
+
+
+def _random_instances(seed=0, count=200, weighted=False):
+    rng = random.Random(seed)
+    for _ in range(count):
+        dims = list(range(1, rng.randint(2, 4) + 1))
+        stages = []
+        for i in range(rng.randint(1, 6)):
+            forbid = set(rng.sample(dims, rng.randint(0, len(dims) - 1)))
+            shape = (rng.choice([None, (2, rng.choice([4, 64, 1024]), 8)])
+                     if weighted else None)
+            stages.append(Stage(frozenset(forbid), f"s{i}", shape))
+        initial = rng.choice([None] + dims)
+        final = rng.choice([None] + dims) if weighted else None
+        n = rng.choice([2, 4, 8])
+        yield stages, dims, initial, final, n
+
+
+# ---------------------------------------------------------------------------
+# Contract 1: uniform topology == byte model
+# ---------------------------------------------------------------------------
+
+def test_uniform_transition_seconds_equal_table2_bytes():
+    for n in (2, 3, 4, 8, 16, 256):
+        topo = Topology.uniform(n)
+        assert topo.is_uniform
+        for m in (1, 17, 4096, 1 << 20, 1 << 33):
+            for kind, src, tgt in (("switch", 1, 2), ("gather", 1, None),
+                                   ("split", None, 1), ("keep", 1, 1)):
+                assert topo.transition_seconds(kind, m, src, tgt) == \
+                    comm_volume_bytes(kind, m, n)
+
+
+def test_uniform_topology_reproduces_byte_plans_bit_for_bit():
+    for stages, dims, initial, final, n in _random_instances(
+            seed=1, count=300, weighted=True):
+        byte_plan = plan_switches_dp(stages, dims, n=n, initial=initial,
+                                     final=final)
+        topo_plan = plan_switches_dp(stages, dims, n=n, initial=initial,
+                                     final=final,
+                                     topology=Topology.uniform(n))
+        assert byte_plan == topo_plan
+        assert make_plan(stages, dims, n=n, initial=initial, final=final) \
+            == make_plan(stages, dims, n=n, initial=initial, final=final,
+                         topology=Topology.uniform(n))
+
+
+def test_uniform_topology_reproduces_model_schedules():
+    import jax.numpy as jnp
+    from repro.models.lm import LMConfig, dsp_schedule
+    cfg = LMConfig(name="t", n_layers=4, d_model=64, n_heads=4, n_kv_heads=2,
+                   head_dim=16, d_ff=128, vocab=64, dtype=jnp.float32)
+    for n in (2, 4, 8):
+        base = dsp_schedule(cfg, n, seq=64, batch=2)
+        topo = dsp_schedule(cfg, n, seq=64, batch=2,
+                            topology=Topology.uniform(n))
+        assert base.dims == topo.dims
+        # and seconds on the unit-bandwidth fabric equal planned bytes
+        assert topo.per_device_seconds() == \
+            pytest.approx(base.per_device_bytes(n))
+
+
+def test_plan_cost_seconds_uniform_equals_bytes():
+    for stages, dims, initial, final, n in _random_instances(
+            seed=2, count=50, weighted=True):
+        plan = plan_switches_dp(stages, dims, n=n, initial=initial,
+                                final=final)
+        cb = plan_cost_bytes(stages, plan, n=n, initial=initial, final=final)
+        cs = plan_cost_seconds(stages, plan, Topology.uniform(n),
+                               initial=initial, final=final)
+        assert cs == pytest.approx(cb)
+
+
+# ---------------------------------------------------------------------------
+# Contract 2: asymmetric ICI x DCN
+# ---------------------------------------------------------------------------
+
+def _ici_dcn():
+    # 2 hosts x 4 chips; dims 3 and 4 are host-local (their shard group is
+    # the inner ICI axis only), dims 1 and 2 span the full DCN x ICI group
+    return Topology.multihost(2, 4, placement={3: ("ici",), 4: ("ici",)})
+
+
+def test_dp_never_crosses_dcn_when_ici_dim_free():
+    topo = _ici_dcn()
+    stages = [Stage(frozenset({1, 3}), "a"), Stage(frozenset({2, 4}), "b")] * 4
+    dims = [1, 2, 3, 4]
+    plan = plan_switches_dp(stages, dims, n=topo.size, topology=topo)
+    # every switch stays within the host-local dims — never across DCN
+    assert set(plan) <= {3, 4}, plan
+    assert plan == [4, 3] * 4
+    # exact: matches the exponential oracle in seconds
+    assert plan_cost_seconds(stages, plan, topo) == pytest.approx(
+        brute_force_cost(stages, dims, n=topo.size, topology=topo))
+
+
+def test_topology_plan_strictly_cheaper_than_byte_plan_in_seconds():
+    topo = _ici_dcn()
+    stages = [Stage(frozenset({1, 3}), "a"), Stage(frozenset({2, 4}), "b")] * 3
+    dims = [1, 2, 3, 4]
+    byte_plan = plan_switches_dp(stages, dims, n=topo.size)
+    topo_plan = plan_switches_dp(stages, dims, n=topo.size, topology=topo)
+    assert byte_plan != topo_plan
+    sb = plan_cost_seconds(stages, byte_plan, topo)
+    st = plan_cost_seconds(stages, topo_plan, topo)
+    assert st < sb
+    # same switch COUNT — the byte model cannot see the difference ...
+    assert plan_cost_bytes(stages, byte_plan, n=topo.size) == \
+        pytest.approx(plan_cost_bytes(stages, topo_plan, n=topo.size))
+    # ... but in time the DCN-crossing plan is >4x slower on this fabric
+    assert sb > 4 * st
+
+
+# ---------------------------------------------------------------------------
+# Collective cost functions (alpha + beta sanity)
+# ---------------------------------------------------------------------------
+
+def test_alpha_beta_models():
+    topo = Topology((Link("ici", 8, 100.0, latency=0.5),))
+    m = 800.0
+    # all-gather: (n-1) hops of alpha + M over the link
+    assert topo.all_gather_seconds(m) == pytest.approx(7 * 0.5 + 8.0)
+    # all-reduce = 2x (ring RS+AG)
+    assert topo.all_reduce_seconds(m) == pytest.approx(2 * (7 * 0.5) + 16.0)
+    # all-to-all: folded convention -> shard M/N over the link + alpha
+    assert topo.all_to_all_seconds(m) == pytest.approx(7 * 0.5 + 1.0)
+    # degenerate group is free
+    assert Topology.uniform(1).all_to_all_seconds(m) == 0.0
+    assert Topology.uniform(1).all_gather_seconds(m) == 0.0
+
+
+def test_multihost_bottleneck_and_shares():
+    topo = Topology.multihost(2, 4)
+    assert topo.size == 8
+    assert topo.bottleneck_bandwidth == DCN_BW
+    m = 1 << 20
+    # hierarchical all-to-all charges the DCN share at DCN bandwidth: it
+    # must cost more than the same bytes on flat ICI, less than pure DCN
+    flat = Topology.flat_ici(8)
+    slow = Topology((Link("dcn", 8, DCN_BW, 0.0),))
+    t = topo.all_to_all_seconds(m)
+    assert flat.all_to_all_seconds(m) < t < slow.all_to_all_seconds(m)
+
+
+def test_transition_seconds_helper_and_schedule_carry():
+    topo = Topology.flat_ici(8)
+    m = 4096.0
+    assert transition_seconds(1, 2, m, topo) == \
+        topo.switch_seconds(m, 1, 2)
+    stages = [Stage(frozenset({2}), "a", (2, 16, 8)),
+              Stage(frozenset({1}), "b", (2, 16, 8))]
+    sched = plan_schedule(stages, (1, 2), n=8, initial=1, final=1,
+                          topology=topo)
+    assert sched.topology is topo
+    assert sched.per_device_seconds() == pytest.approx(
+        plan_cost_seconds(stages, sched.dims, topo, initial=1, final=1))
+    # schedule solved without a topology can still be priced on one
+    sched2 = plan_schedule(stages, (1, 2), n=8, initial=1, final=1)
+    assert sched2.topology is None
+    with pytest.raises(ValueError):
+        sched2.per_device_seconds()
+    assert sched2.per_device_seconds(topo) == \
+        pytest.approx(sched.per_device_seconds())
+
+
+# ---------------------------------------------------------------------------
+# Presets, resize, measured profile
+# ---------------------------------------------------------------------------
+
+def test_presets():
+    assert Topology.flat_ici(16).size == 16
+    assert Topology.flat_ici(16).axes[0].bandwidth == ICI_BW
+    t2 = Topology.torus_2d(4, 8)
+    assert t2.size == 32 and len(t2.axes) == 2
+    mh = Topology.multihost(4, 8)
+    assert mh.size == 32 and mh.axes[0].name == "dcn"
+    with pytest.raises(ValueError):
+        Topology((Link("a", 2, 1.0), Link("a", 4, 1.0)))
+    with pytest.raises(ValueError):
+        Topology((Link("a", 2, 1.0),), placement={1: ("nope",)})
+    with pytest.raises(ValueError):
+        Link("bad", 2, 0.0)
+
+
+def test_resized_for_elastic_serving():
+    mh = Topology.multihost(2, 4)
+    r = mh.resized(4)
+    assert [(a.name, a.size) for a in r.axes] == [("dcn", 2), ("ici", 2)]
+    # per-dim placements survive a divisible resize (the re-plan after an
+    # elastic downsize must keep its ICI-local pinnings)
+    pinned = Topology.multihost(2, 4, placement={3: ("ici",)})
+    assert pinned.resized(4).placement == {3: ("ici",)}
+    assert pinned.resized(4).group_size(3) == 2
+    assert mh.resized(8) is mh
+    assert [(a.name, a.size) for a in mh.resized(6).axes] == \
+        [("dcn", 2), ("ici", 3)]
+    # indivisible fall-back: one flat axis at the bottleneck bandwidth
+    odd = mh.resized(5)
+    assert len(odd.axes) == 1 and odd.size == 5
+    assert odd.axes[0].bandwidth == DCN_BW
+    assert Topology.flat_ici(8).resized(4).size == 4
+
+
+def test_from_profile_recovers_alpha_beta():
+    n, bw, hop = 8, 40e9, 2e-6
+    truth = Topology((Link("m", n, bw, hop),))
+    samples = [(m, truth.all_gather_seconds(m))
+               for m in (1e6, 1e7, 1e8, 1e9)]
+    fit = Topology.from_profile(n, samples)
+    assert fit.axes[0].bandwidth == pytest.approx(bw, rel=1e-6)
+    assert fit.axes[0].latency == pytest.approx(hop, rel=1e-6)
+    with pytest.raises(ValueError):
+        Topology.from_profile(n, [(1e6, 1.0)])
+    with pytest.raises(ValueError):
+        Topology.from_profile(n, [(1e6, 2.0), (2e6, 1.0)])  # negative slope
+
+
+def test_roofline_prices_on_topology():
+    from repro.analysis.roofline import roofline
+    rl = roofline(hlo_flops_per_dev=0.0, hlo_bytes_per_dev=0.0,
+                  collective_bytes_per_dev=2 * ICI_BW, chips=8,
+                  model_flops=1.0)
+    assert rl.collective_s == pytest.approx(2.0)    # legacy flat-ICI default
+    rl2 = roofline(hlo_flops_per_dev=0.0, hlo_bytes_per_dev=0.0,
+                   collective_bytes_per_dev=2 * ICI_BW, chips=8,
+                   model_flops=1.0, topology=Topology.multihost(2, 4))
+    assert rl2.collective_s == pytest.approx(2 * ICI_BW / DCN_BW)
