@@ -9,7 +9,10 @@ All analytic numbers are priced with the SAME constant the planner and the
 schedule executor use (``repro.core.dsp.comm_volume_bytes``: switch = M/N,
 gather = M); for DSP the script additionally reports the PLANNED volume from
 the model's own solved schedule (``transformer2d.dsp_schedule``) next to the
-measured HLO bytes — planned-vs-measured is the executor's contract.
+measured HLO bytes — planned-vs-measured is the executor's contract — and
+the planned training ROUND TRIP: forward and backward legs priced
+separately (the backward is planned by the joint DP, not assumed to mirror
+the forward; see docs/architecture.md §2.4).
 """
 import os
 import sys
@@ -78,6 +81,24 @@ def main():
              f"planned_bytes={planned_total:.0f};"
              f"planned_seconds={secs:.3e};"
              f"bottleneck_gbps={topo.bottleneck_bandwidth/1e9:.1f}")
+
+    # the ROUND TRIP: training pays the backward's collectives too.  The
+    # joint fwd+bwd planner (core.plan.plan_joint) prices the backward as
+    # its own stage graph; on this symmetric model the mirrored plan is
+    # optimal (bwd == fwd volumes) and the planner must keep it.
+    jsched = dsp_schedule(cfg, N, t_len=t, s_len=s, batch=b,
+                          joint=True).schedule
+    rb = jsched.roundtrip_bytes(N)
+    emit("table3/planned_roundtrip/bytes", None,
+         f"fwd_bytes={rb.fwd:.0f};bwd_bytes={rb.bwd:.0f};"
+         f"total={rb.total:.0f};bwd_mirrored={jsched.mirrored}")
+    assert jsched.mirrored and rb.bwd == rb.fwd
+    for label, topo in (("ici", Topology.flat_ici(N)),
+                        ("ici_dcn", Topology.multihost(2, N // 2))):
+        rs = jsched.roundtrip_seconds(topo)
+        emit(f"table3/planned_roundtrip/{label}", None,
+             f"fwd_seconds={rs.fwd:.3e};bwd_seconds={rs.bwd:.3e};"
+             f"roundtrip_seconds={rs.total:.3e}")
 
     # the paper's headline ordering must hold in the measured HLO
     assert rows["dsp"] < rows["ulysses"] < rows["megatron"]

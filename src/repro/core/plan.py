@@ -41,10 +41,22 @@ benchmarks can report planned-vs-measured collective volume with the same
 constant (``repro.core.dsp.comm_volume_bytes``) the executor uses, and
 ``plan_cost_seconds`` prices it on a Topology.
 
+Training adds a third solver: the backward pass is a first-class stage
+graph, not the autodiff transposition of the forward plan.  ``plan_joint``
+solves the ROUND TRIP — a forward layout per stage plus an independent
+cotangent layout per stage's backward, coupled only at the *pinned seam*
+(the loss boundary, where the cotangent is created in the loss layout) —
+with an exact DP over (stage, fwd_dim, bwd_dim).  Stages may declare
+separate gradient shapes (``Stage.bwd_shape`` / ``bwd_dtype_bytes``); when
+forward and backward tensor sizes or link placements are asymmetric the
+optimal backward path can diverge from the mirrored forward, and the solver
+keeps the mirrored plan whenever the DP finds nothing strictly cheaper.
+
 Models do not call these directly — they declare a ``stages(cfg)`` sequence
 and ``repro.core.schedule`` turns the plan into boundary transitions (the
 one plan-driven executor for both the explicit shard_map path and the auto
-constraint path).
+constraint path).  The full walk-through of this module's cost model and
+DPs, with the Table-2 derivation, lives in docs/architecture.md §2.
 """
 from __future__ import annotations
 
@@ -59,16 +71,30 @@ class Stage:
 
     ``compute_dims``: logical sequence-dim indices the stage computes along
     (attention over S_i, a scan over S_i, ...).  The shard dim must not be in
-    this set.  ``name`` is cosmetic.  ``shape``/``dtype_bytes`` describe the
-    global activation entering the stage; when given they weight the cost of
-    the transition at the stage's entry boundary (paper Table 2), when absent
-    the boundary gets unit weight (pure switch counting).
+    this set — for the stage's backward too: the VJP of a computation along
+    S_i also computes along S_i.  ``name`` is cosmetic.
+
+    ``shape``/``dtype_bytes`` describe the global activation entering the
+    stage; when given they weight the cost of the transition at the stage's
+    entry boundary (paper Table 2), when absent the boundary gets unit
+    weight (pure switch counting).
+
+    ``bwd_shape``/``bwd_dtype_bytes`` describe the GRADIENT crossing the
+    same boundary during the backward pass (grad of the stage's input).  The
+    usual case — grads shaped like activations, same dtype — needs neither:
+    both default to the forward values.  Declare them when the backward
+    tensor differs (f32 grad accumulation over bf16 activations, stages
+    whose VJP carries extra payload); asymmetric fwd/bwd bytes are what make
+    the joint round-trip DP (``plan_joint``) diverge from the mirrored plan.
+    See docs/architecture.md §2.4.
     """
 
     compute_dims: FrozenSet[int]
     name: str = ""
     shape: Optional[Tuple[int, ...]] = None
     dtype_bytes: int = 2
+    bwd_shape: Optional[Tuple[int, ...]] = None
+    bwd_dtype_bytes: Optional[int] = None
 
     def allows(self, dim: int) -> bool:
         return dim not in self.compute_dims
@@ -82,9 +108,30 @@ class Stage:
             n *= d
         return float(n) * self.dtype_bytes
 
+    @property
+    def bwd_nbytes(self) -> Optional[float]:
+        """Global bytes of the gradient entering this stage's backward
+        (defaults to the forward activation bytes, re-priced at
+        ``bwd_dtype_bytes`` when only the dtype differs)."""
+        shape = self.bwd_shape if self.bwd_shape is not None else self.shape
+        if shape is None:
+            return None
+        db = (self.bwd_dtype_bytes if self.bwd_dtype_bytes is not None
+              else self.dtype_bytes)
+        n = 1
+        for d in shape:
+            n *= d
+        return float(n) * db
+
 
 def transition_kind(src: Optional[int], tgt: Optional[int]) -> str:
-    """Classify a layout change as a paper Table-2 primitive."""
+    """Classify a layout change as a paper Table-2 primitive.
+
+    Args:
+      src/tgt: shard dim before/after the boundary (None = unsharded s_hat).
+    Returns:
+      "keep" | "split" | "gather" | "switch".  docs/architecture.md §1.
+    """
     if src == tgt:
         return "keep"
     if src is None:
@@ -96,14 +143,25 @@ def transition_kind(src: Optional[int], tgt: Optional[int]) -> str:
 
 def transition_bytes(src: Optional[int], tgt: Optional[int],
                      global_bytes: float, n: int) -> float:
-    """Per-device cost of one layout transition (paper Table 2)."""
+    """Per-device bytes of one layout transition (paper Table 2, via the
+    repo's single shared constant ``core.dsp.comm_volume_bytes``).
+
+    Args:
+      src/tgt: shard dim before/after (None = unsharded).
+      global_bytes: global tensor bytes (M).
+      n: SP degree (N).
+    Returns:
+      per-device bytes (switch = M/N, gather = M, keep/split = 0).
+    """
     from repro.core.dsp import comm_volume_bytes
     return comm_volume_bytes(transition_kind(src, tgt), global_bytes, n)
 
 
 def transition_seconds(src: Optional[int], tgt: Optional[int],
                        global_bytes: float, topology) -> float:
-    """Seconds of one layout transition on a Topology (alpha+beta models)."""
+    """Seconds of one layout transition on a ``core.topology.Topology``
+    (alpha+beta collective models; per-dim placements make the cost depend
+    on WHICH dims are involved).  docs/architecture.md §4."""
     return topology.transition_seconds(transition_kind(src, tgt),
                                        global_bytes, src, tgt)
 
@@ -121,6 +179,14 @@ def _boundary_bytes(stages: Sequence[Stage], t: int,
                     default: float = 1.0) -> float:
     """Global bytes of the tensor crossing the boundary INTO stage ``t``."""
     nb = stages[t].nbytes
+    return default if nb is None else nb
+
+
+def _bwd_boundary_bytes(stages: Sequence[Stage], t: int,
+                        default: float = 1.0) -> float:
+    """Global bytes of the GRADIENT crossing boundary ``t`` backward — the
+    cotangent leaving stage ``t``'s backward for stage ``t-1``'s."""
+    nb = stages[t].bwd_nbytes
     return default if nb is None else nb
 
 
@@ -270,10 +336,322 @@ def make_plan(stages: Sequence[Stage], seq_dims: Sequence[int],
 
 
 # ---------------------------------------------------------------------------
+# Joint forward+backward planner (the round-trip stage graph)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class JointPlan:
+    """A solved round trip: one shard dim per stage for the forward pass and
+    one per stage for the backward pass.
+
+    ``fwd[t]`` is the layout stage ``t`` computes in; ``bwd[t]`` the layout
+    the cotangent holds while stage ``t``'s BACKWARD computes (both listed
+    in stage order).  The two legs meet at the *seam* — the loss boundary,
+    where the forward exits to the pinned ``final`` layout and the cotangent
+    is created in that same layout — and close at the entry: the forward
+    enters from ``initial`` and the input gradient returns to ``initial``
+    (the dataloader split owns both ends).
+
+    ``mirrored`` is True when the backward simply retraces the forward
+    (``bwd == fwd``) — the layout sequence autodiff transposition would
+    produce, and the executor's default.  See docs/architecture.md §2.4.
+    """
+
+    fwd: Tuple[int, ...]
+    bwd: Tuple[int, ...]
+
+    def __post_init__(self):
+        assert len(self.fwd) == len(self.bwd), (len(self.fwd), len(self.bwd))
+
+    @property
+    def mirrored(self) -> bool:
+        return self.fwd == self.bwd
+
+
+@dataclasses.dataclass(frozen=True)
+class JointCost:
+    """Round-trip cost split by leg (bytes, or seconds on a Topology).
+
+    ``fwd``: the forward leg (entry from ``initial`` through every stage
+    boundary to the ``final`` seam).  ``bwd``: the backward leg (seam,
+    reverse boundaries, input-gradient exit back to ``initial``).
+    ``couple``: residual re-shard penalty at stages whose backward layout
+    deviates from the forward layout (zero under full rematerialisation —
+    the recompute runs in the backward's own layout)."""
+
+    fwd: float
+    bwd: float
+    couple: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.fwd + self.bwd + self.couple
+
+
+def _bwd_leg_cost(stages: Sequence[Stage], fwd: Sequence[int],
+                  bwd: Sequence[int], *, n: int, initial: Optional[int],
+                  final: Optional[int], topology) -> float:
+    """Cost of the cotangent's path: seam -> bwd[T-1] -> ... -> bwd[0] ->
+    initial.  The gradient crossing boundary ``t`` is priced at stage
+    ``t``'s ``bwd_nbytes`` (same boundary tensor as the forward, in
+    gradient form)."""
+    if not bwd:
+        return 0.0
+    total = 0.0
+    T = len(stages)
+    # pinned seam: the cotangent is created in the loss layout (``final``
+    # when pinned, else wherever the forward ended)
+    seam = final if final is not None else fwd[-1]
+    total += _transition_cost(seam, bwd[-1], _bwd_boundary_bytes(stages, T - 1),
+                              n, topology)
+    for t in range(T - 1, 0, -1):
+        total += _transition_cost(bwd[t], bwd[t - 1],
+                                  _bwd_boundary_bytes(stages, t), n, topology)
+    if initial is not None:
+        # input gradient returns in the dataloader layout
+        total += _transition_cost(bwd[0], initial,
+                                  _bwd_boundary_bytes(stages, 0), n, topology)
+    return total
+
+
+def _couple_cost(stages: Sequence[Stage], t: int, f: int, b: int,
+                 *, n: int, topology) -> float:
+    """Residual re-shard penalty: without remat, stage ``t``'s saved
+    activations sit in the forward layout ``f``; running its backward in
+    ``b != f`` re-shards them (one switch of the stage's activation
+    bytes)."""
+    if f == b:
+        return 0.0
+    return _transition_cost(f, b, _boundary_bytes(stages, t), n, topology)
+
+
+def _joint_cost(stages: Sequence[Stage], fwd: Sequence[int],
+                bwd: Sequence[int], *, n: int, initial: Optional[int],
+                final: Optional[int], final_bytes: Optional[float],
+                topology, couple: bool) -> JointCost:
+    fc = _plan_cost(stages, fwd, n=n, initial=initial, final=final,
+                    final_bytes=final_bytes, topology=topology)
+    bc = _bwd_leg_cost(stages, fwd, bwd, n=n, initial=initial, final=final,
+                       topology=topology)
+    cc = 0.0
+    if couple:
+        for t, (f, b) in enumerate(zip(fwd, bwd)):
+            cc += _couple_cost(stages, t, f, b, n=n, topology=topology)
+    return JointCost(fc, bc, cc)
+
+
+def joint_cost_bytes(stages: Sequence[Stage], plan: JointPlan, *, n: int,
+                     initial: Optional[int] = None,
+                     final: Optional[int] = None,
+                     final_bytes: Optional[float] = None,
+                     couple: bool = False) -> JointCost:
+    """Price a joint plan's round trip in paper-Table-2 per-device bytes.
+
+    Args:
+      stages: the stage sequence the plan was solved over.
+      plan: the (fwd, bwd) layout assignment.
+      n: SP degree (the Table-2 ``N``).
+      initial/final: entry layout and pinned seam layout (None = free).
+      final_bytes: bytes of the seam tensor (defaults to the last stage's).
+      couple: include the residual re-shard penalty (no-remat execution).
+    Returns:
+      a ``JointCost`` with the fwd/bwd legs priced separately.
+    """
+    return _joint_cost(stages, plan.fwd, plan.bwd, n=n, initial=initial,
+                       final=final, final_bytes=final_bytes, topology=None,
+                       couple=couple)
+
+
+def joint_cost_seconds(stages: Sequence[Stage], plan: JointPlan, topology, *,
+                       initial: Optional[int] = None,
+                       final: Optional[int] = None,
+                       final_bytes: Optional[float] = None,
+                       couple: bool = False) -> JointCost:
+    """Price a joint plan's round trip in seconds on a ``Topology`` — the
+    objective ``plan_joint`` minimises when a topology is given.  Same
+    arguments as ``joint_cost_bytes``."""
+    return _joint_cost(stages, plan.fwd, plan.bwd, n=topology.size,
+                       initial=initial, final=final, final_bytes=final_bytes,
+                       topology=topology, couple=couple)
+
+
+def plan_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
+               n: int = 2, initial: Optional[int] = None,
+               final: Optional[int] = None,
+               final_bytes: Optional[float] = None,
+               topology=None, couple: bool = False,
+               require_mirrored: bool = False) -> JointPlan:
+    """Solve the round trip exactly: DP over (stage, fwd_dim, bwd_dim).
+
+    The forward leg prices boundary transitions exactly as
+    ``plan_switches_dp``; the backward leg prices the cotangent's reverse
+    path at each stage's ``bwd_nbytes`` with the seam pinned at the loss
+    boundary (``final``) and the input gradient returning to ``initial``.
+    With ``couple=True`` a stage whose backward layout deviates from its
+    forward layout additionally pays one residual re-shard (saved-activation
+    execution; leave False under full remat, where the recompute runs in the
+    backward's own layout).
+
+    The mirrored plan — forward-optimal layouts, backward retracing them,
+    which is exactly what autodiff transposition executes — is always priced
+    as the baseline and returned unless the joint DP finds a strictly
+    cheaper round trip, so uniform instances reproduce the mirrored plan
+    bit-for-bit.  Asymmetry that makes the DP win: per-stage fwd/bwd byte
+    differences (``Stage.bwd_shape``/``bwd_dtype_bytes``), and non-uniform
+    topologies whose switch costs are direction-dependent (per-dim link
+    placements: leaving an ICI-local dim is cheaper than re-entering it).
+
+    Args:
+      stages: stage sequence (compute_dims constrain fwd and bwd alike).
+      seq_dims: switchable sequence-dim indices.
+      n: SP degree (byte model); ignored when ``topology`` is given.
+      initial: entry layout; also pins the input-gradient exit.
+      final: pinned seam (loss) layout; None couples the cotangent to the
+        forward's exit layout instead.
+      final_bytes: seam tensor bytes (defaults to the last stage's).
+      topology: price in seconds on this mesh model instead of bytes.
+      couple: charge residual re-shards when bwd deviates from fwd.
+      require_mirrored: return the mirrored baseline without running the
+        joint DP — for callers whose execution can only run the autodiff
+        transpose (scanned model forwards), where a non-mirrored plan
+        would be priced but never executed.
+    Returns:
+      the optimal ``JointPlan`` (``.mirrored`` when the mirror was kept).
+    """
+    if not stages:
+        return JointPlan((), ())
+    _check_feasible(stages, seq_dims)
+    dims = list(seq_dims)
+    T = len(stages)
+    INF = float("inf")
+
+    def cost_args(jp):
+        return _joint_cost(stages, jp.fwd, jp.bwd, n=n, initial=initial,
+                           final=final, final_bytes=final_bytes,
+                           topology=topology, couple=couple).total
+
+    # mirrored baseline: the forward-optimal plan, backward retracing it
+    mirror_fwd = tuple(plan_switches_dp(
+        stages, dims, n=n, initial=initial, final=final,
+        final_bytes=final_bytes, topology=topology))
+    mirror = JointPlan(mirror_fwd, mirror_fwd)
+    if require_mirrored:
+        return mirror
+    mirror_cost = cost_args(mirror)
+
+    # exact DP over joint states (f, b); edges combine the forward edge
+    # f0 -> f1 (bytes of boundary t), the backward edge b1 -> b0 (bwd bytes
+    # of boundary t), and the per-state coupling penalty.
+    def state_couple(t, f, b):
+        if not couple:
+            return 0.0
+        return _couple_cost(stages, t, f, b, n=n, topology=topology)
+
+    cost: Dict[Tuple[int, int], float] = {}
+    for f in dims:
+        for b in dims:
+            if not (stages[0].allows(f) and stages[0].allows(b)):
+                continue
+            c = state_couple(0, f, b)
+            if initial is not None:
+                c += _transition_cost(initial, f, _boundary_bytes(stages, 0),
+                                      n, topology)
+                c += _transition_cost(b, initial,
+                                      _bwd_boundary_bytes(stages, 0),
+                                      n, topology)
+            cost[(f, b)] = c
+    back: List[Dict[Tuple[int, int], Tuple[int, int]]] = []
+
+    for t in range(1, T):
+        fb = _boundary_bytes(stages, t)
+        bb = _bwd_boundary_bytes(stages, t)
+        ncost: Dict[Tuple[int, int], float] = {}
+        bp: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        for f1 in dims:
+            if not stages[t].allows(f1):
+                continue
+            for b1 in dims:
+                if not stages[t].allows(b1):
+                    continue
+                base = state_couple(t, f1, b1)
+                best, arg, best_key = INF, None, None
+                for (f0, b0), c0 in cost.items():
+                    c = (c0 + base
+                         + _transition_cost(f0, f1, fb, n, topology)
+                         + _transition_cost(b1, b0, bb, n, topology))
+                    # tie-break: prefer the mirror, then keeping both
+                    # shards, then smaller dims — deterministic plans
+                    key = (c, f0 != b0, f0 != f1, b0 != b1, f0, b0)
+                    if best_key is None or key < best_key:
+                        best, arg, best_key = c, (f0, b0), key
+                if arg is not None:
+                    ncost[(f1, b1)], bp[(f1, b1)] = best, arg
+        back.append(bp)
+        cost = ncost
+
+    fbytes = final_bytes if final_bytes is not None else _boundary_bytes(
+        stages, T - 1)
+    bwd_fbytes = _bwd_boundary_bytes(stages, T - 1)
+
+    def seam_cost(f, b):
+        if final is not None:
+            return (_transition_cost(f, final, fbytes, n, topology)
+                    + _transition_cost(final, b, bwd_fbytes, n, topology))
+        # free seam: the cotangent is created in the forward's exit layout
+        return _transition_cost(f, b, bwd_fbytes, n, topology)
+
+    best_state, best_key = None, None
+    for (f, b), c in cost.items():
+        total = c + seam_cost(f, b)
+        key = (total, f != b, f != final, f, b)
+        if best_key is None or key < best_key:
+            best_state, best_key = (f, b), key
+    if best_state is None:
+        raise ValueError("infeasible stage sequence")
+
+    states = [best_state]
+    for bp in reversed(back):
+        states.append(bp[states[-1]])
+    states.reverse()
+    dp = JointPlan(tuple(f for f, _ in states), tuple(b for _, b in states))
+    dp_cost = cost_args(dp)
+
+    # keep the mirrored plan unless the DP round trip is strictly cheaper
+    if dp_cost < mirror_cost * (1.0 - 1e-12) - 1e-30:
+        return dp
+    return mirror
+
+
+def brute_force_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
+                      n: int = 2, initial: Optional[int] = None,
+                      final: Optional[int] = None,
+                      final_bytes: Optional[float] = None,
+                      topology=None, couple: bool = False) -> float:
+    """Exponential exact minimum round-trip cost (test oracle only)."""
+    best = None
+    for fwd in itertools.product(seq_dims, repeat=len(stages)):
+        if any(not st.allows(d) for st, d in zip(stages, fwd)):
+            continue
+        for bwd in itertools.product(seq_dims, repeat=len(stages)):
+            if any(not st.allows(d) for st, d in zip(stages, bwd)):
+                continue
+            c = _joint_cost(stages, fwd, bwd, n=n, initial=initial,
+                            final=final, final_bytes=final_bytes,
+                            topology=topology, couple=couple).total
+            if best is None or c < best:
+                best = c
+    if best is None:
+        raise ValueError("infeasible stage sequence")
+    return best
+
+
+# ---------------------------------------------------------------------------
 # Plan pricing / oracles
 # ---------------------------------------------------------------------------
 
 def switch_count(plan: Sequence[int], initial: Optional[int] = None) -> int:
+    """Number of layout switches a plan performs (entry from ``initial``
+    counted when given; uniform-cost objective of the Belady greedy)."""
     count = 0
     prev = initial
     for d in plan:
@@ -395,32 +773,37 @@ def lm_attention_stages(num_layers: int) -> List[Stage]:
 def encdec_stages(n_enc_layers: int, n_dec_layers: int, *,
                   s_enc: Optional[int] = None, s_dec: Optional[int] = None,
                   batch: Optional[int] = None, d_model: Optional[int] = None,
-                  dtype_bytes: int = 2) -> List[Stage]:
+                  dtype_bytes: int = 2,
+                  grad_dtype_bytes: Optional[int] = None) -> List[Stage]:
     """Encoder-decoder stage graph on the logical (B, S, H·Dh) view:
     channel-wise stages (projections / FFN) compute along dim 2, attention
     cores along dim 1.  Encoder stages carry S_enc-sized tensors, decoder
     stages S_dec-sized — the asymmetry that makes the byte-weighted DP
-    diverge from pure switch counting."""
+    diverge from pure switch counting.  ``grad_dtype_bytes`` declares the
+    gradient width for joint fwd+bwd planning (defaults to the activation
+    dtype)."""
     def shp(s):
         if None in (s, batch, d_model):
             return None
         return (batch, s, d_model)
 
+    gb = grad_dtype_bytes
+
     out: List[Stage] = []
     for i in range(n_enc_layers):
         out.append(Stage(frozenset({2}), f"enc{i}.proj", shp(s_enc),
-                         dtype_bytes))
+                         dtype_bytes, bwd_dtype_bytes=gb))
         out.append(Stage(frozenset({1}), f"enc{i}.attn", shp(s_enc),
-                         dtype_bytes))
+                         dtype_bytes, bwd_dtype_bytes=gb))
         out.append(Stage(frozenset({2}), f"enc{i}.mlp", shp(s_enc),
-                         dtype_bytes))
+                         dtype_bytes, bwd_dtype_bytes=gb))
     for i in range(n_dec_layers):
         out.append(Stage(frozenset({2}), f"dec{i}.proj", shp(s_dec),
-                         dtype_bytes))
+                         dtype_bytes, bwd_dtype_bytes=gb))
         out.append(Stage(frozenset({1}), f"dec{i}.self_attn", shp(s_dec),
-                         dtype_bytes))
+                         dtype_bytes, bwd_dtype_bytes=gb))
         out.append(Stage(frozenset({1}), f"dec{i}.cross_attn", shp(s_dec),
-                         dtype_bytes))
+                         dtype_bytes, bwd_dtype_bytes=gb))
         out.append(Stage(frozenset({2}), f"dec{i}.mlp", shp(s_dec),
-                         dtype_bytes))
+                         dtype_bytes, bwd_dtype_bytes=gb))
     return out

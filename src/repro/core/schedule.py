@@ -20,18 +20,33 @@ Scanned models (``jax.lax.scan`` over stacked layer params) execute a
 *periodic* schedule: the plan over the unrolled stage sequence must repeat
 with the layer period (``Schedule.periodic`` validates this) and the scan
 body applies the per-period boundary transitions plus the wrap-around
-transition back to the period's first layout.
+transition back to the period's first layout.  Non-periodic plans execute
+through the ``UnrolledSchedule`` view instead: boundaries are addressed by
+absolute stage index and the model unrolls its layer loop, so the fwd and
+bwd halves of one training step may use different layouts per stage.
+
+The BACKWARD pass is planned too (``core.plan.plan_joint``): a ``Schedule``
+may carry ``bwd_dims`` — the cotangent's layout per stage — and the auto
+backend executes them through a ``custom_vjp`` on every boundary
+constraint: the backward gets its own planned switch sequence instead of
+whatever XLA transposes.  Without ``bwd_dims`` the backward is the
+autodiff transposition of the forward plan (the mirrored default, which
+``plan_joint`` keeps whenever its DP finds no cheaper round trip).  The
+explicit shard_map backend only supports the mirrored backward: local
+array shapes pin each cotangent to its primal's layout.
 
 Models declare ``stages(cfg)`` and consume an executor; they never call
 ``dynamic_switch`` or issue stage-boundary sharding constraints themselves.
+The executor walk-through lives in docs/architecture.md §3.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.plan import (Stage, make_plan, plan_cost_bytes,
-                             plan_cost_seconds, switch_count,
+from repro.core.plan import (JointCost, JointPlan, Stage, joint_cost_bytes,
+                             joint_cost_seconds, make_plan, plan_cost_bytes,
+                             plan_cost_seconds, plan_joint, switch_count,
                              transition_kind)
 
 # HLO collective emitted per transition kind (None = communication-free).
@@ -53,6 +68,8 @@ class Transition:
 
 
 def classify(src: Optional[int], tgt: Optional[int]) -> Transition:
+    """Wrap a (src, tgt) layout change as a ``Transition`` (Table-2 kind +
+    the HLO collective it must compile to).  docs/architecture.md §1."""
     return Transition(transition_kind(src, tgt), src, tgt)
 
 
@@ -65,6 +82,12 @@ class Schedule:
     ``topology`` is the mesh model the plan was solved against (None = the
     byte-uniform model); it travels with the plan so every consumer — the
     Sharder, the serving engine, benchmarks — prices it consistently.
+
+    ``bwd_dims`` (optional) is the PLANNED backward: the cotangent's shard
+    dim while each stage's backward computes, in stage order.  None means
+    the mirrored default — the backward retraces the forward plan, which is
+    exactly what autodiff transposition executes, so pricing helpers treat
+    None as ``dims``.  See docs/architecture.md §2.4/§3.3.
     """
 
     stages: Tuple[Stage, ...]
@@ -72,10 +95,14 @@ class Schedule:
     initial: Optional[int] = None
     final: Optional[int] = None
     topology: Optional[object] = None
+    bwd_dims: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         assert len(self.stages) == len(self.dims), (len(self.stages),
                                                     len(self.dims))
+        if self.bwd_dims is not None:
+            assert len(self.bwd_dims) == len(self.dims), (len(self.bwd_dims),
+                                                          len(self.dims))
 
     # -- boundary transitions ------------------------------------------------
     def boundary(self, t: int) -> Transition:
@@ -91,6 +118,43 @@ class Schedule:
         out = [self.boundary(t) for t in range(len(self.dims))]
         if self.final is not None:
             out.append(self.exit())
+        return out
+
+    # -- planned backward ----------------------------------------------------
+    @property
+    def mirrored(self) -> bool:
+        """True when the backward retraces the forward (no separate plan)."""
+        return self.bwd_dims is None or self.bwd_dims == self.dims
+
+    @property
+    def bwd_plan(self) -> Tuple[int, ...]:
+        """Backward layout per stage (the forward dims when mirrored)."""
+        return self.bwd_dims if self.bwd_dims is not None else self.dims
+
+    def joint(self) -> JointPlan:
+        return JointPlan(self.dims, self.bwd_plan)
+
+    def bwd_seam(self) -> Transition:
+        """Cotangent creation at the loss boundary: from the pinned
+        ``final`` layout (or the forward's exit layout) into the last
+        stage's backward layout."""
+        src = self.final if self.final is not None else (
+            self.dims[-1] if self.dims else self.initial)
+        return classify(src, self.bwd_plan[-1] if self.dims else src)
+
+    def bwd_boundary(self, t: int) -> Transition:
+        """Transition of the cotangent leaving stage ``t``'s backward across
+        boundary ``t`` (t == 0: the input gradient returns to ``initial``)."""
+        bwd = self.bwd_plan
+        tgt = self.initial if t == 0 else bwd[t - 1]
+        return classify(bwd[t], tgt if tgt is not None else bwd[t])
+
+    def bwd_transitions(self) -> List[Transition]:
+        """The backward leg in execution order: seam, then boundaries from
+        the last stage back to the input."""
+        out = [self.bwd_seam()]
+        out.extend(self.bwd_boundary(t)
+                   for t in range(len(self.dims) - 1, -1, -1))
         return out
 
     # -- accounting ----------------------------------------------------------
@@ -122,22 +186,49 @@ class Schedule:
         return plan_cost_seconds(self.stages, self.dims, topo,
                                  initial=self.initial, final=self.final)
 
+    def roundtrip_bytes(self, n: int) -> JointCost:
+        """Planned per-device bytes of the full training round trip, split
+        by leg (``.fwd`` / ``.bwd`` / ``.total``) — what dry-run metas and
+        ``benchmarks/comm_volume.py`` report for train cells."""
+        return joint_cost_bytes(self.stages, self.joint(), n=n,
+                                initial=self.initial, final=self.final)
+
+    def roundtrip_seconds(self, topology=None) -> JointCost:
+        """Planned round-trip seconds on ``topology`` (defaults to the one
+        the plan was solved against), split by leg."""
+        topo = topology if topology is not None else self.topology
+        if topo is None:
+            raise ValueError("roundtrip_seconds needs a Topology (none was "
+                             "attached at plan time)")
+        return joint_cost_seconds(self.stages, self.joint(), topo,
+                                  initial=self.initial, final=self.final)
+
     # -- periodic (scan) form ------------------------------------------------
     def periodic(self, period: int) -> "PeriodicSchedule":
         """Validate the plan is steady-state with the given stage period and
         return the scan-body view.  Scanned execution cannot vary layouts
-        across iterations, so a non-periodic plan is a hard error."""
+        across iterations, so a non-periodic plan (forward OR planned
+        backward) is a hard error — execute those through ``unrolled()``."""
         if len(self.dims) % period:
             raise ValueError(f"{len(self.dims)} stages not a multiple of "
                              f"period {period}")
-        for t, d in enumerate(self.dims):
-            if d != self.dims[t % period]:
-                raise ValueError(
-                    f"plan is not periodic with period {period}: stage {t} "
-                    f"shards dim {d} but stage {t % period} shards "
-                    f"{self.dims[t % period]} (scanned layers need a "
-                    f"steady-state plan; pass final=initial or unroll)")
+        for label, dims in (("plan", self.dims),
+                            ("backward plan", self.bwd_dims or ())):
+            for t, d in enumerate(dims):
+                if d != dims[t % period]:
+                    raise ValueError(
+                        f"{label} is not periodic with period {period}: "
+                        f"stage {t} shards dim {d} but stage {t % period} "
+                        f"shards {dims[t % period]} (scanned layers need a "
+                        f"steady-state plan; pass final=initial, or execute "
+                        f"the plan via Schedule.unrolled())")
         return PeriodicSchedule(self, period)
+
+    def unrolled(self) -> "UnrolledSchedule":
+        """Non-periodic (unrolled) execution view: boundaries addressed by
+        absolute stage index, no steady-state requirement — the layer loop
+        must be python-unrolled instead of scanned."""
+        return UnrolledSchedule(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,33 +262,135 @@ class PeriodicSchedule:
                         else self.dims[0])
 
 
+@dataclasses.dataclass(frozen=True)
+class UnrolledSchedule:
+    """Absolute-index view of a (possibly non-periodic) schedule: entry
+    transition, one boundary per stage index, exit transition.  The model's
+    layer loop must be python-unrolled — there is no wrap-around, every
+    boundary may differ, and the fwd and bwd halves of a training step may
+    use different layouts per stage (``Schedule.bwd_dims``)."""
+
+    schedule: Schedule
+
+    @property
+    def dims(self) -> Tuple[int, ...]:
+        return self.schedule.dims
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.schedule.dims)
+
+    def enter(self) -> Transition:
+        return classify(self.schedule.initial, self.dims[0])
+
+    def boundary(self, t: int) -> Transition:
+        """Transition into stage ``t`` (1 <= t < n_stages, absolute)."""
+        assert 1 <= t < len(self.dims), t
+        return classify(self.dims[t - 1], self.dims[t])
+
+    def exit(self) -> Transition:
+        final = self.schedule.final
+        return classify(self.dims[-1], final if final is not None
+                        else self.dims[-1])
+
+
 def plan_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
                   n: int = 2, initial: Optional[int] = None,
                   final: Optional[int] = None, topology=None) -> Schedule:
     """Solve the switching plan (``core.plan.make_plan``: Belady greedy on
     uniform costs, exact DP otherwise — in seconds when a Topology is given)
-    and wrap it as a Schedule carrying that topology."""
+    and wrap it as a Schedule carrying that topology.
+
+    Args:
+      stages: the model's stage declaration (``models.*.stages(cfg)``).
+      seq_dims: switchable sequence-dim indices.
+      n: SP degree for byte pricing (ignored when ``topology`` is given).
+      initial/final: entry layout and pinned exit layout (None = free).
+      topology: price plans in seconds on this mesh model.
+    Returns:
+      a ``Schedule`` with a mirrored (autodiff-transposed) backward.
+    """
     dims = make_plan(stages, seq_dims, n=n, initial=initial, final=final,
                      topology=topology)
     return Schedule(tuple(stages), tuple(dims), initial=initial, final=final,
                     topology=topology)
 
 
+def plan_joint_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
+                        n: int = 2, initial: Optional[int] = None,
+                        final: Optional[int] = None, topology=None,
+                        couple: bool = False,
+                        require_mirrored: bool = False) -> Schedule:
+    """Solve the joint forward+backward round trip
+    (``core.plan.plan_joint``) and wrap it as a Schedule.
+
+    The returned schedule carries ``bwd_dims`` ONLY when the joint DP found
+    a round trip strictly cheaper than the mirrored plan — so consumers
+    (the executor, dry-run metas) get the mirrored default for free on
+    symmetric instances.  Same arguments as ``plan_schedule`` plus
+    ``couple`` (charge residual re-shards when the backward deviates; leave
+    False under full remat) and ``require_mirrored`` (skip the joint DP and
+    return the mirrored baseline — for scanned forwards that can only
+    execute the autodiff transpose).  See docs/architecture.md §2.4.
+    """
+    jp = plan_joint(stages, seq_dims, n=n, initial=initial, final=final,
+                    topology=topology, couple=couple,
+                    require_mirrored=require_mirrored)
+    return Schedule(tuple(stages), jp.fwd, initial=initial, final=final,
+                    topology=topology,
+                    bwd_dims=None if jp.mirrored else jp.bwd)
+
+
 # ---------------------------------------------------------------------------
 # Executor
 # ---------------------------------------------------------------------------
 
+def _planned_constraint(x, fwd_sharding, bwd_sharding):
+    """Sharding constraint with a PLANNED transpose: the forward constrains
+    to ``fwd_sharding``; the backward constrains the cotangent to
+    ``bwd_sharding`` instead of the autodiff transpose (which would mirror
+    the forward layout).  Both ops are mathematically the identity — only
+    the SPMD layout, and hence which collectives XLA emits on each pass,
+    changes; gradient values are bitwise-tolerably unchanged."""
+    import jax
+
+    @jax.custom_vjp
+    def constrain(y):
+        return jax.lax.with_sharding_constraint(y, fwd_sharding)
+
+    def fwd_rule(y):
+        return jax.lax.with_sharding_constraint(y, fwd_sharding), None
+
+    def bwd_rule(_, g):
+        return (jax.lax.with_sharding_constraint(g, bwd_sharding),)
+
+    constrain.defvjp(fwd_rule, bwd_rule)
+    return constrain(x)
+
+
 class ScheduleExecutor:
-    """Applies a (periodic) schedule's transitions to activations.
+    """Applies a schedule's transitions to activations.
 
     One executor object serves a whole forward pass; models call
     ``enter`` / ``boundary`` / ``wrap`` / ``exit`` at stage boundaries and
     ``anchor`` to re-assert the current stage layout on intra-stage tensors
     (auto path only — XLA's backward propagation otherwise flips layouts
-    mid-stage).
+    mid-stage).  ``psched`` is the execution view of the plan: a
+    ``PeriodicSchedule`` (scanned layers, in-period boundary indices) or an
+    ``UnrolledSchedule`` (python-unrolled layers, absolute indices, no
+    ``wrap``).
+
+    When the schedule carries a planned backward (``Schedule.bwd_dims``)
+    and the backend is ``auto``, every boundary constraint is emitted
+    through a ``custom_vjp`` whose backward constrains the cotangent to the
+    PLANNED backward layout — the backward pass gets its own switch
+    sequence instead of the autodiff transposition of the forward's.  The
+    explicit backend cannot decouple the two (local array shapes pin each
+    cotangent to its primal's layout) and rejects non-mirrored schedules.
     """
 
-    def __init__(self, psched: Optional[PeriodicSchedule], *,
+    def __init__(self, psched: Optional[Union[PeriodicSchedule,
+                                              UnrolledSchedule]], *,
                  backend: str, ctx=None, axis_name: str = "model",
                  batch_dim: int = 0):
         if backend not in ("explicit", "auto", "null"):
@@ -211,6 +404,16 @@ class ScheduleExecutor:
         self.ctx = ctx
         self.axis_name = axis_name
         self.batch_dim = batch_dim
+        self.unrolled = isinstance(psched, UnrolledSchedule)
+        sched = psched.schedule if psched is not None else None
+        self._planned_bwd = (backend == "auto" and sched is not None
+                             and not sched.mirrored)
+        if (backend == "explicit" and sched is not None
+                and not sched.mirrored):
+            raise ValueError(
+                "explicit backend executes the mirrored backward only: "
+                "shard_map local shapes pin each cotangent to its primal's "
+                "layout (use backend='auto' for planned-backward schedules)")
 
     # -- null factory --------------------------------------------------------
     @classmethod
@@ -218,19 +421,36 @@ class ScheduleExecutor:
         return cls(None, backend="null")
 
     # -- transition application ---------------------------------------------
-    def _constrain(self, x, shard_dim: Optional[int]):
+    def _layout(self, shard_dim: Optional[int], ndim: int):
         from repro.core.layout import SeqLayout
-        layout = SeqLayout(shard_dim=shard_dim, batch_dim=self.batch_dim,
-                           ndim=x.ndim)
-        return self.ctx.constrain(x, layout)
+        return SeqLayout(shard_dim=shard_dim, batch_dim=self.batch_dim,
+                         ndim=ndim)
 
-    def apply(self, x, tr: Transition):
+    def _constrain(self, x, shard_dim: Optional[int],
+                   bwd_dim: Optional[int] = None):
+        """Auto-path constraint; with a planned backward active and a
+        ``bwd_dim`` given, the cotangent is constrained to the backward
+        plan's layout on the way back (custom_vjp) instead of the
+        transposed forward layout."""
+        layout = self._layout(shard_dim, x.ndim)
+        if not self._planned_bwd or bwd_dim is None:
+            return self.ctx.constrain(x, layout)
+        ctx = self.ctx
+        fwd_s = layout.sharding(ctx.mesh, ctx.dp_axes, ctx.sp_axis)
+        bwd_s = self._layout(bwd_dim, x.ndim).sharding(
+            ctx.mesh, ctx.dp_axes, ctx.sp_axis)
+        return _planned_constraint(x, fwd_s, bwd_s)
+
+    def apply(self, x, tr: Transition, bwd_tgt: Optional[int] = None):
+        """Apply one boundary transition.  ``bwd_tgt`` is the PLANNED layout
+        of the cotangent after it crosses this boundary backward (auto
+        backend with a planned-backward schedule only; ignored otherwise)."""
         if self.backend == "null":
             return x
         if self.backend == "auto":
             # re-constrain even on "keep": anchors SPMD propagation at the
             # boundary, lowers to nothing when the layout is unchanged
-            return self._constrain(x, tr.tgt)
+            return self._constrain(x, tr.tgt, bwd_tgt)
         # explicit: inside shard_map, call the paper's primitive
         from repro.core import dsp
         if tr.kind == "keep":
@@ -243,29 +463,65 @@ class ScheduleExecutor:
             return dsp.gather(x, tr.src, self.axis_name)
         raise ValueError(tr.kind)
 
-    # -- periodic-schedule conveniences ---------------------------------------
+    # -- schedule-view conveniences -------------------------------------------
+    @property
+    def _bwd_plan(self) -> Optional[Tuple[int, ...]]:
+        if not self._planned_bwd:
+            return None
+        return self.psched.schedule.bwd_plan
+
     def enter(self, x):
-        return x if self.backend == "null" else self.apply(
-            x, self.psched.enter())
+        if self.backend == "null":
+            return x
+        bwdp = self._bwd_plan
+        initial = self.psched.schedule.initial if bwdp is not None else None
+        # the cotangent leaving ``enter`` is the input gradient: it returns
+        # in the dataloader layout
+        bwd_tgt = None if bwdp is None else (
+            initial if initial is not None else bwdp[0])
+        return self.apply(x, self.psched.enter(), bwd_tgt)
 
     def boundary(self, x, i: int):
-        return x if self.backend == "null" else self.apply(
-            x, self.psched.boundary(i))
+        """Transition into stage ``i`` — in-period index for a periodic
+        schedule, absolute index for an unrolled one."""
+        if self.backend == "null":
+            return x
+        bwdp = self._bwd_plan
+        bwd_tgt = None if bwdp is None else bwdp[i - 1]
+        return self.apply(x, self.psched.boundary(i), bwd_tgt)
 
     def wrap(self, x):
-        return x if self.backend == "null" else self.apply(
-            x, self.psched.wrap())
+        if self.backend == "null":
+            return x
+        if self.unrolled:
+            raise ValueError("unrolled schedules have no wrap-around; "
+                             "iterate boundary(t) over absolute indices")
+        bwdp = self._bwd_plan
+        bwd_tgt = None if bwdp is None else bwdp[self.psched.period - 1]
+        return self.apply(x, self.psched.wrap(), bwd_tgt)
 
     def exit(self, x):
-        return x if self.backend == "null" else self.apply(
-            x, self.psched.exit())
+        if self.backend == "null":
+            return x
+        bwdp = self._bwd_plan
+        # the cotangent entering ``exit`` backward is the SEAM: it lands in
+        # the last stage's backward layout (periodic bwd plans repeat, so
+        # bwdp[-1] == bwdp[period-1] and the subsequent wrap backward is a
+        # free "keep" — exactly the one seam transition the cost model
+        # prices)
+        bwd_tgt = None if bwdp is None else bwdp[-1]
+        return self.apply(x, self.psched.exit(), bwd_tgt)
 
     def anchor(self, x, i: int):
-        """Re-assert in-period stage ``i``'s layout (auto path; no-op for
-        explicit — local shapes already encode the layout)."""
+        """Re-assert stage ``i``'s layout on an intra-stage tensor (auto
+        path; no-op for explicit — local shapes already encode the layout).
+        With a planned backward, the anchor's transpose asserts the stage's
+        BACKWARD layout so mid-stage cotangents stay on the planned dim."""
         if self.backend != "auto":
             return x
-        return self._constrain(x, self.psched.dims[i])
+        bwdp = self._bwd_plan
+        return self._constrain(x, self.psched.dims[i],
+                               None if bwdp is None else bwdp[i])
 
     def fold_anchor(self, x):
         """Anchor a stage-folded view (B*other, L, C) whose batch dim has
@@ -282,9 +538,11 @@ class ScheduleExecutor:
             x, NamedSharding(ctx.mesh, P(*entries)))
 
     # -- accounting ----------------------------------------------------------
-    def expected_collectives(self, n_periods: int) -> Dict[str, int]:
-        """Collective counts of the full scanned execution (entry + body x
-        n_periods; the exit "keep" adds nothing)."""
+    def expected_collectives(self, n_periods: int = 1) -> Dict[str, int]:
+        """Collective counts of the full forward execution — entry + body x
+        ``n_periods`` for a periodic schedule (the exit "keep" adds
+        nothing), entry + every absolute boundary + exit for an unrolled
+        one (``n_periods`` is ignored there)."""
         if self.backend == "null":
             return {}
         counts: Dict[str, int] = {}
@@ -295,15 +553,20 @@ class ScheduleExecutor:
                 counts[c] = counts.get(c, 0) + 1
 
         add(self.psched.enter())
-        for _ in range(n_periods):
-            for i in range(1, self.psched.period):
-                add(self.psched.boundary(i))
-            add(self.psched.wrap())
+        if self.unrolled:
+            for t in range(1, self.psched.n_stages):
+                add(self.psched.boundary(t))
+        else:
+            for _ in range(n_periods):
+                for i in range(1, self.psched.period):
+                    add(self.psched.boundary(i))
+                add(self.psched.wrap())
         add(self.psched.exit())
         return counts
 
 
 __all__ = [
     "Transition", "classify", "Schedule", "PeriodicSchedule",
-    "plan_schedule", "ScheduleExecutor", "COLLECTIVE_OF",
+    "UnrolledSchedule", "plan_schedule", "plan_joint_schedule",
+    "ScheduleExecutor", "COLLECTIVE_OF",
 ]

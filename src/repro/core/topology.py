@@ -57,6 +57,9 @@ replicated along them).
 
 Hardware constants live here (single source of truth; ``analysis.roofline``
 and the benchmarks import them instead of hard-coding).
+
+The formula derivations, and how the planner consumes this model, are
+walked through in docs/architecture.md §4.
 """
 from __future__ import annotations
 
@@ -174,7 +177,15 @@ class Topology:
 
     def all_gather_seconds(self, nbytes: float, axes=None) -> float:
         """Ring all-gather of a globally ``nbytes`` tensor over the group:
-        every device ends with the full M (Table-2 gather convention)."""
+        every device ends with the full M (Table-2 gather convention).
+
+        Args:
+          nbytes: global tensor bytes (M).
+          axes: sub-group as Link objects or axis names (full group when
+            None).
+        Returns:
+          seconds (0.0 for a 1-device group).  docs/architecture.md §4.
+        """
         group = self._select(axes)
         n = 1
         for a in group:
@@ -199,7 +210,15 @@ class Topology:
     def all_to_all_seconds(self, nbytes: float, axes=None) -> float:
         """Tiled all-to-all re-tiling each device's M/N shard.  Hierarchical
         groups pay one phase per axis; phi_a folds the single-axis case to
-        exactly M/N (see module docstring)."""
+        exactly M/N (see module docstring and docs/architecture.md §4).
+
+        Args:
+          nbytes: global tensor bytes (M).
+          axes: sub-group as Link objects or axis names (full group when
+            None).
+        Returns:
+          seconds (0.0 for a 1-device group).
+        """
         group = self._select(axes)
         n = 1
         for a in group:
@@ -247,7 +266,15 @@ class Topology:
     def transition_seconds(self, kind: str, nbytes: float,
                            src: Optional[int], tgt: Optional[int]) -> float:
         """Seconds of one Table-2 primitive (same kinds as
-        ``core.dsp.comm_volume_bytes``)."""
+        ``core.dsp.comm_volume_bytes``).
+
+        Args:
+          kind: "keep" | "split" | "switch" | "gather".
+          nbytes: global tensor bytes (M).
+          src/tgt: logical dims involved (select the placement groups).
+        Returns:
+          seconds; raises ValueError on an unknown kind.
+        """
         if kind in ("keep", "split"):
             return 0.0
         if kind == "switch":

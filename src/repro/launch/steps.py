@@ -79,6 +79,21 @@ def _metric_specs(mesh):
             "grad_norm": NamedSharding(mesh, P())}
 
 
+def _record_roundtrip(meta: Dict[str, Any], schedule, sp: int) -> None:
+    """Record the planned fwd+bwd communication of a TRAIN cell separately:
+    the backward is a first-class planned leg, not the transposed forward —
+    ``bwd_mirrored`` says whether the joint DP kept the mirrored default."""
+    rb = schedule.roundtrip_bytes(sp)
+    meta["planned_fwd_bytes"] = rb.fwd
+    meta["planned_bwd_bytes"] = rb.bwd
+    meta["bwd_mirrored"] = schedule.mirrored
+    if schedule.topology is not None:
+        rs = schedule.roundtrip_seconds()
+        meta["planned_fwd_seconds"] = rs.fwd
+        meta["planned_bwd_seconds"] = rs.bwd
+        meta["planned_roundtrip_seconds"] = rs.total
+
+
 def _abstract(fn, *args):
     """eval_shape with configs closed over (static); array trees as args."""
     return jax.eval_shape(fn, *args)
@@ -122,14 +137,18 @@ def build_lm_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
     schedule = None
     if plan.mode == "dsp":
         # planned switching schedule: single source of truth for every
-        # stage-boundary layout in the model forward
+        # stage-boundary layout in the model forward.  Train cells plan the
+        # BACKWARD pass as its own stage graph (joint round-trip DP); the
+        # metas price the two legs separately.
         sp = mesh.shape.get("model", 1)
         topo = mesh_topology(mesh, "ici")
         schedule = LM.dsp_schedule(cfg, sp, seq=seq, batch=batch,
-                                   topology=topo)
+                                   topology=topo, joint=(kind == "train"))
         meta["planned_switches"] = schedule.n_switches()
         meta["planned_comm_bytes"] = schedule.per_device_bytes(sp)
         meta["planned_comm_seconds"] = schedule.per_device_seconds()
+        if kind == "train":
+            _record_roundtrip(meta, schedule, sp)
     sharder = make_sharder(mesh, plan, schedule=schedule)
     opt_cfg = opt_cfg or auto_opt_cfg(LM.param_counts(cfg)["total"])
 
@@ -259,11 +278,14 @@ def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
     if plan.mode == "dsp":
         sp = mesh.shape.get("model", 1)
         schedule = ED.dsp_schedule(cfg, sp, s_enc=seq, s_dec=s_dec,
-                                   batch=batch)
+                                   batch=batch,
+                                   topology=mesh_topology(mesh, "ici"),
+                                   joint=(kind == "train"))
         meta["planned_switches"] = schedule.n_switches()
         meta["planned_comm_bytes"] = schedule.per_device_bytes(sp)
-        meta["planned_comm_seconds"] = schedule.per_device_seconds(
-            mesh_topology(mesh, "ici"))
+        meta["planned_comm_seconds"] = schedule.per_device_seconds()
+        if kind == "train":
+            _record_roundtrip(meta, schedule, sp)
     sharder = make_sharder(mesh, plan, schedule=schedule)
     opt_cfg = opt_cfg or OptConfig()
     dp = _dp(mesh)
@@ -373,24 +395,30 @@ def build_t2d_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
     bspecs = {"x": P(dp, "model", None, None), "t": P(dp),
               "target": P(dp, "model", None, None)}
 
+    meta = {"arch": spec.name, "shape": shape_name, "plan": mode,
+            "temporal": t_len, "spatial": s_len, "batch": batch}
+    psched = None
+    if mode == "dsp":
+        # joint fwd+bwd plan, priced on the mesh's fabric; the SAME schedule
+        # object is executed by the forward below, so planned and compiled
+        # collectives stay one artifact
+        sp = mesh.shape.get("model", 1)
+        psched = T2D.dsp_schedule(cfg, sp, t_len=t_len, s_len=s_len,
+                                  batch=batch,
+                                  topology=mesh_topology(mesh, "ici"),
+                                  joint=True)
+        meta["planned_switches"] = psched.schedule.n_switches()
+        meta["planned_comm_bytes"] = psched.schedule.per_device_bytes(sp)
+        meta["planned_comm_seconds"] = psched.schedule.per_device_seconds()
+        _record_roundtrip(meta, psched.schedule, sp)
+
     def train_step(params, opt_state, b):
         def loss_fn(p):
             return T2D.t2d_loss(p, b, cfg, mesh=mesh, mode=mode,
-                                backend="ref", remat=remat)
+                                backend="ref", remat=remat, schedule=psched)
         (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
         params, opt_state, om = apply_adamw(params, grads, opt_state, opt_cfg)
         return params, opt_state, {"loss": loss, **om}
-
-    meta = {"arch": spec.name, "shape": shape_name, "plan": mode,
-            "temporal": t_len, "spatial": s_len, "batch": batch}
-    if mode == "dsp":
-        sp = mesh.shape.get("model", 1)
-        psched = T2D.dsp_schedule(cfg, sp, t_len=t_len, s_len=s_len,
-                                  batch=batch)
-        meta["planned_switches"] = psched.schedule.n_switches()
-        meta["planned_comm_bytes"] = psched.schedule.per_device_bytes(sp)
-        meta["planned_comm_seconds"] = psched.schedule.per_device_seconds(
-            mesh_topology(mesh, "ici"))
     return Cell(spec.name, shape_name, "train", train_step,
                 (params_s, opt_s, batch_s),
                 (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)),

@@ -50,17 +50,27 @@ def main(argv=None):
 
     mesh = None
     sharder = None
+    topology = None
     if args.mesh:
         dp, mp = (int(x) for x in args.mesh.split(","))
         from repro.core.compat import make_mesh
+        from repro.launch.mesh import mesh_topology
         mesh = make_mesh((dp, mp), ("data", "model"))
         sharder = make_sharder(mesh, spec.plan)
+        topology = mesh_topology(mesh, "ici")
 
+    # joint fwd+bwd planned schedule: priced into the run summary (and, for
+    # the t2d executor path, executed) when training on a DSP mesh
+    schedule = None
     if spec.family == "lm":
-        from repro.models.lm import init_lm, lm_loss
+        from repro.models.lm import dsp_schedule, init_lm, lm_loss
         params = init_lm(jax.random.PRNGKey(0), cfg)
         dcfg = DataConfig(task="lm_shift", vocab=cfg.vocab, seq=args.seq,
                           batch=args.batch)
+        if mesh is not None and spec.plan.mode == "dsp":
+            schedule = dsp_schedule(cfg, mesh.shape.get("model", 1),
+                                    seq=args.seq, batch=args.batch,
+                                    topology=topology, joint=True)
 
         def loss_fn(p, b):
             return lm_loss(p, b, cfg, sharder=sharder, backend="ref")
@@ -74,13 +84,21 @@ def main(argv=None):
         def loss_fn(p, b):
             return encdec_loss(p, b, cfg, sharder=sharder, backend="ref")
     else:
-        from repro.models.transformer2d import init_t2d, t2d_loss
+        from repro.models.transformer2d import dsp_schedule, init_t2d, t2d_loss
         params = init_t2d(jax.random.PRNGKey(0), cfg)
+        spatial = args.seq // 8 or 16
         dcfg = DataConfig(task="video", batch=args.batch, temporal=8,
-                          spatial=args.seq // 8 or 16, in_dim=cfg.in_dim)
+                          spatial=spatial, in_dim=cfg.in_dim)
+        psched = None
+        if mesh is not None:
+            psched = dsp_schedule(cfg, mesh.shape.get("model", 1),
+                                  t_len=8, s_len=spatial, batch=args.batch,
+                                  topology=topology, joint=True)
+            schedule = psched.schedule
 
         def loss_fn(p, b):
-            return t2d_loss(p, b, cfg, mesh=mesh, backend="ref")
+            return t2d_loss(p, b, cfg, mesh=mesh, backend="ref",
+                            schedule=psched)
 
     trainer = Trainer(
         loss_fn=loss_fn, params=params,
@@ -91,12 +109,14 @@ def main(argv=None):
                           ckpt_every=max(args.steps // 4, 1) if args.ckpt_dir
                           else 0, grad_compress=args.grad_compress),
         data_fn=lambda s: make_batch(dcfg, s),
-        ckpt_dir=args.ckpt_dir)
+        ckpt_dir=args.ckpt_dir, schedule=schedule)
     if args.resume:
         trainer.try_resume()
     out = trainer.run()
     print("history:", out["history"])
     print("stragglers:", out["stragglers"])
+    if "plan" in out:
+        print("planned comm:", out["plan"])
     first = out["history"][0][1] if out["history"] else float("nan")
     last = out["history"][-1][1] if out["history"] else float("nan")
     print(f"loss {first:.4f} -> {last:.4f}")

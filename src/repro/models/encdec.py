@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.plan import Stage, encdec_stages
-from repro.core.schedule import Schedule, plan_schedule
+from repro.core.schedule import Schedule, plan_joint_schedule, plan_schedule
 from repro.models import layers as L
 from repro.models import attention as A
 from repro.parallel.partition import Sharder, ParallelPlan, make_sharder
@@ -53,24 +53,40 @@ class EncDecConfig:
 # ---------------------------------------------------------------------------
 
 def stages(cfg: EncDecConfig, *, s_enc: Optional[int] = None,
-           s_dec: Optional[int] = None, batch: Optional[int] = None):
+           s_dec: Optional[int] = None, batch: Optional[int] = None,
+           grad_dtype_bytes: Optional[int] = None):
     """Declare the enc-dec stage graph on the logical (B, S, H·Dh) view:
     channel-wise stages compute along dim 2, attention cores along dim 1.
     Encoder stages carry S_enc-sized tensors, decoder stages S_dec-sized —
-    the byte asymmetry that makes the cost-aware DP the right solver."""
+    the byte asymmetry that makes the cost-aware DP the right solver.
+    ``grad_dtype_bytes`` declares the gradient width for joint fwd+bwd
+    planning (defaults to the activation dtype)."""
     db = jnp.dtype(cfg.dtype).itemsize
     return encdec_stages(cfg.n_enc_layers, cfg.n_dec_layers, s_enc=s_enc,
                          s_dec=s_dec, batch=batch, d_model=cfg.d_model,
-                         dtype_bytes=db)
+                         dtype_bytes=db, grad_dtype_bytes=grad_dtype_bytes)
 
 
 def dsp_schedule(cfg: EncDecConfig, n: int, *, s_enc: Optional[int] = None,
                  s_dec: Optional[int] = None,
-                 batch: Optional[int] = None) -> Schedule:
+                 batch: Optional[int] = None, topology=None,
+                 joint: bool = False,
+                 grad_dtype_bytes: Optional[int] = None) -> Schedule:
     """Solve the switching plan over the full enc-dec stage graph (enter
-    sequence-sharded, exit sequence-sharded for the loss)."""
-    return plan_schedule(stages(cfg, s_enc=s_enc, s_dec=s_dec, batch=batch),
-                         (1, 2), n=max(n, 1), initial=1, final=1)
+    sequence-sharded, exit sequence-sharded for the loss).  ``topology``
+    prices the plan in seconds on the mesh's links; ``joint=True`` plans the
+    backward pass as its own stage graph (``core.plan.plan_joint``).  The
+    enc-dec forward executes its backward as the autodiff transpose, so a
+    non-mirrored joint plan falls back to the mirrored forward-optimal one
+    (same reasoning as ``models.lm.dsp_schedule``)."""
+    st = stages(cfg, s_enc=s_enc, s_dec=s_dec, batch=batch,
+                grad_dtype_bytes=grad_dtype_bytes)
+    if joint:
+        return plan_joint_schedule(st, (1, 2), n=max(n, 1), initial=1,
+                                   final=1, topology=topology,
+                                   require_mirrored=True)
+    return plan_schedule(st, (1, 2), n=max(n, 1), initial=1, final=1,
+                         topology=topology)
 
 
 def _with_planned_schedule(sharder, cfg: EncDecConfig,

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import compat
 from repro.core.plan import Stage
-from repro.core.schedule import Schedule, plan_schedule
+from repro.core.schedule import Schedule, plan_joint_schedule, plan_schedule
 from repro.models import layers as L
 from repro.models import attention as A
 from repro.models import moe as M
@@ -138,24 +138,30 @@ class LMConfig:
 # ---------------------------------------------------------------------------
 
 def stages(cfg: LMConfig, *, seq: Optional[int] = None,
-           batch: Optional[int] = None) -> List[Stage]:
+           batch: Optional[int] = None,
+           grad_dtype_bytes: Optional[int] = None) -> List[Stage]:
     """Declare the model's stage sequence on the logical (B, S, H·Dh) view
     for the switching planner: channel-wise stages (projections, norms, FFN,
     MoE) compute along dim 2, the mixer cores (attention softmax / SSD scan)
     along dim 1 — DSP-1D, where the "second sequence dim" is the head or
     channel axis.  With extents given, stages carry global shapes so the
-    planner prices transitions in bytes."""
+    planner prices transitions in bytes; ``grad_dtype_bytes`` declares the
+    width of the gradients crossing the same boundaries backward (joint
+    fwd+bwd planning; defaults to the activation dtype)."""
     specs = cfg.period_specs()
     shape = (batch, seq, cfg.d_model) if None not in (seq, batch) else None
     db = jnp.dtype(cfg.dtype).itemsize
+    gb = grad_dtype_bytes
     out: List[Stage] = []
     for layer in range(cfg.n_layers):
         spec = specs[layer % len(specs)]
-        out.append(Stage(frozenset({2}), f"L{layer}.proj", shape, db))
-        out.append(Stage(frozenset({1}), f"L{layer}.{spec.mixer}", shape, db))
+        out.append(Stage(frozenset({2}), f"L{layer}.proj", shape, db,
+                         bwd_dtype_bytes=gb))
+        out.append(Stage(frozenset({1}), f"L{layer}.{spec.mixer}", shape, db,
+                         bwd_dtype_bytes=gb))
         if spec.ffn != "none":
             out.append(Stage(frozenset({2}), f"L{layer}.{spec.ffn}", shape,
-                             db))
+                             db, bwd_dtype_bytes=gb))
     return out
 
 
@@ -165,13 +171,27 @@ def stage_period(cfg: LMConfig) -> int:
 
 
 def dsp_schedule(cfg: LMConfig, n: int, *, seq: Optional[int] = None,
-                 batch: Optional[int] = None, topology=None) -> Schedule:
+                 batch: Optional[int] = None, topology=None,
+                 joint: bool = False,
+                 grad_dtype_bytes: Optional[int] = None) -> Schedule:
     """Solve the switching plan (enter sequence-sharded from the dataloader
     split, return to it for the loss) and validate it is scan-periodic.
     ``topology`` prices the plan in seconds on the mesh's links (byte model
-    when None)."""
-    sched = plan_schedule(stages(cfg, seq=seq, batch=batch), (1, 2),
-                          n=max(n, 1), initial=1, final=1, topology=topology)
+    when None); ``joint=True`` plans the backward pass too
+    (``core.plan.plan_joint``).  The LM executes through SCANNED layers
+    whose backward is always the autodiff transpose, so when the joint DP
+    returns a non-mirrored round trip (whose forward may be
+    forward-suboptimal) the whole schedule falls back to the mirrored
+    forward-optimal plan — executing the joint forward with a transposed
+    backward would be strictly worse than not planning jointly at all."""
+    st = stages(cfg, seq=seq, batch=batch, grad_dtype_bytes=grad_dtype_bytes)
+    if joint:
+        sched = plan_joint_schedule(st, (1, 2), n=max(n, 1), initial=1,
+                                    final=1, topology=topology,
+                                    require_mirrored=True)
+    else:
+        sched = plan_schedule(st, (1, 2), n=max(n, 1), initial=1, final=1,
+                              topology=topology)
     sched.periodic(stage_period(cfg))          # scanned layers: steady state
     return sched
 

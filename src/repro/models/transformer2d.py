@@ -45,6 +45,7 @@ from repro.core import megatron_sp as megatron_core
 from repro.core.layout import from_mesh
 from repro.core.plan import Stage
 from repro.core.schedule import (PeriodicSchedule, ScheduleExecutor,
+                                 UnrolledSchedule, plan_joint_schedule,
                                  plan_schedule)
 from repro.kernels.ops import flash_attention
 from repro.models import layers as L
@@ -126,40 +127,58 @@ def t2d_param_count(cfg: T2DConfig) -> int:
 # ---------------------------------------------------------------------------
 
 def stages(cfg: T2DConfig, *, t_len: Optional[int] = None,
-           s_len: Optional[int] = None, batch: Optional[int] = None):
+           s_len: Optional[int] = None, batch: Optional[int] = None,
+           grad_dtype_bytes: Optional[int] = None):
     """Declare the model's stage sequence for the switching planner, in
     EXECUTION order: per layer one spatial block (computes along S = dim 2,
     so the shard must sit on T) then one temporal block (computes along
     T = dim 1).  Tensors are (B, T, S, C); with extents given, each stage
     carries the global activation shape so the planner prices transitions in
-    paper-Table-2 bytes."""
+    paper-Table-2 bytes.  ``grad_dtype_bytes`` declares the width of the
+    gradients crossing the same boundaries backward (joint fwd+bwd
+    planning; defaults to the activation dtype)."""
     shape = None
     if None not in (t_len, s_len, batch):
         shape = (batch, t_len, s_len, cfg.d_model)
     db = jnp.dtype(cfg.dtype).itemsize
     out = []
     for i in range(cfg.n_layers // 2):
-        out.append(Stage(frozenset({2}), f"layer{i}.spatial", shape, db))
-        out.append(Stage(frozenset({1}), f"layer{i}.temporal", shape, db))
+        out.append(Stage(frozenset({2}), f"layer{i}.spatial", shape, db,
+                         bwd_dtype_bytes=grad_dtype_bytes))
+        out.append(Stage(frozenset({1}), f"layer{i}.temporal", shape, db,
+                         bwd_dtype_bytes=grad_dtype_bytes))
     return out
 
 
 def dsp_schedule(cfg: T2DConfig, n: int, *, t_len: Optional[int] = None,
                  s_len: Optional[int] = None, batch: Optional[int] = None,
-                 initial: int = 1) -> PeriodicSchedule:
+                 initial: int = 1, topology=None, joint: bool = False,
+                 grad_dtype_bytes: Optional[int] = None):
     """Solve the switching plan for this model (enter sharded on T, return
-    to T for the loss/head) and validate it is scan-periodic with the
-    2-stage layer period.
+    to T for the loss/head).  Returns the scan-body ``PeriodicSchedule``
+    when the plan repeats with the 2-stage layer period, else the
+    ``UnrolledSchedule`` view (``forward`` python-unrolls the layer loop
+    for those).
+
+    ``joint=True`` additionally plans the backward pass as its own stage
+    graph (``core.plan.plan_joint``): the returned schedule carries
+    ``bwd_dims`` when a non-mirrored round trip is strictly cheaper —
+    priced in seconds on ``topology`` when one is given.
 
     Both dims stay candidates regardless of divisibility: with only two
     sequence dims and each stage forbidding one, excluding either leaves
     some stage infeasible — non-divisible extents are instead handled
     downstream (the auto path pads; the explicit path rejects them in
     ``dynamic_switch``)."""
-    sched = plan_schedule(
-        stages(cfg, t_len=t_len, s_len=s_len, batch=batch), [1, 2],
-        n=max(n, 1), initial=initial, final=initial)
-    return sched.periodic(2)
+    st = stages(cfg, t_len=t_len, s_len=s_len, batch=batch,
+                grad_dtype_bytes=grad_dtype_bytes)
+    solve = plan_joint_schedule if joint else plan_schedule
+    sched = solve(st, [1, 2], n=max(n, 1), initial=initial, final=initial,
+                  topology=topology)
+    try:
+        return sched.periodic(2)
+    except ValueError:
+        return sched.unrolled()
 
 
 # in-period stage index by the block's compute axis (spatial computes S=2)
@@ -352,19 +371,29 @@ def _megatron_block(p, x, cfg: T2DConfig, *, axis: int, t_emb=None,
 
 def forward(params, x, t, cfg: T2DConfig, *, mesh: Optional[Mesh] = None,
             mode: str = "dsp", backend: str = "pallas", remat: bool = True,
-            remat_group: int = 2, t_offset=0, s_offset=0):
+            remat_group: int = 2, t_offset=0, s_offset=0,
+            topology=None, joint: bool = False, schedule=None):
     """Compiler-path forward.  x: (B, T, S, C_in) global; with a mesh given,
     the planned DSP schedule (``dsp_schedule``) drives every stage-boundary
     layout change through the auto-backend ScheduleExecutor; XLA lowers each
-    boundary constraint change to one all-to-all (the dynamic switch)."""
+    boundary constraint change to one all-to-all (the dynamic switch).
+
+    ``joint=True`` plans the backward pass too (priced on ``topology`` when
+    given): the executor then emits every boundary through a custom_vjp so
+    the backward runs its own planned switch sequence.  ``schedule``
+    overrides the solved plan with a caller-provided ``PeriodicSchedule`` /
+    ``UnrolledSchedule``; non-periodic (unrolled) schedules python-unroll
+    the layer loop instead of scanning."""
     ex = ScheduleExecutor.null()
     fold_hook = None
     stage_hook = None
     attn_impl = None
+    psched = None
     if mesh is not None and mode == "dsp":
         ctx = from_mesh(mesh)
-        psched = dsp_schedule(cfg, ctx.sp_size, t_len=x.shape[1],
-                              s_len=x.shape[2], batch=x.shape[0])
+        psched = schedule if schedule is not None else dsp_schedule(
+            cfg, ctx.sp_size, t_len=x.shape[1], s_len=x.shape[2],
+            batch=x.shape[0], topology=topology, joint=joint)
         ex = ScheduleExecutor(psched, backend="auto", ctx=ctx)
 
         def fold_hook(y):
@@ -393,38 +422,68 @@ def forward(params, x, t, cfg: T2DConfig, *, mesh: Optional[Mesh] = None,
         t_emb = L.linear(params["t_proj"],
                          L.timestep_embedding(t, cfg.d_model).astype(x.dtype))
 
-    def layer_body(xc, lp):
-        # spatial stage: computes over S — planned shard stays on T
-        xc = t2d_block(lp["spatial"], xc, cfg, axis=2, t_emb=t_emb,
-                       backend=backend, attn_impl=attn_impl,
-                       fold_hook=fold_hook, stage_hook=stage_hook)
-        # planned boundary: dynamic switch T -> S (one all-to-all)
-        xc = ex.boundary(xc, 1)
-        xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
-                       backend=backend, attn_impl=attn_impl,
-                       fold_hook=fold_hook, stage_hook=stage_hook)
-        # planned wrap-around: dynamic switch S -> T
-        xc = ex.wrap(xc)
-        return xc, None
-
-    # hierarchical remat: scan over GROUPS of layer pairs so only one
-    # residual carry per group is stored (halves activation-carry memory for
-    # the long-temporal cells at the cost of one extra in-group recompute)
     layers = params["layers"]
     n = jax.tree_util.tree_leaves(layers)[0].shape[0]
-    g = remat_group if (remat and n % remat_group == 0) else 1
 
-    def group_body(xc, gp):
-        for i in range(g):
-            xi = jax.tree_util.tree_map(lambda a: a[i], gp)
-            xc, _ = layer_body(xc, xi)
-        return xc, None
+    if isinstance(psched, UnrolledSchedule):
+        # non-periodic plan: python-unroll the layer loop; boundaries (and
+        # anchors) address stages by ABSOLUTE index so every layer pair may
+        # use its own layouts — fwd and planned bwd alike
+        def pair_body(xc, lp, i):
+            hooks = (None, None)
+            if stage_hook is not None:
+                hooks = (lambda y, _a: ex.anchor(y, 2 * i),
+                         lambda y, _a: ex.anchor(y, 2 * i + 1))
+            xc = t2d_block(lp["spatial"], xc, cfg, axis=2, t_emb=t_emb,
+                           backend=backend, attn_impl=attn_impl,
+                           fold_hook=fold_hook, stage_hook=hooks[0])
+            xc = ex.boundary(xc, 2 * i + 1)
+            xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
+                           backend=backend, attn_impl=attn_impl,
+                           fold_hook=fold_hook, stage_hook=hooks[1])
+            if 2 * i + 2 < psched.n_stages:
+                xc = ex.boundary(xc, 2 * i + 2)
+            return xc
 
-    grouped = jax.tree_util.tree_map(
-        lambda a: a.reshape((n // g, g) + a.shape[1:]), layers)
-    body = jax.checkpoint(group_body, prevent_cse=False) if remat else group_body
-    from repro.models.flags import scan_or_unroll
-    x, _ = scan_or_unroll(body, x, grouped)
+        for i in range(n):
+            lp = jax.tree_util.tree_map(lambda a: a[i], layers)
+            body = (jax.checkpoint(functools.partial(pair_body, i=i),
+                                   prevent_cse=False)
+                    if remat else functools.partial(pair_body, i=i))
+            x = body(x, lp)
+    else:
+        def layer_body(xc, lp):
+            # spatial stage: computes over S — planned shard stays on T
+            xc = t2d_block(lp["spatial"], xc, cfg, axis=2, t_emb=t_emb,
+                           backend=backend, attn_impl=attn_impl,
+                           fold_hook=fold_hook, stage_hook=stage_hook)
+            # planned boundary: dynamic switch T -> S (one all-to-all)
+            xc = ex.boundary(xc, 1)
+            xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
+                           backend=backend, attn_impl=attn_impl,
+                           fold_hook=fold_hook, stage_hook=stage_hook)
+            # planned wrap-around: dynamic switch S -> T
+            xc = ex.wrap(xc)
+            return xc, None
+
+        # hierarchical remat: scan over GROUPS of layer pairs so only one
+        # residual carry per group is stored (halves activation-carry memory
+        # for the long-temporal cells at the cost of one extra in-group
+        # recompute)
+        g = remat_group if (remat and n % remat_group == 0) else 1
+
+        def group_body(xc, gp):
+            for i in range(g):
+                xi = jax.tree_util.tree_map(lambda a: a[i], gp)
+                xc, _ = layer_body(xc, xi)
+            return xc, None
+
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((n // g, g) + a.shape[1:]), layers)
+        body = (jax.checkpoint(group_body, prevent_cse=False) if remat
+                else group_body)
+        from repro.models.flags import scan_or_unroll
+        x, _ = scan_or_unroll(body, x, grouped)
     x = ex.exit(x)                    # planned final layout (loss/head on T)
     x = L.rms_norm(params["final_norm"], x)
     return L.linear(params["head"], x)

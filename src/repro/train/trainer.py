@@ -87,7 +87,8 @@ class Trainer:
     def __init__(self, *, loss_fn, params, opt_cfg: OptConfig,
                  cfg: TrainerConfig, data_fn: Callable[[int], Any],
                  ckpt_dir: Optional[str] = None,
-                 jit_kwargs: Optional[dict] = None):
+                 jit_kwargs: Optional[dict] = None,
+                 schedule=None):
         self.cfg = cfg
         self.data_fn = data_fn
         self.params = params
@@ -102,6 +103,29 @@ class Trainer:
         self.start_step = 0
         self.straggler_events = []
         self.metrics_history = []
+        # planned communication of one training step, both legs: the solved
+        # DSP Schedule (core.schedule) prices its forward AND its planned
+        # backward — surfaced in the run() summary next to measured times
+        self.plan_meta = self._plan_meta(schedule)
+
+    @staticmethod
+    def _plan_meta(schedule) -> Optional[Dict[str, Any]]:
+        if schedule is None:
+            return None
+        meta: Dict[str, Any] = {
+            "planned_switches": schedule.n_switches(),
+            "bwd_mirrored": schedule.mirrored,
+        }
+        if schedule.topology is not None:
+            rs = schedule.roundtrip_seconds()
+            meta.update(planned_fwd_seconds=rs.fwd,
+                        planned_bwd_seconds=rs.bwd,
+                        planned_roundtrip_seconds=rs.total)
+            log.info("planned comm: fwd %.3es + bwd %.3es per step "
+                     "(bwd %s)", rs.fwd, rs.bwd,
+                     "mirrors fwd" if schedule.mirrored else "planned "
+                     "independently")
+        return meta
 
     # -- fault tolerance -------------------------------------------------------
     def try_resume(self):
@@ -163,6 +187,9 @@ class Trainer:
             if self.cfg.ckpt_every and step % self.cfg.ckpt_every == 0:
                 self._checkpoint(step)
         self._checkpoint(step, blocking=True)
-        return {"final_step": step,
-                "history": self.metrics_history,
-                "stragglers": self.straggler_events}
+        out = {"final_step": step,
+               "history": self.metrics_history,
+               "stragglers": self.straggler_events}
+        if self.plan_meta is not None:
+            out["plan"] = self.plan_meta
+        return out

@@ -17,6 +17,7 @@ SCENARIOS = [
     "decode_sharded",
     "elastic_checkpoint",
     "grad_allreduce_compression",
+    "joint_bwd_parity",
 ]
 
 

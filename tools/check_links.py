@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Link-check the repo docs: every relative markdown link in README.md and
+docs/**.md must resolve to an existing file, and every intra-document anchor
+(#fragment) must match a heading in the target document.  External (http)
+links are only format-checked — CI runs offline.
+
+Exit code 0 = clean; 1 = broken links (listed on stderr).
+Run:  python tools/check_links.py
+"""
+import os
+import re
+import sys
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#+\s+(.*)$", re.MULTILINE)
+
+
+def doc_files():
+    out = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        for dirpath, _, names in os.walk(docs):
+            out.extend(os.path.join(dirpath, n) for n in names
+                       if n.endswith(".md"))
+    return [p for p in out if os.path.exists(p)]
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, spaces to dashes, drop
+    punctuation (approximation sufficient for our headings)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\s-]", "", s)
+    return re.sub(r"\s+", "-", s).strip("-")
+
+
+def anchors_of(path: str):
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    return {slugify(h) for h in HEADING_RE.findall(text)}
+
+
+def main() -> int:
+    errors = []
+    for path in doc_files():
+        rel = os.path.relpath(path, ROOT)
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for link in LINK_RE.findall(text):
+            if link.startswith(("http://", "https://", "mailto:")):
+                continue
+            target, _, frag = link.partition("#")
+            if target:
+                tpath = os.path.normpath(
+                    os.path.join(os.path.dirname(path), target))
+                if not os.path.exists(tpath):
+                    errors.append(f"{rel}: broken link -> {link}")
+                    continue
+            else:
+                tpath = path
+            if frag and tpath.endswith(".md"):
+                if frag not in anchors_of(tpath):
+                    errors.append(f"{rel}: missing anchor -> {link}")
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"{len(errors)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"checked {len(doc_files())} doc file(s): all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
