@@ -10,6 +10,8 @@ subprocesses with their own simulated device counts; this process keeps the
   latency_fig8    Figure 8    inference latency
   memory_fig9     Figure 9    per-device memory per method
   kernels_micro   —           Pallas kernel microbenches + roofline
+  serving_load    —           static vs continuous batching on one arrival
+                              trace (writes BENCH_serving.json)
 """
 import sys
 import traceback
@@ -17,10 +19,11 @@ import traceback
 
 def main() -> None:
     from benchmarks import (comm_volume, e2e_throughput, kernels_micro,
-                            latency_fig8, memory_fig9, scaling)
+                            latency_fig8, memory_fig9, scaling, serving_load)
     mods = [("comm_volume", comm_volume), ("e2e_throughput", e2e_throughput),
             ("scaling", scaling), ("latency_fig8", latency_fig8),
-            ("memory_fig9", memory_fig9), ("kernels_micro", kernels_micro)]
+            ("memory_fig9", memory_fig9), ("kernels_micro", kernels_micro),
+            ("serving_load", serving_load)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     failed = []

@@ -1,0 +1,218 @@
+"""Serving load benchmark: static vs continuous batching on one arrival
+trace (the serving trajectory's first datapoint).
+
+A worker subprocess simulates an N-device mesh (default 8, data=1 so the
+model axis carries DSP sequence parallelism), builds one sharded
+ServingEngine, and replays the SAME synthetic Poisson arrival trace through
+both batching policies:
+
+* **static**  — ``serving.scheduler.replay_static``: FIFO chunks of
+  ``max_batch``, each chunk waits for its last arrival, prefills together,
+  decodes in lockstep until its slowest row finishes.
+* **continuous** — ``serving.scheduler.ContinuousScheduler``: per-request
+  admission the moment a slot frees, per-step retirement, slot reuse.
+
+Both arms run the same jitted prefill/decode cells (warmed up before
+timing), the same greedy decode, the same wall clock — only the batching
+policy differs, and the worker asserts their tokens are IDENTICAL before
+reporting any numbers.  Decode budgets are deliberately heterogeneous
+(uniform over [min, max]): lockstep waste and queue-wait are exactly what
+continuous batching exists to remove.
+
+Writes ``BENCH_serving.json`` at the repo root: per-arm throughput tok/s,
+p50/p99 TTFT and TPOT, queue wait, slot occupancy, plus the ratios.  Run
+standalone (``python benchmarks/serving_load.py [--steps 2]``) or via
+``benchmarks/run.py serving_load``.  ``--steps`` caps the decode budgets —
+CI smokes the JSON schema with ``--steps 2``.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+SRC = os.path.join(ROOT, "src")
+
+SUMMARY_KEYS = (            # the schema CI smoke-checks (don't rot silently)
+    "throughput_tok_s", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s",
+    "tpot_p99_s", "queue_wait_p50_s", "queue_wait_p99_s", "slot_occupancy",
+    "tokens_generated", "decode_steps", "slots_allocated", "elapsed_s",
+)
+
+
+def _worker(cfg: dict) -> None:
+    """Runs inside the simulated-mesh subprocess; prints one JSON line."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.topology import Topology
+    from repro.models.lm import LMConfig, init_lm
+    from repro.parallel.partition import ParallelPlan
+    from repro.serving.engine import Request, ServingEngine, _submesh
+    from repro.serving.kv_pool import KVPool
+    from repro.serving.scheduler import ContinuousScheduler, replay_static
+
+    n_dev = cfg["devices"]
+    max_batch = cfg["max_batch"]
+    n_req = cfg["n_requests"]
+    plen = cfg["prompt_len"]
+    rng = np.random.RandomState(0)
+    budgets = rng.randint(cfg["min_new"], cfg["max_new"] + 1, size=n_req)
+    max_len = plen + int(budgets.max())
+    max_len += (-max_len) % max(n_dev, 1)     # seq-sharded divisibility
+
+    mcfg = LMConfig(name="bench-serve", n_layers=2, d_model=64, n_heads=8,
+                    n_kv_heads=4, head_dim=16, d_ff=128, vocab=96,
+                    dtype=jnp.float32)
+    params = init_lm(jax.random.PRNGKey(0), mcfg)
+    mesh = _submesh(n_dev, 1) if n_dev > 1 else None
+    eng = ServingEngine(params, mcfg, max_len=max_len, mesh=mesh,
+                        plan=ParallelPlan(mode="dsp" if mesh is not None
+                                          else "none"),
+                        topology=(Topology.flat_ici(n_dev)
+                                  if n_dev > 1 else None))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (n_req, plen), 0,
+                                 mcfg.vocab)
+
+    # -- warm every jit cache both arms will hit (compiles out of the timed
+    # region: batch-1 + chunk prefill, pool + chunk decode) --------------------
+    lg, caches1 = eng._prefill(prompts[:1])
+    jax.block_until_ready(eng._decode(jnp.argmax(lg[:, -1], -1)[:, None],
+                                      caches1))
+    lgc, cachesc = eng._prefill(prompts[:max_batch])
+    jax.block_until_ready(eng._decode(jnp.argmax(lgc[:, -1], -1)[:, None],
+                                      cachesc))
+    # a real KVPool so the warmed/calibrated decode signature (shapes AND
+    # placement) is exactly the one the scheduler will run
+    pool_caches = KVPool(mcfg, max_batch, max_len, mesh=mesh,
+                         plan=eng.plan).caches
+    tok = jnp.zeros((max_batch, 1), jnp.int32)
+    jax.block_until_ready(eng._decode(tok, pool_caches)[0])
+
+    # -- calibrate the arrival trace to the measured decode step (the pool's
+    # REAL signature: per-slot pos, mesh placement) ---------------------------
+    t0 = time.monotonic()
+    reps = 10
+    for _ in range(reps):
+        lg, pool_caches = eng._decode(tok, pool_caches)
+        jax.block_until_ready(lg)
+    t_step = (time.monotonic() - t0) / reps
+    mean_gap = cfg["gap_steps"] * t_step
+    arrivals = np.cumsum(rng.exponential(mean_gap, size=n_req))
+    arrivals[0] = 0.0
+
+    def make_requests():
+        return [Request(prompt=prompts[i], max_new_tokens=int(budgets[i]),
+                        arrival_time=float(arrivals[i]), request_id=i)
+                for i in range(n_req)]
+
+    static_reqs, static_metrics = replay_static(eng, make_requests(),
+                                                max_batch=max_batch)
+    cont_reqs = make_requests()
+    sched = ContinuousScheduler(eng, max_batch=max_batch)
+    sched.run(cont_reqs)
+    if mesh is not None:
+        sched.pool.assert_on_mesh()
+
+    by_id = {r.request_id: r for r in static_reqs}
+    parity = all(by_id[r.request_id].generated == r.generated
+                 for r in cont_reqs)
+    assert parity, "continuous tokens diverged from the static oracle"
+
+    out = {
+        "config": {**cfg, "max_len": max_len, "t_step_s": t_step,
+                   "budgets": budgets.tolist(),
+                   "arrivals_s": np.round(arrivals, 4).tolist()},
+        "parity": parity,
+        "static": static_metrics.summary(),
+        "continuous": sched.metrics.summary(),
+    }
+    print(json.dumps(out))
+
+
+def run_trace(devices: int, *, n_requests=16, max_batch=4, prompt_len=16,
+              min_new=2, max_new=32, gap_steps=1.5) -> dict:
+    """Heterogeneous budgets (uniform [min_new, max_new]) are the point:
+    static batching decodes every chunk to its SLOWEST row while continuous
+    retires and refills per step — the gap is the lockstep waste."""
+    cfg = dict(devices=devices, n_requests=n_requests, max_batch=max_batch,
+               prompt_len=prompt_len, min_new=min_new, max_new=max_new,
+               gap_steps=gap_steps)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--run-worker",
+         json.dumps(cfg)],
+        env=env, capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"serving_load worker failed:\n"
+                           f"{proc.stderr[-3000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def main(argv=None):
+    if ROOT not in sys.path:        # standalone `python benchmarks/...` runs
+        sys.path.insert(0, ROOT)
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=0,
+                    help="cap decode budgets at this many tokens "
+                    "(smoke mode; 0 = full trace)")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--out", default=os.path.join(ROOT,
+                                                  "BENCH_serving.json"))
+    args = ap.parse_args([] if argv is None else argv)
+
+    smoke = 0 < args.steps < 8
+    kw = {}
+    if smoke:
+        kw = dict(n_requests=4, max_batch=2, min_new=max(args.steps, 2),
+                  max_new=max(args.steps, 2))
+    elif args.steps:
+        kw = dict(max_new=args.steps)
+    res = run_trace(args.devices, **kw)
+
+    st, ct = res["static"], res["continuous"]
+    for arm, s in (("static", st), ("continuous", ct)):
+        missing = [k for k in SUMMARY_KEYS if k not in s]
+        assert not missing, f"{arm} summary lost keys: {missing}"
+    res["ratios"] = {
+        "throughput_x": (ct["throughput_tok_s"] / st["throughput_tok_s"]
+                         if st["throughput_tok_s"] else None),
+        "ttft_p99_x": (st["ttft_p99_s"] / ct["ttft_p99_s"]
+                       if ct["ttft_p99_s"] else None),
+    }
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+
+    emit("serving_load.static",
+         st["ttft_p99_s"] * 1e6 if st["ttft_p99_s"] else None,
+         f"thru={st['throughput_tok_s']:.1f}tok/s "
+         f"occ={st['slot_occupancy']:.2f}")
+    emit("serving_load.continuous",
+         ct["ttft_p99_s"] * 1e6 if ct["ttft_p99_s"] else None,
+         f"thru={ct['throughput_tok_s']:.1f}tok/s "
+         f"occ={ct['slot_occupancy']:.2f}")
+    emit("serving_load.ratio", None,
+         f"thru_x={res['ratios']['throughput_x']:.2f} "
+         f"ttft_p99_x={res['ratios']['ttft_p99_x']:.2f}")
+
+    if not smoke:
+        assert ct["throughput_tok_s"] > st["throughput_tok_s"], (
+            "continuous batching must beat static throughput", res["ratios"])
+        assert ct["ttft_p99_s"] < st["ttft_p99_s"], (
+            "continuous batching must beat static p99 TTFT", res["ratios"])
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--run-worker":
+        _worker(json.loads(sys.argv[2]))
+    else:
+        main(sys.argv[1:])

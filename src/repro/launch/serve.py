@@ -1,22 +1,76 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id>``.
 
-Loads (or initialises) a model and runs batched prefill + greedy decode
-through the plan-aware ServingEngine.  ``--devices N --mode dsp`` actually
-serves SHARDED: the driver builds the (data x model) mesh, the Topology
-modelling its links (``--topology``), and hands both to the engine, which
-derives its (plan, schedule, sharder) triple from them; the KV caches are
-asserted to land sequence-sharded on the mesh.  ``--replan M`` then
-exercises the elastic-resize path: the engine re-plans onto M devices and
-serves the same prompts again.
+Loads (or initialises) a model and serves it through the plan-aware
+ServingEngine.  ``--devices N --mode dsp`` actually serves SHARDED: the
+driver builds the (data x model) mesh, the Topology modelling its links
+(``--topology``; ``profile:<path>`` fits a measured fabric via
+``Topology.from_profile``), and hands both to the engine, which derives its
+(plan, schedule, sharder) triple from them; the KV caches are asserted to
+land sequence-sharded on the mesh.
+
+Two serving modes:
+
+* default — the static batch reference path (one lockstep ``generate``);
+  ``--replan M`` then exercises the elastic-resize path: the engine
+  re-plans onto M devices and serves the same prompts again.
+* ``--continuous`` — the continuous-batching scheduler: ``--max-batch``
+  recycled slots over the sequence-sharded KV pool, a Poisson arrival
+  trace (``--arrival`` = mean inter-arrival seconds; 0 = all at once),
+  per-token streaming (``--stream``), and a metrics JSON (TTFT/TPOT/
+  queue-wait percentiles, throughput, slot occupancy, the priced fabric)
+  printed and optionally written to ``--metrics PATH``.
 """
 import argparse
 import os
+
+TOPOLOGY_PRESETS = ("ici", "torus", "ici_dcn", "uniform")
+
+
+def _topology_arg(val: str) -> str:
+    if val in TOPOLOGY_PRESETS or val.startswith("profile:"):
+        return val
+    raise argparse.ArgumentTypeError(
+        f"--topology must be one of {TOPOLOGY_PRESETS} or profile:<path>, "
+        f"got {val!r}")
+
+
+def resolve_topology(kind: str, sp: int, *, n_hosts=None):
+    """Named preset, or ``profile:<path>`` — a JSON file of
+    ``[[global_bytes, seconds], ...]`` all-gather samples fitted by
+    ``Topology.from_profile`` so a MEASURED fabric prices the serving
+    plan."""
+    if kind.startswith("profile:"):
+        import json
+        from repro.core.topology import Topology
+        with open(kind[len("profile:"):]) as f:
+            samples = [tuple(s) for s in json.load(f)]
+        return Topology.from_profile(sp, samples)
+    from repro.launch.mesh import topology_preset
+    return topology_preset(kind, sp, n_hosts=n_hosts)
+
+
+def topology_facts(topo, schedule) -> dict:
+    """The fabric facts the metrics JSON records: per-link model + what the
+    planner priced on it."""
+    if topo is None:
+        return {"topology": None}
+    out = {
+        "topology": [{"name": a.name, "size": a.size,
+                      "bandwidth_gbps": a.bandwidth / 1e9,
+                      "latency_s": a.latency} for a in topo.axes],
+        "bottleneck_bandwidth_gbps": topo.bottleneck_bandwidth / 1e9,
+    }
+    if schedule is not None:
+        out["planned_switches"] = schedule.n_switches()
+        out["planned_seconds_per_step"] = schedule.per_device_seconds()
+    return out
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="request count (static: one batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
@@ -25,17 +79,28 @@ def main(argv=None):
     ap.add_argument("--mode", default="dsp",
                     choices=["dsp", "tp", "none"],
                     help="model-axis role when serving sharded")
-    ap.add_argument("--topology", default="ici",
-                    choices=["ici", "torus", "ici_dcn", "uniform"],
-                    help="link model of the SP axis (prices the plan in "
-                    "seconds)")
+    ap.add_argument("--topology", default="ici", type=_topology_arg,
+                    help="link model of the SP axis: preset "
+                    f"{TOPOLOGY_PRESETS} or profile:<path> (measured "
+                    "all-gather samples; prices the plan in seconds)")
     ap.add_argument("--hosts", type=int, default=None,
                     help="host count for --topology ici_dcn")
     ap.add_argument("--data", type=int, default=1,
                     help="data-parallel axis size (model = devices / data)")
     ap.add_argument("--replan", type=int, default=0,
                     help="after serving, re-plan onto this many devices and "
-                    "serve again (elastic resize)")
+                    "serve again (elastic resize; static mode)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching scheduler")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots in the KV pool (continuous mode)")
+    ap.add_argument("--arrival", type=float, default=0.0,
+                    help="mean inter-arrival seconds of the Poisson request "
+                    "trace (continuous mode; 0 = all arrive at once)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print every generated token as it is emitted")
+    ap.add_argument("--metrics", default=None,
+                    help="write the engine metrics JSON here")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -43,10 +108,11 @@ def main(argv=None):
             f"--xla_force_host_platform_device_count={args.devices}")
 
     import jax
+    import numpy as np
     from repro import configs
     from repro.models.lm import init_lm
     from repro.parallel.partition import ParallelPlan
-    from repro.serving.engine import ServingEngine
+    from repro.serving.engine import Request, ServingEngine
 
     spec = configs.get(args.arch)
     assert spec.family == "lm", "serve driver covers the LM family"
@@ -63,18 +129,21 @@ def main(argv=None):
     mesh = topo = None
     plan = ParallelPlan(mode="none")
     if args.mode != "none" and n_dev > 1:
-        from repro.launch.mesh import make_mesh, mesh_topology
+        from repro.launch.mesh import make_mesh
         if n_dev % args.data:
             raise SystemExit(f"{n_dev} devices not divisible by "
                              f"--data {args.data}")
         mesh = make_mesh((args.data, n_dev // args.data), ("data", "model"))
-        topo = mesh_topology(mesh, args.topology, n_hosts=args.hosts)
+        topo = resolve_topology(args.topology, mesh.shape["model"],
+                                n_hosts=args.hosts)
         plan = ParallelPlan(mode=args.mode)
         print(f"mesh {dict(mesh.shape)}; topology "
               f"{[(a.name, a.size) for a in topo.axes]} "
               f"bottleneck {topo.bottleneck_bandwidth/1e9:.1f} GB/s")
 
     max_len = args.prompt_len + args.new_tokens
+    sp = mesh.shape["model"] if mesh is not None else 1
+    max_len += (-max_len) % sp          # sequence-sharded cache divisibility
     eng = ServingEngine(params, cfg, max_len=max_len, mesh=mesh, plan=plan,
                         topology=topo)
     if eng.schedule is not None:
@@ -83,6 +152,34 @@ def main(argv=None):
 
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    if args.continuous:
+        from repro.serving.scheduler import ContinuousScheduler
+        rng = np.random.RandomState(0)
+        gaps = (rng.exponential(args.arrival, size=args.batch)
+                if args.arrival > 0 else np.zeros(args.batch))
+        arrivals = np.cumsum(gaps)
+        reqs = [Request(prompt=prompts[i], max_new_tokens=args.new_tokens,
+                        arrival_time=float(arrivals[i]), request_id=i)
+                for i in range(args.batch)]
+        stream = None
+        if args.stream:
+            def stream(req, tok):
+                print(f"req{req.request_id} += {tok}", flush=True)
+        sched = ContinuousScheduler(eng, max_batch=args.max_batch)
+        sched.run(reqs, stream=stream)
+        if eng.mesh is not None:
+            sched.pool.assert_on_mesh()
+            print(f"KV pool sequence-sharded over {eng.sp_degree}-way "
+                  f"model axis: OK")
+        sched.metrics.extra.update(topology_facts(topo, eng.schedule))
+        sched.metrics.extra["n_devices"] = n_dev
+        sched.metrics.extra["mode"] = plan.mode
+        print(sched.metrics.to_json(args.metrics))
+        for r in reqs:
+            print(f"req{r.request_id} [{r.result.finish_reason}] "
+                  f"ttft={r.result.metrics.ttft:.3f}s: {r.generated}")
+        return reqs
 
     def run(tag):
         # check_sharding asserts the KV caches of the ONE prefill generate
@@ -98,10 +195,14 @@ def main(argv=None):
         return out
 
     out = run(f"serve[{n_dev}dev]")
+    if args.metrics:
+        import json
+        with open(args.metrics, "w") as f:
+            json.dump({"mode": plan.mode, "n_devices": n_dev,
+                       **topology_facts(topo, eng.schedule)}, f, indent=2)
     if args.replan:
         eng.replan(args.replan)
         out2 = run(f"replan[{args.replan}dev]")
-        import numpy as np
         same = bool(np.array_equal(np.asarray(out), np.asarray(out2)))
         print(f"replan output identical: {same}")
     return out

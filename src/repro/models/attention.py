@@ -82,7 +82,10 @@ def attention(p, x, cfg: AttnConfig, *, causal: bool = True,
 
     if positions is None:
         base = cache["pos"] if cache is not None else 0
-        positions = base + jnp.arange(s)
+        if jnp.ndim(base) == 1:          # per-slot decode positions: (B, S)
+            positions = base[:, None] + jnp.arange(s)
+        else:
+            positions = base + jnp.arange(s)
     if cfg.rope and x_kv is None:
         q = L.apply_rope(q, positions, theta=cfg.rope_theta)
         k = L.apply_rope(k, positions, theta=cfg.rope_theta)
@@ -101,10 +104,20 @@ def attention(p, x, cfg: AttnConfig, *, causal: bool = True,
             k = sharder.decode_heads(k)
             v = sharder.decode_heads(v)
         pos = cache["pos"]
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, 0, pos, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, 0, pos, 0))
+        if jnp.ndim(pos) == 1:
+            # per-slot write positions (continuous-batching slot pool): each
+            # row appends at its OWN sequence offset — a vmapped row-wise
+            # dynamic_update_slice, which lowers to a scatter that stays
+            # local on the sequence-sharded cache
+            def _row(c, u, p):
+                return jax.lax.dynamic_update_slice(c, u, (0, p, 0))
+            ck = jax.vmap(_row)(cache["k"], k.astype(cache["k"].dtype), pos)
+            cv = jax.vmap(_row)(cache["v"], v.astype(cache["v"].dtype), pos)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
         new_cache = {"k": ck, "v": cv, "pos": pos + s}
         k, v = ck, cv
         # dynamic offsets need the ref path's position masking; the Pallas
@@ -123,7 +136,9 @@ def attention(p, x, cfg: AttnConfig, *, causal: bool = True,
 
 def _ref_decode(q, k, v, cfg: AttnConfig, pos, causal: bool):
     """Decode attention with a *traced* position offset: mask by absolute
-    positions (cols <= pos + i, window, cap).  q: (B,H,Sq,D), k/v full cache."""
+    positions (cols <= pos + i, window, cap).  q: (B,H,Sq,D), k/v full cache.
+    ``pos`` may be a scalar (static batch: every row at the same offset) or
+    a (B,) vector (slot pool: each row masks against its OWN length)."""
     b, h, sq, d = q.shape
     hkv = k.shape[1]
     g = h // hkv
@@ -133,14 +148,18 @@ def _ref_decode(q, k, v, cfg: AttnConfig, pos, causal: bool):
                    k.astype(jnp.float32)) * scale
     if cfg.softcap is not None:
         s = cfg.softcap * jnp.tanh(s / cfg.softcap)
-    q_pos = pos + jnp.arange(sq)
+    per_row = jnp.ndim(pos) == 1
+    q_pos = (pos[:, None] if per_row else pos) + jnp.arange(sq)
     k_pos = jnp.arange(k.shape[2])
-    mask = jnp.ones((sq, k.shape[2]), bool)
+    mask = jnp.ones(q_pos.shape + (k.shape[2],), bool)
     if causal:
-        mask &= k_pos[None, :] <= q_pos[:, None]
+        mask &= k_pos <= q_pos[..., None]
     if cfg.window is not None:
-        mask &= k_pos[None, :] > q_pos[:, None] - cfg.window
-    s = jnp.where(mask[None, None, None], s, -2.3819763e38)
+        mask &= k_pos > q_pos[..., None] - cfg.window
+    if per_row:                              # (B, sq, skv) row-wise mask
+        s = jnp.where(mask[:, None, None], s, -2.3819763e38)
+    else:
+        s = jnp.where(mask[None, None, None], s, -2.3819763e38)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
     return o.reshape(b, h, sq, d).astype(q.dtype)

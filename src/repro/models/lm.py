@@ -554,10 +554,12 @@ def param_counts(cfg: LMConfig) -> Dict[str, int]:
 # ---------------------------------------------------------------------------
 
 def init_caches(cfg: LMConfig, batch: int, max_len: int, *,
-                dtype=None):
+                dtype=None, per_slot_pos: bool = False):
     """Concrete zero caches, stacked per period (scan layout).  Attention
     layers carry {k, v} of (B, Hkv, max_len, Dh); SSM layers carry
-    {conv, state}.  ``pos`` is the shared write position."""
+    {conv, state}.  ``pos`` is the write position: one shared scalar for a
+    static batch, or a (B,) vector with ``per_slot_pos`` (continuous
+    batching: every slot appends and masks at its own length)."""
     kv_dtype = dtype or cfg.cache_dtype or cfg.dtype
     ssm_dtype = dtype or cfg.dtype        # conv/state stay wide (tiny, and
     specs = cfg.period_specs()            # fp8 breaks the conv concat)
@@ -577,7 +579,9 @@ def init_caches(cfg: LMConfig, batch: int, max_len: int, *,
     period = {str(i): one_layer(s) for i, s in enumerate(specs)}
     stacked = jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), period)
-    return {"pos": jnp.zeros((), jnp.int32), "periods": stacked}
+    pos = (jnp.zeros((batch,), jnp.int32) if per_slot_pos
+           else jnp.zeros((), jnp.int32))
+    return {"pos": pos, "periods": stacked}
 
 
 def _decode_layer(p, x, pc, cfg: LMConfig, spec: LayerSpec, pos,
@@ -616,7 +620,9 @@ def forward_decode(params, tokens, caches, cfg: LMConfig, *,
                    sharder: Optional[Sharder] = None, backend: str = "ref"):
     """tokens: (B, 1) -> (logits (B, 1, V), new caches).  The KV caches stay
     *sequence-sharded* over the model axis (DSP decode): the softmax over the
-    sharded KV length lowers to small psum collectives."""
+    sharded KV length lowers to small psum collectives.  ``caches['pos']``
+    may be a scalar (static batch) or a (B,) per-slot vector (continuous
+    batching): each row then appends and masks at its own offset."""
     sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
     specs = cfg.period_specs()
     pos = caches["pos"]

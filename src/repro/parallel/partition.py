@@ -368,6 +368,74 @@ class Sharder:
         return self._c(x, "__dp__", None, None)
 
 
+# ---------------------------------------------------------------------------
+# Decode-cache / slot-pool layout
+#
+# The serving stack (serving/engine.py, serving/kv_pool.py) stores KV and SSM
+# state stacked per scan period; these helpers are the ONE definition of how
+# that pytree lands on a mesh.  In DSP mode the KV *sequence* dim is sharded
+# over the model axis — every slot of the pool holds the same fraction of its
+# history on every device, which is exactly why slots can be allocated and
+# retired per-request without any resharding (the continuous-batching
+# invariant).  The slot (batch) dim shards over ``data`` when it divides.
+# ---------------------------------------------------------------------------
+
+KV_SEQ_DIM = 3          # (periods, slots, Hkv, S, D): the sequence axis
+SLOT_DIM = 1            # (periods, slots, ...): the slot/batch axis
+
+
+def is_kv_leaf(path, leaf) -> bool:
+    """The ONE definition of 'this cache leaf is a stacked KV tensor' —
+    shared by cache_pspecs, the sharding assert, and the prefill widener so
+    a cache-layout change cannot silently desynchronise them."""
+    keys = [str(getattr(k, "key", "")) for k in path]
+    return ("k" in keys or "v" in keys) and getattr(leaf, "ndim", 0) == 5
+
+
+def cache_pspecs(caches, plan: ParallelPlan):
+    """PartitionSpec tree for a cache/pool pytree: KV sharded along the
+    sequence dim (DSP decode); SSM state sharded along heads; conv/pos
+    replicated.  The same rule covers a single static-batch cache and the
+    slot pool (slots are just the batch dim) — including the pool's per-slot
+    ``pos`` vector, which stays replicated (every device masks every slot
+    identically)."""
+
+    def rule(path, leaf):
+        keys = [str(getattr(k, "key", "")) for k in path]
+        if "k" in keys or "v" in keys:          # KV leaves (see is_kv_leaf)
+            if plan.mode in ("dsp", "tp"):       # seq-sharded KV either way
+                return P(None, "data", None, "model", None)
+            return P(None, "data", None, None, None)
+        if "state" in keys:                      # (periods, B, H, P, S)
+            if plan.mode in ("dsp", "tp"):
+                return P(None, "data", "model", None, None)
+            return P(None, "data", None, None, None)
+        if "conv" in keys:                       # (periods, B, K-1, D)
+            return P(None, "data", None, None)
+        return P()                               # pos (scalar or per-slot)
+
+    return tree_map_with_path(rule, caches)
+
+
+def assert_kv_cache_on_mesh(caches, mesh, plan: ParallelPlan):
+    """Assert every KV leaf of a prefill/decode cache (or slot pool) actually
+    landed sequence-sharded over the mesh's SP axis (the contract
+    ``cache_pspecs`` declares).  Uses ``shard_shape`` so it holds for any
+    concrete sharding type jit produced."""
+    sp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if sp <= 1 or plan.mode not in ("dsp", "tp"):
+        return
+
+    def check(path, leaf):
+        if is_kv_leaf(path, leaf):
+            shard = leaf.sharding.shard_shape(leaf.shape)
+            assert shard[KV_SEQ_DIM] * sp == leaf.shape[KV_SEQ_DIM], (
+                f"KV cache leaf not sequence-sharded over the {sp}-way "
+                f"model axis: global {leaf.shape}, per-device {shard}")
+
+    tree_map_with_path(check, caches)
+
+
 def _stage_dims(plan: ParallelPlan, schedule) -> Tuple[Optional[int],
                                                        Optional[int]]:
     """Planned (resid_dim, mixer_dim) of the logical (B, S, H·Dh) stage view.

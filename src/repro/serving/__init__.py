@@ -1,0 +1,26 @@
+"""Serving subsystem: plan-aware engine + continuous-batching scheduler.
+
+Layers (see docs/architecture.md §5):
+
+* ``engine``    — ``ServingEngine``: the (plan, schedule, sharder) triple,
+  jitted prefill/decode, static-batch ``generate`` (the reference path),
+  elastic ``replan``.
+* ``kv_pool``   — ``KVPool``: ``max_batch`` decode slots carved from the
+  sequence-sharded cache pytree; alloc/free/insert/compact.
+* ``scheduler`` — ``ContinuousScheduler``: FIFO admission, prefill/decode
+  interleaving, per-step retirement, streaming; ``replay_static`` is the
+  instrumented static baseline.
+* ``metrics``   — TTFT/TPOT/queue-wait per request, throughput and slot
+  occupancy per engine, JSON export.
+"""
+from repro.serving.engine import (Request, RequestResult, ServingEngine,
+                                  assert_kv_cache_on_mesh, cache_pspecs)
+from repro.serving.kv_pool import KVPool, PoolExhausted
+from repro.serving.metrics import EngineMetrics, RequestMetrics
+from repro.serving.scheduler import ContinuousScheduler, replay_static
+
+__all__ = [
+    "Request", "RequestResult", "ServingEngine", "assert_kv_cache_on_mesh",
+    "cache_pspecs", "KVPool", "PoolExhausted", "EngineMetrics",
+    "RequestMetrics", "ContinuousScheduler", "replay_static",
+]

@@ -21,6 +21,12 @@ all live sequences step together.  Per-request ``max_new_tokens`` and EOS
 early-exit are handled by masking OUTSIDE the jitted decode step (its
 shapes never change, so no retraces); the loop exits early once every row
 has finished.
+
+``serve(..., continuous=True)`` delegates to the continuous-batching
+subsystem (``serving.scheduler`` + ``serving.kv_pool``): per-request slot
+recycling over the same sequence-sharded cache, FIFO admission, streaming
+callbacks, and TTFT/TPOT metrics.  The static loop stays as the reference
+path and the parity oracle for it.
 """
 from __future__ import annotations
 
@@ -32,67 +38,40 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm as LM
-from repro.parallel.partition import (ParallelPlan, Sharder, make_sharder,
-                                      param_pspecs)
+from repro.parallel.partition import (KV_SEQ_DIM, ParallelPlan, Sharder,
+                                      assert_kv_cache_on_mesh, cache_pspecs,
+                                      is_kv_leaf, make_sharder, param_pspecs)
+from repro.serving.metrics import RequestMetrics
+
+# the cache-layout helpers moved to parallel.partition (the slot pool shares
+# them); the old import path keeps working
+_is_kv_leaf = is_kv_leaf
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """What serving a request produced.  ``tokens`` includes the stop token
+    when the request ended on EOS; ``metrics`` carries the wall-clock
+    breakdown (TTFT/TPOT/queue wait — None for timings the static reference
+    path doesn't measure)."""
+    tokens: List[int]
+    finish_reason: str = ""              # "eos" | "budget"
+    metrics: Optional[RequestMetrics] = None
 
 
 @dataclasses.dataclass
 class Request:
-    prompt: jax.Array            # (S,) int32
+    prompt: jax.Array                    # (S,) int32
     max_new_tokens: int = 16
-    generated: Optional[list] = None
+    eos_id: Optional[int] = None         # per-request stop token
+    arrival_time: float = 0.0            # seconds from run start (replay)
+    request_id: Optional[int] = None
+    result: Optional[RequestResult] = None
 
-
-KV_SEQ_DIM = 3          # (periods, B, Hkv, S, D): the sequence axis
-
-
-def _is_kv_leaf(path, leaf) -> bool:
-    """The ONE definition of 'this cache leaf is a stacked KV tensor' —
-    shared by cache_pspecs, the sharding assert, and the prefill widener so
-    a cache-layout change cannot silently desynchronise them."""
-    keys = [str(getattr(k, "key", "")) for k in path]
-    return ("k" in keys or "v" in keys) and getattr(leaf, "ndim", 0) == 5
-
-
-def cache_pspecs(caches, plan: ParallelPlan):
-    """PartitionSpec tree for a cache pytree: KV sharded along the sequence
-    dim (DSP decode); SSM state sharded along heads; conv/pos replicated."""
-    from jax.sharding import PartitionSpec as P
-
-    def rule(path, leaf):
-        keys = [str(getattr(k, "key", "")) for k in path]
-        if "k" in keys or "v" in keys:          # KV leaves (see _is_kv_leaf)
-            if plan.mode in ("dsp", "tp"):       # seq-sharded KV either way
-                return P(None, "data", None, "model", None)
-            return P(None, "data", None, None, None)
-        if "state" in keys:                      # (periods, B, H, P, S)
-            if plan.mode in ("dsp", "tp"):
-                return P(None, "data", "model", None, None)
-            return P(None, "data", None, None, None)
-        if "conv" in keys:                       # (periods, B, K-1, D)
-            return P(None, "data", None, None)
-        return P()
-
-    return jax.tree_util.tree_map_with_path(rule, caches)
-
-
-def assert_kv_cache_on_mesh(caches, mesh, plan: ParallelPlan):
-    """Assert every KV leaf of a prefill/decode cache actually landed
-    sequence-sharded over the mesh's SP axis (the contract ``cache_pspecs``
-    declares).  Uses ``shard_shape`` so it holds for any concrete sharding
-    type jit produced."""
-    sp = mesh.shape.get("model", 1) if mesh is not None else 1
-    if sp <= 1 or plan.mode not in ("dsp", "tp"):
-        return
-
-    def check(path, leaf):
-        if _is_kv_leaf(path, leaf):
-            shard = leaf.sharding.shard_shape(leaf.shape)
-            assert shard[KV_SEQ_DIM] * sp == leaf.shape[KV_SEQ_DIM], (
-                f"KV cache leaf not sequence-sharded over the {sp}-way "
-                f"model axis: global {leaf.shape}, per-device {shard}")
-
-    jax.tree_util.tree_map_with_path(check, caches)
+    @property
+    def generated(self) -> Optional[List[int]]:
+        """Generated token ids (None until served)."""
+        return None if self.result is None else self.result.tokens
 
 
 def _submesh(n_devices: int, data: int, axis_names=("data", "model")):
@@ -328,21 +307,60 @@ class ServingEngine:
         return jnp.asarray(np.stack(cols, axis=1))
 
     def serve(self, requests: List[Request], *,
-              eos_id: Optional[int] = None, pad_id: int = 0):
-        """Static-batch a list of Requests (equal prompt lengths), honouring
-        each request's ``max_new_tokens``; fills ``Request.generated``."""
+              eos_id: Optional[int] = None, pad_id: int = 0,
+              continuous: bool = False, max_batch: Optional[int] = None,
+              token_budget: Optional[int] = None, stream=None,
+              scheduler=None):
+        """Serve a list of Requests, filling ``Request.result`` on each.
+
+        ``continuous=True`` delegates to the continuous-batching scheduler
+        (``serving.scheduler.ContinuousScheduler``): FIFO admission on
+        arrival times, ``max_batch`` recycled slots, per-token ``stream``
+        callbacks, full latency metrics.  Pass ``scheduler`` to provide the
+        instance (and so keep its pool and metrics across calls, and read
+        ``scheduler.metrics`` afterwards); the filled ``requests`` list is
+        returned either way.
+
+        The default static path is the reference oracle: one lockstep batch
+        (equal prompt lengths required), per-request ``max_new_tokens``
+        honoured by masking.  Continuous serving is token-identical to it
+        for the same request set (tests/test_serving.py pins this).
+        """
+        if continuous:
+            from repro.serving.scheduler import ContinuousScheduler
+            sched = scheduler or ContinuousScheduler(
+                self, max_batch or min(len(requests), 8),
+                token_budget=token_budget)
+            sched.run(requests, stream=stream, eos_id=eos_id)
+            return requests
         lens = {int(r.prompt.shape[0]) for r in requests}
         if len(lens) != 1:
             raise ValueError(f"static batch needs equal prompt lengths, "
                              f"got {sorted(lens)}")
+        # per-request EOS resolves exactly as in continuous mode (own id,
+        # else the default) — the static batch just can't express MIXED
+        # effective ids, so that case is rejected, never silently collapsed
+        eff = {r.eos_id if r.eos_id is not None else eos_id
+               for r in requests}
+        if len(eff) > 1:
+            raise ValueError(
+                f"static batch needs one effective EOS id per batch, got "
+                f"{sorted(eff, key=repr)} (use continuous=True)")
+        eos = eff.pop() if eff else eos_id
         prompts = jnp.stack([r.prompt for r in requests])
         out = self.generate(prompts,
                             [r.max_new_tokens for r in requests],
-                            eos_id=eos_id, pad_id=pad_id)
+                            eos_id=eos, pad_id=pad_id)
         arr = np.asarray(out)
         for i, r in enumerate(requests):
             row = arr[i, :r.max_new_tokens]
-            if eos_id is not None and (row == eos_id).any():
-                row = row[:int(np.argmax(row == eos_id)) + 1]
-            r.generated = row.tolist()
+            reason = "budget"
+            if eos is not None and (row == eos).any():
+                row = row[:int(np.argmax(row == eos)) + 1]
+                reason = "eos"
+            if stream is not None:
+                for t in row.tolist():
+                    stream(r, int(t))
+            r.result = RequestResult(tokens=row.tolist(),
+                                     finish_reason=reason)
         return requests

@@ -1,0 +1,203 @@
+"""Slot-based KV/state pool for continuous batching.
+
+The pool is the existing sequence-sharded decode cache pytree
+(``models.lm.init_caches``) re-read as ``max_batch`` independent *slots*:
+leaf layout ``(periods, slots, ...)`` with the KV sequence dim sharded over
+the mesh's model axis (``parallel.partition.cache_pspecs`` — the same rule
+the static engine uses, so the pool IS the cache, not a copy of it).
+
+Because DSP shards the *sequence* dim, every slot holds the same 1/N slice
+of its own history on every device — slots are symmetric across the mesh,
+so ``alloc``/``free`` are pure host-side bookkeeping and ``insert`` is one
+row-wise ``dynamic_update_slice`` per leaf.  No resharding ever happens at
+request boundaries; that is the property that makes vLLM-style continuous
+batching compose with sequence parallelism (an Ulysses-style head-sharded
+cache would tie slot geometry to the kv-head count instead).
+
+Shapes never change: the pool is allocated once at ``(max_batch, max_len)``
+and the jitted ``insert`` / decode steps are compiled once.  ``pos`` is a
+per-slot ``(max_batch,)`` vector — each slot appends and masks at its own
+length (see ``models.attention``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm as LM
+from repro.parallel.partition import (ParallelPlan, SLOT_DIM,
+                                      assert_kv_cache_on_mesh, cache_pspecs)
+
+
+class PoolExhausted(Exception):
+    """Raised by ``alloc`` when no slot (or token budget) is available —
+    the scheduler catches it and leaves the request queued."""
+
+
+class KVPool:
+    """``max_batch`` decode slots carved from one sequence-sharded cache.
+
+    ``token_budget`` caps the sum of committed tokens (prompt + decode
+    budget) across live slots — the admission test models KV memory
+    pressure; it defaults to the pool's physical capacity
+    ``max_batch * max_len``, i.e. no extra constraint.
+    """
+
+    def __init__(self, cfg, max_batch: int, max_len: int, *, mesh=None,
+                 plan: Optional[ParallelPlan] = None,
+                 token_budget: Optional[int] = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.plan = plan or ParallelPlan(mode="none")
+        self.mesh = mesh
+        self.token_budget = (token_budget if token_budget is not None
+                             else max_batch * max_len)
+        caches = LM.init_caches(cfg, max_batch, max_len, per_slot_pos=True)
+        self.caches = self._place(caches)
+        # host-side bookkeeping: free slots (LIFO keeps reuse visible in
+        # tests), per-slot committed tokens + current lengths
+        self._free: List[int] = list(range(max_batch - 1, -1, -1))
+        self._committed = np.zeros((max_batch,), np.int64)
+        self.lengths = np.zeros((max_batch,), np.int64)
+        self.peak_committed = 0
+        self._write = None           # jitted insert, built lazily per mesh
+
+    # -- placement -----------------------------------------------------------
+
+    def _place(self, caches):
+        if self.mesh is None:
+            return caches
+        from jax.sharding import NamedSharding
+        specs = cache_pspecs(caches, self.plan)
+        return jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
+            caches, specs)
+
+    def migrate(self, mesh, plan: ParallelPlan):
+        """Elastic resize: move the pool (live slots included) onto a new
+        mesh.  Sequence-resharding is one all-to-all per leaf under the
+        hood; slot bookkeeping is untouched — slots stay symmetric on the
+        resized mesh, which is what makes drain-free migration possible."""
+        self.mesh = mesh
+        self.plan = plan
+        if mesh is None:             # downsize to the single default device
+            self.caches = jax.device_put(self.caches)
+        else:
+            self.caches = self._place(self.caches)
+        self._write = None           # re-jit against the new placement
+        return self
+
+    def assert_on_mesh(self):
+        """The serving contract: every KV leaf sequence-sharded on the SP
+        axis (no-op off-mesh)."""
+        assert_kv_cache_on_mesh(self.caches["periods"], self.mesh, self.plan)
+
+    # -- admission / bookkeeping ----------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def committed_tokens(self) -> int:
+        return int(self._committed.sum())
+
+    def occupancy(self) -> float:
+        return 1.0 - self.n_free / self.max_batch
+
+    def active_slots(self) -> List[int]:
+        free = set(self._free)
+        return [s for s in range(self.max_batch) if s not in free]
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Admission test: a free slot exists, the request fits a slot, and
+        its committed tokens fit the pool budget."""
+        if n_tokens > self.max_len:
+            raise ValueError(f"request needs {n_tokens} tokens but slots "
+                             f"hold max_len={self.max_len}")
+        return (self.n_free > 0
+                and self.committed_tokens + n_tokens <= self.token_budget)
+
+    def alloc(self, n_tokens: int) -> int:
+        if not self.can_admit(n_tokens):
+            raise PoolExhausted(
+                f"no capacity: free={self.n_free}, committed="
+                f"{self.committed_tokens}+{n_tokens} > {self.token_budget}")
+        slot = self._free.pop()
+        self._committed[slot] = n_tokens
+        self.peak_committed = max(self.peak_committed, self.committed_tokens)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot in self._free:
+            raise ValueError(f"slot {slot} already free")
+        self._committed[slot] = 0
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    # -- device-side slot writes ----------------------------------------------
+
+    def insert(self, slot: int, prefill_caches: Dict, length: int):
+        """Write one prefilled request (batch dim 1, KV widened to
+        ``max_len`` — the engine's prefill does both) into ``slot`` and set
+        its ``pos`` to ``length``.  One jit compile total: slot and length
+        are traced scalars, shapes are static."""
+        if self._write is None:
+            self._write = self._build_write()
+        self.caches = self._write(self.caches, prefill_caches["periods"],
+                                  jnp.asarray(slot, jnp.int32),
+                                  jnp.asarray(length, jnp.int32))
+        self.lengths[slot] = length
+        return self.caches
+
+    def _build_write(self):
+        mesh, plan = self.mesh, self.plan
+
+        def write(pool, row, slot, length):
+            def upd(dst, src):
+                start = (0, slot) + (0,) * (dst.ndim - 2)
+                return jax.lax.dynamic_update_slice(
+                    dst, src.astype(dst.dtype), start)
+
+            periods = jax.tree_util.tree_map(upd, pool["periods"], row)
+            if mesh is not None:
+                from jax.sharding import NamedSharding
+                specs = cache_pspecs(periods, plan)
+                periods = jax.tree_util.tree_map(
+                    lambda a, s: jax.lax.with_sharding_constraint(
+                        a, NamedSharding(mesh, s)),
+                    periods, specs)
+            return {"pos": pool["pos"].at[slot].set(length),
+                    "periods": periods}
+
+        # donate the pool: insert overwrites one slot row in place instead
+        # of copying the whole cache per admission
+        return jax.jit(write, donate_argnums=(0,))
+
+    def compact(self) -> Dict[int, int]:
+        """Pack live slots to the front of the pool (one gather along the
+        slot dim per leaf) and renumber the free list.  Returns the
+        {old_slot: new_slot} mapping for the scheduler to rewrite its slot
+        table.  Useful before shrinking ``max_batch`` or for locality after
+        a churny trace; correctness never requires it."""
+        live = self.active_slots()
+        perm = live + [s for s in range(self.max_batch) if s not in live]
+        mapping = {old: new for new, old in enumerate(perm)}
+        if all(mapping[s] == s for s in live):
+            return {s: s for s in live}
+        idx = jnp.asarray(perm)
+        periods = jax.tree_util.tree_map(
+            lambda a: jnp.take(a, idx, axis=SLOT_DIM),
+            self.caches["periods"])
+        pos = jnp.take(self.caches["pos"], idx)
+        self.caches = self._place({"pos": pos, "periods": periods})
+        self._committed = self._committed[perm]
+        self.lengths = self.lengths[perm]
+        self._free = list(range(self.max_batch - 1, len(live) - 1, -1))
+        return {old: mapping[old] for old in live}
