@@ -10,10 +10,22 @@ schedule executor use (``repro.core.dsp.comm_volume_bytes``: switch = M/N,
 gather = M); for DSP the script additionally reports the PLANNED volume from
 the model's own solved schedule (``transformer2d.dsp_schedule``) next to the
 measured HLO bytes — planned-vs-measured is the executor's contract — and
-the planned training ROUND TRIP: forward and backward legs priced
-separately (the backward is planned by the joint DP, not assumed to mirror
-the forward; see docs/architecture.md §2.4).
+the planned training ROUND TRIP: forward and backward legs priced separately
+(the backward is planned by the joint DP, not assumed to mirror the
+forward; see docs/architecture.md §2.4).
+
+Since PR 5 the scanned LM/enc-dec executors RUN non-mirrored joint plans
+(per-period custom_vjp boundaries), so the script also reports the
+EXECUTED scanned round trip — the joint schedule the scanned-LM train step
+compiles, priced per leg on the flat-ICI and ICIxDCN fabrics, with the
+executed per-leg collective counts from the executor's own accounting.
+
+Everything lands in ``BENCH_comm.json`` at the repo root (planned vs
+measured bytes/seconds per mode and fabric) so the trajectory is tracked
+across PRs; CI smokes the schema with ``--quick`` (dsp-only measurement).
 """
+import argparse
+import json
 import os
 import sys
 
@@ -26,6 +38,7 @@ from repro.core.dsp import comm_volume_bytes
 
 N = 8
 LAYERS = 4          # 2 layer-pairs
+MODES = ["dsp", "ulysses", "ulysses_fused", "ring", "megatron"]
 
 
 def analytic_bytes(mode: str, m_bytes: float, n: int) -> float:
@@ -39,17 +52,49 @@ def analytic_bytes(mode: str, m_bytes: float, n: int) -> float:
             "ring": 2 * gather}[mode]      # K+V rotate a full M each
 
 
-def main():
+def _fabrics():
+    from repro.core.topology import Topology
+    return (("ici", Topology.flat_ici(N)),
+            ("ici_dcn", Topology.multihost(2, N // 2)))
+
+
+def _leg_seconds(sched) -> dict:
+    out = {}
+    for label, topo in _fabrics():
+        rs = sched.roundtrip_seconds(topo)
+        out[label] = {"fwd_seconds": rs.fwd, "bwd_seconds": rs.bwd,
+                      "roundtrip_seconds": rs.total,
+                      "bottleneck_gbps": topo.bottleneck_bandwidth / 1e9}
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="measure only the dsp mode (CI schema smoke)")
+    ap.add_argument("--out", default=os.path.join(_ROOT, "BENCH_comm.json"))
+    args = ap.parse_args(argv)
+
     b, t, s, d = 2, 16, 32, 128
     m_bytes = b * t * s * d * 4          # f32 activation size
     pairs = LAYERS // 2
+    record = {"config": {"devices": N, "layers": LAYERS, "batch": b,
+                         "temporal": t, "spatial": s, "d_model": d},
+              "modes": {}}
     rows = {}
-    for mode in ["dsp", "ulysses", "ulysses_fused", "ring", "megatron"]:
+    modes = ["dsp"] if args.quick else MODES
+    for mode in modes:
         r = spmd_measure(N, mode, batch=b, temporal=t, spatial=s,
                          layers=LAYERS, d_model=d, modulate=False)
         per_layer = r["collective_bytes_per_dev"] / pairs
         rows[mode] = per_layer
         pred = analytic_bytes(mode, m_bytes, N)
+        record["modes"][mode] = {
+            "measured_bytes_per_layer": per_layer,
+            "analytic_bytes_per_layer": pred,
+            "ratio": per_layer / max(pred, 1),
+            "counts": r["by_kind_count"],
+        }
         emit(f"table3/comm_volume/{mode}", None,
              f"measured_bytes_per_layer={per_layer:.0f};"
              f"analytic={pred:.0f};ratio={per_layer/max(pred, 1):.2f};"
@@ -73,9 +118,7 @@ def main():
     # modeled fabrics (flat ICI ring vs the SP group spanning 2 hosts over
     # DCN) — bytes are identical, time is not, which is exactly why the
     # planner optimises seconds on a Topology
-    from repro.core.topology import Topology
-    for label, topo in (("ici", Topology.flat_ici(N)),
-                        ("ici_dcn", Topology.multihost(2, N // 2))):
+    for label, topo in _fabrics():
         secs = psched.schedule.per_device_seconds(topo)
         emit(f"table3/planned_seconds/{label}", None,
              f"planned_bytes={planned_total:.0f};"
@@ -93,19 +136,76 @@ def main():
          f"fwd_bytes={rb.fwd:.0f};bwd_bytes={rb.bwd:.0f};"
          f"total={rb.total:.0f};bwd_mirrored={jsched.mirrored}")
     assert jsched.mirrored and rb.bwd == rb.fwd
-    for label, topo in (("ici", Topology.flat_ici(N)),
-                        ("ici_dcn", Topology.multihost(2, N // 2))):
-        rs = jsched.roundtrip_seconds(topo)
+    t2d_fabrics = _leg_seconds(jsched)
+    for label, legs in t2d_fabrics.items():
         emit(f"table3/planned_roundtrip/{label}", None,
-             f"fwd_seconds={rs.fwd:.3e};bwd_seconds={rs.bwd:.3e};"
-             f"roundtrip_seconds={rs.total:.3e}")
+             f"fwd_seconds={legs['fwd_seconds']:.3e};"
+             f"bwd_seconds={legs['bwd_seconds']:.3e};"
+             f"roundtrip_seconds={legs['roundtrip_seconds']:.3e}")
+    record["dsp"] = {
+        "planned_bytes": planned_total,
+        "measured_bytes": measured_total,
+        "planned_switches": psched.schedule.n_switches(),
+        "roundtrip": {"fwd_bytes": rb.fwd, "bwd_bytes": rb.bwd,
+                      "total_bytes": rb.total,
+                      "bwd_mirrored": jsched.mirrored},
+        "fabrics": t2d_fabrics,
+    }
 
-    # the paper's headline ordering must hold in the measured HLO
-    assert rows["dsp"] < rows["ulysses"] < rows["megatron"]
-    assert rows["dsp"] < rows["ring"]
-    emit("table3/ordering", None,
-         f"dsp<ulysses<megatron and dsp<ring confirmed;"
-         f"dsp_vs_ulysses_reduction={1 - rows['dsp']/rows['ulysses']:.2%}")
+    # the EXECUTED scanned round trip (PR 5): the joint schedule the
+    # scanned-LM train step actually compiles — the scanned executors run
+    # non-mirrored plans through per-period custom_vjp boundaries, so the
+    # schedule priced below IS the schedule the train step executes (one
+    # object; identity pinned by tests/test_hlo_collectives.py).  The
+    # per-leg collective counts are the executor-structure ACCOUNTING
+    # (exact for the executor path — t2d/synthetic scan — by the HLO tier;
+    # the LM's hook path lowers the fused QKV switch as multiple smaller
+    # all-to-alls, so its instruction counts differ even though the moved
+    # bytes match), reported on both fabrics
+    from repro.core.layout import from_mesh
+    from repro.core.compat import make_mesh
+    from repro.core.schedule import ScheduleExecutor
+    from repro.models.lm import (LMConfig, dsp_schedule as lm_schedule,
+                                 stage_period)
+    lcfg = LMConfig(name="bench", n_layers=LAYERS, d_model=d, n_heads=8,
+                    n_kv_heads=8, head_dim=d // 8, d_ff=2 * d, vocab=256,
+                    dtype=jnp.float32)
+    lsched = lm_schedule(lcfg, N, seq=t * s, batch=b, joint=True)
+    lrb = lsched.roundtrip_bytes(N)
+    ex = ScheduleExecutor(lsched.periodic(stage_period(lcfg)),
+                          backend="auto",
+                          ctx=from_mesh(make_mesh((1, 1),
+                                                  ("data", "model"))))
+    lm_fabrics = _leg_seconds(lsched)
+    record["scanned_lm"] = {
+        "planned_fwd_bytes": lrb.fwd,
+        "planned_bwd_bytes": lrb.bwd,
+        "bwd_mirrored": lsched.mirrored,
+        "executed_bwd_dims_period": list(
+            lsched.bwd_plan[:stage_period(lcfg)]),
+        "accounted_fwd_collectives": ex.expected_collectives(lcfg.n_layers),
+        "accounted_bwd_collectives": ex.expected_bwd_collectives(
+            lcfg.n_layers),
+        "fabrics": lm_fabrics,
+    }
+    for label, legs in lm_fabrics.items():
+        emit(f"table3/scanned_roundtrip/{label}", None,
+             f"fwd_seconds={legs['fwd_seconds']:.3e};"
+             f"bwd_seconds={legs['bwd_seconds']:.3e};"
+             f"roundtrip_seconds={legs['roundtrip_seconds']:.3e};"
+             f"bwd_mirrored={lsched.mirrored}")
+
+    if not args.quick:
+        # the paper's headline ordering must hold in the measured HLO
+        assert rows["dsp"] < rows["ulysses"] < rows["megatron"]
+        assert rows["dsp"] < rows["ring"]
+        emit("table3/ordering", None,
+             f"dsp<ulysses<megatron and dsp<ring confirmed;"
+             f"dsp_vs_ulysses_reduction={1 - rows['dsp']/rows['ulysses']:.2%}")
+
+    with open(args.out, "w") as fh:
+        json.dump(record, fh, indent=1)
+    emit("table3/json", None, f"wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -35,6 +35,19 @@ autodiff transposition of the forward plan (the mirrored default, which
 explicit shard_map backend only supports the mirrored backward: local
 array shapes pin each cotangent to its primal's layout.
 
+Planned backwards compose with ``jax.lax.scan``: a scan-periodic schedule
+with distinct ``bwd_dims`` (``Schedule.periodic`` validates the backward
+leg's periodicity too) lowers to per-period ``custom_vjp`` boundary
+constraints INSIDE the scanned layer loop.  The while body then carries
+the cotangent in the steady-state layout ``bwd_dims[period-1]`` (the wrap
+anchor pins it — see ``PeriodicSchedule.bwd_wrap``); the *seam* reshard —
+cotangent creation at the loss boundary in the ``final`` layout — lands
+ONCE, on the backward loop's carry init outside the body, and the input
+gradient's return to ``initial`` lands once after the loop.
+``ScheduleExecutor.expected_bwd_collectives`` accounts exactly this
+executed structure (what the compiled HLO must show), next to
+``Schedule.bwd_transitions`` which prices the unrolled leg.
+
 Models declare ``stages(cfg)`` and consume an executor; they never call
 ``dynamic_switch`` or issue stage-boundary sharding constraints themselves.
 The executor walk-through lives in docs/architecture.md §3.
@@ -261,6 +274,50 @@ class PeriodicSchedule:
         return classify(self.dims[0], final if final is not None
                         else self.dims[0])
 
+    # -- planned backward (scan-body view) -----------------------------------
+    @property
+    def bwd_dims(self) -> Tuple[int, ...]:
+        """Per-period backward layouts (the fwd dims when mirrored);
+        ``Schedule.periodic`` validated the full backward plan repeats with
+        the period, so this prefix IS the steady state."""
+        return self.schedule.bwd_plan[:self.period]
+
+    def bwd_seam(self) -> Transition:
+        """Cotangent creation at the loss boundary: lands ONCE on the
+        backward scan's carry init (outside the while body)."""
+        return self.schedule.bwd_seam()
+
+    def bwd_boundary(self, i: int) -> Transition:
+        """Cotangent crossing in-period boundary ``i`` backward
+        (1 <= i < period): the transpose of ``boundary(i)``'s constraint,
+        re-laid-out to the planned backward dims."""
+        assert 1 <= i < self.period, i
+        bwd = self.bwd_dims
+        return classify(bwd[i], bwd[i - 1])
+
+    def bwd_wrap(self) -> Transition:
+        """Cotangent leaving the period toward the previous one: the scan
+        carry's backward anchor.  The body emits this every iteration, so a
+        steady-state plan wants it to be a keep (class-uniform plans with a
+        resid-class first and last stage make it one for free)."""
+        bwd = self.bwd_dims
+        return classify(bwd[0], bwd[-1])
+
+    def bwd_carry_init(self) -> Transition:
+        """Reshard of the seam-laid-out cotangent into the backward loop's
+        steady-state carry layout (``bwd_dims[0]`` for a stage-0-anchored
+        body); lands once, outside the while body, right after the seam."""
+        bwd = self.bwd_dims
+        return classify(bwd[-1], bwd[0])
+
+    def bwd_enter(self) -> Transition:
+        """Input gradient leaving the scan for the ``initial`` layout (the
+        dataloader split owns both ends); lands once, after the loop.  A
+        stage-0-anchored body exits the carry in ``bwd_dims[0]``."""
+        initial = self.schedule.initial
+        bwd = self.bwd_dims
+        return classify(bwd[0], initial if initial is not None else bwd[0])
+
 
 @dataclasses.dataclass(frozen=True)
 class UnrolledSchedule:
@@ -345,13 +402,19 @@ def plan_joint_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
 # Executor
 # ---------------------------------------------------------------------------
 
-def _planned_constraint(x, fwd_sharding, bwd_sharding):
+def planned_constraint(x, fwd_sharding, bwd_sharding):
     """Sharding constraint with a PLANNED transpose: the forward constrains
     to ``fwd_sharding``; the backward constrains the cotangent to
     ``bwd_sharding`` instead of the autodiff transpose (which would mirror
     the forward layout).  Both ops are mathematically the identity — only
     the SPMD layout, and hence which collectives XLA emits on each pass,
-    changes; gradient values are bitwise-tolerably unchanged."""
+    changes; gradient values are bitwise-tolerably unchanged.
+
+    This is the ONE planned-backward lowering, shared by the
+    ``ScheduleExecutor`` boundary path (t2d) and the ``Sharder`` hook path
+    (scanned lm/encdec — ``parallel.partition``): emitted inside a scan
+    body it becomes the per-period custom_vjp that lets a non-mirrored
+    joint plan run under ``jax.lax.scan``."""
     import jax
 
     @jax.custom_vjp
@@ -366,6 +429,10 @@ def _planned_constraint(x, fwd_sharding, bwd_sharding):
 
     constrain.defvjp(fwd_rule, bwd_rule)
     return constrain(x)
+
+
+# executor-internal alias (kept monkeypatchable by tests)
+_planned_constraint = planned_constraint
 
 
 class ScheduleExecutor:
@@ -564,9 +631,58 @@ class ScheduleExecutor:
         add(self.psched.exit())
         return counts
 
+    def expected_bwd_collectives(self, n_periods: int = 1) -> Dict[str, int]:
+        """Collective counts of the EXECUTED backward leg (auto backend).
+
+        Mirrored schedules transpose the forward constraints, so the leg
+        mirrors ``expected_collectives`` (exact for well-formed bodies —
+        stage-0 anchored, ``initial == final == dims[0]`` — which every
+        scanned model in this repo is).  With a planned backward:
+
+        * periodic (scanned) — the loss cotangent pays the SEAM
+          (``final -> bwd[-1]``) and the carry-init reshard into the
+          steady-state loop layout (``bwd[-1] -> bwd[0]``; a keep when the
+          period's first and last backward layouts agree, e.g. class-uniform
+          plans whose period starts and ends on a resid-class stage) ONCE,
+          outside the while body; each body iteration emits the reversed
+          in-period boundaries plus the wrap transition; the input gradient
+          returns to ``initial`` once, after the loop;
+        * unrolled — seam + every reversed absolute boundary + the input
+          gradient's entry transition (``Schedule.bwd_transitions``).
+
+        tests/test_hlo_collectives.py and tests/test_scan_joint.py compare
+        THIS count against the compiled train-step HLO, leg by leg.
+        """
+        if self.backend == "null":
+            return {}
+        counts: Dict[str, int] = {}
+
+        def add(tr):
+            c = tr.collective
+            if c is not None:
+                counts[c] = counts.get(c, 0) + 1
+
+        sched = self.psched.schedule
+        if sched.mirrored:
+            # autodiff transposes each forward constraint: same counts
+            return self.expected_collectives(n_periods)
+        if self.unrolled:
+            for tr in sched.bwd_transitions():
+                add(tr)
+            return counts
+        ps = self.psched
+        add(ps.bwd_seam())                       # final -> bwd[-1], once
+        add(ps.bwd_carry_init())                 # into the loop carry, once
+        for _ in range(n_periods):
+            for i in range(ps.period - 1, 0, -1):
+                add(ps.bwd_boundary(i))
+            add(ps.bwd_wrap())
+        add(ps.bwd_enter())                      # input grad -> initial, once
+        return counts
+
 
 __all__ = [
     "Transition", "classify", "Schedule", "PeriodicSchedule",
     "UnrolledSchedule", "plan_schedule", "plan_joint_schedule",
-    "ScheduleExecutor", "COLLECTIVE_OF",
+    "ScheduleExecutor", "planned_constraint", "COLLECTIVE_OF",
 ]

@@ -105,10 +105,15 @@ def compile_cell(spec, shape, mesh, **kw):
 
 
 def run_cell(arch: str, shape: str, *, multi_pod: bool, depth_extras: bool,
-             hlo_path=None, **kw):
+             hlo_path=None, topology: str = None, **kw):
     spec = get(arch)
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = 512 if multi_pod else 256
+    if topology is not None:
+        # named preset or profile:<path> (Topology.from_profile): the fitted
+        # fabric prices every plan and is recorded in the cell meta
+        from repro.launch.mesh import resolve_topology
+        kw["topology"] = resolve_topology(topology, mesh.shape["model"])
 
     cell, compiled, times = compile_cell(spec, shape, mesh, **kw)
     mem = compiled.memory_analysis()
@@ -187,6 +192,12 @@ def main():
     ap.add_argument("--list", action="store_true")
     ap.add_argument("--out", default=RESULTS_DIR)
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--topology", default=None,
+                    help="fabric the planner prices on: ici|torus|ici_dcn|"
+                         "uniform or profile:<path> (a JSON list of "
+                         "[global_bytes, seconds] all-gather samples fitted "
+                         "by Topology.from_profile); default flat ICI.  The "
+                         "fitted fabric is recorded in each cell meta")
     args = ap.parse_args()
 
     if args.list:
@@ -209,6 +220,7 @@ def main():
         try:
             rec = run_cell(arch, shape, multi_pod=args.multi_pod,
                            depth_extras=not args.no_depth,
+                           topology=args.topology,
                            hlo_path=path.replace(".json", ".hlo.gz"))
             with open(path, "w") as fh:
                 json.dump(rec, fh, indent=1)

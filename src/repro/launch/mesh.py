@@ -78,3 +78,32 @@ def topology_preset(kind: str, sp: int, *,
         return Topology.multihost(hosts, sp // hosts)
     raise ValueError(f"unknown topology kind {kind!r} "
                      "(want ici|torus|ici_dcn|uniform)")
+
+
+def resolve_topology(kind: str, sp: int, *,
+                     n_hosts: Optional[int] = None) -> Topology:
+    """Named preset, or ``profile:<path>`` — a JSON file of
+    ``[[global_bytes, seconds], ...]`` all-gather samples fitted by
+    ``Topology.from_profile`` so a MEASURED fabric prices the plan.  Shared
+    by the serve driver (``--topology``) and the dry-run
+    (``launch/dryrun.py --topology``, which records the fitted fabric in
+    the cell metas)."""
+    if kind.startswith("profile:"):
+        import json
+        with open(kind[len("profile:"):]) as f:
+            samples = [tuple(s) for s in json.load(f)]
+        return Topology.from_profile(sp, samples)
+    return topology_preset(kind, sp, n_hosts=n_hosts)
+
+
+def topology_meta(topo: Optional[Topology]) -> dict:
+    """The fabric facts a meta/metrics JSON records for a Topology: the
+    per-link model the planner priced on."""
+    if topo is None:
+        return {"topology": None}
+    return {
+        "topology": [{"name": a.name, "size": a.size,
+                      "bandwidth_gbps": a.bandwidth / 1e9,
+                      "latency_s": a.latency} for a in topo.axes],
+        "bottleneck_bandwidth_gbps": topo.bottleneck_bandwidth / 1e9,
+    }

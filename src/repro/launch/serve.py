@@ -35,32 +35,19 @@ def _topology_arg(val: str) -> str:
 
 
 def resolve_topology(kind: str, sp: int, *, n_hosts=None):
-    """Named preset, or ``profile:<path>`` — a JSON file of
-    ``[[global_bytes, seconds], ...]`` all-gather samples fitted by
-    ``Topology.from_profile`` so a MEASURED fabric prices the serving
-    plan."""
-    if kind.startswith("profile:"):
-        import json
-        from repro.core.topology import Topology
-        with open(kind[len("profile:"):]) as f:
-            samples = [tuple(s) for s in json.load(f)]
-        return Topology.from_profile(sp, samples)
-    from repro.launch.mesh import topology_preset
-    return topology_preset(kind, sp, n_hosts=n_hosts)
+    """Named preset, or ``profile:<path>`` (``Topology.from_profile``) —
+    now shared with the dry-run; the ONE resolver lives in
+    ``launch/mesh.py``."""
+    from repro.launch.mesh import resolve_topology as _resolve
+    return _resolve(kind, sp, n_hosts=n_hosts)
 
 
 def topology_facts(topo, schedule) -> dict:
-    """The fabric facts the metrics JSON records: per-link model + what the
-    planner priced on it."""
-    if topo is None:
-        return {"topology": None}
-    out = {
-        "topology": [{"name": a.name, "size": a.size,
-                      "bandwidth_gbps": a.bandwidth / 1e9,
-                      "latency_s": a.latency} for a in topo.axes],
-        "bottleneck_bandwidth_gbps": topo.bottleneck_bandwidth / 1e9,
-    }
-    if schedule is not None:
+    """The fabric facts the metrics JSON records: per-link model
+    (``launch.mesh.topology_meta``) + what the planner priced on it."""
+    from repro.launch.mesh import topology_meta
+    out = topology_meta(topo)
+    if topo is not None and schedule is not None:
         out["planned_switches"] = schedule.n_switches()
         out["planned_seconds_per_step"] = schedule.per_device_seconds()
     return out

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchSpec
-from repro.launch.mesh import mesh_topology
+from repro.launch.mesh import mesh_topology, topology_meta
 from repro.models import lm as LM
 from repro.models import encdec as ED
 from repro.models import transformer2d as T2D
@@ -82,11 +82,19 @@ def _metric_specs(mesh):
 def _record_roundtrip(meta: Dict[str, Any], schedule, sp: int) -> None:
     """Record the planned fwd+bwd communication of a TRAIN cell separately:
     the backward is a first-class planned leg, not the transposed forward —
-    ``bwd_mirrored`` says whether the joint DP kept the mirrored default."""
+    ``bwd_mirrored`` says whether the joint DP kept the mirrored default.
+    The SAME schedule object is handed to the sharder the step executes
+    through (scanned models run non-mirrored plans via per-period
+    custom_vjp boundaries since PR 5), so what these fields price IS what
+    the compiled step runs — ``executed_bwd_dims`` pins that identity."""
     rb = schedule.roundtrip_bytes(sp)
     meta["planned_fwd_bytes"] = rb.fwd
     meta["planned_bwd_bytes"] = rb.bwd
     meta["bwd_mirrored"] = schedule.mirrored
+    meta["planned_bwd_switches"] = sum(
+        1 for tr in schedule.bwd_transitions() if tr.kind == "switch")
+    # executed == priced: the backward layouts the executor will constrain
+    meta["executed_bwd_dims"] = list(schedule.bwd_plan)
     if schedule.topology is not None:
         rs = schedule.roundtrip_seconds()
         meta["planned_fwd_seconds"] = rs.fwd
@@ -128,7 +136,7 @@ def build_lm_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
                   opt_cfg: Optional[OptConfig] = None,
                   fused_switch: bool = True,
                   remat: bool = True, remat_policy: str = "full",
-                  grad_barrier: bool = False) -> Cell:
+                  grad_barrier: bool = False, topology=None) -> Cell:
     cfg, plan = spec.config, spec.plan
     shp = spec.shapes()[shape_name]
     seq, batch, kind = shp["seq"], shp["batch"], shp["step"]
@@ -139,14 +147,17 @@ def build_lm_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
         # planned switching schedule: single source of truth for every
         # stage-boundary layout in the model forward.  Train cells plan the
         # BACKWARD pass as its own stage graph (joint round-trip DP); the
-        # metas price the two legs separately.
+        # metas price the two legs separately.  ``topology`` overrides the
+        # default flat-ICI model (dry-run --topology, incl. profile: fits).
         sp = mesh.shape.get("model", 1)
-        topo = mesh_topology(mesh, "ici")
+        topo = topology if topology is not None else mesh_topology(mesh,
+                                                                   "ici")
         schedule = LM.dsp_schedule(cfg, sp, seq=seq, batch=batch,
                                    topology=topo, joint=(kind == "train"))
         meta["planned_switches"] = schedule.n_switches()
         meta["planned_comm_bytes"] = schedule.per_device_bytes(sp)
         meta["planned_comm_seconds"] = schedule.per_device_seconds()
+        meta.update(topology_meta(topo))
         if kind == "train":
             _record_roundtrip(meta, schedule, sp)
     sharder = make_sharder(mesh, plan, schedule=schedule)
@@ -267,7 +278,8 @@ def build_lm_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
 
 def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
                       opt_cfg: Optional[OptConfig] = None,
-                      fused_switch: bool = True, remat: bool = True) -> Cell:
+                      fused_switch: bool = True, remat: bool = True,
+                      topology=None) -> Cell:
     cfg, plan = spec.config, spec.plan
     shp = spec.shapes()[shape_name]
     seq, batch, kind = shp["seq"], shp["batch"], shp["step"]
@@ -277,13 +289,15 @@ def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
     schedule = None
     if plan.mode == "dsp":
         sp = mesh.shape.get("model", 1)
+        topo = topology if topology is not None else mesh_topology(mesh,
+                                                                   "ici")
         schedule = ED.dsp_schedule(cfg, sp, s_enc=seq, s_dec=s_dec,
-                                   batch=batch,
-                                   topology=mesh_topology(mesh, "ici"),
+                                   batch=batch, topology=topo,
                                    joint=(kind == "train"))
         meta["planned_switches"] = schedule.n_switches()
         meta["planned_comm_bytes"] = schedule.per_device_bytes(sp)
         meta["planned_comm_seconds"] = schedule.per_device_seconds()
+        meta.update(topology_meta(topo))
         if kind == "train":
             _record_roundtrip(meta, schedule, sp)
     sharder = make_sharder(mesh, plan, schedule=schedule)
@@ -363,7 +377,8 @@ def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
 
 def build_t2d_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
                    opt_cfg: Optional[OptConfig] = None,
-                   mode: str = "dsp", remat: bool = True) -> Cell:
+                   mode: str = "dsp", remat: bool = True,
+                   topology=None) -> Cell:
     cfg, plan = spec.config, spec.plan
     shp = spec.shapes()[shape_name]
     t_len, s_len, batch = shp["temporal"], shp["spatial"], shp["batch"]
@@ -403,13 +418,14 @@ def build_t2d_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
         # object is executed by the forward below, so planned and compiled
         # collectives stay one artifact
         sp = mesh.shape.get("model", 1)
+        topo = topology if topology is not None else mesh_topology(mesh,
+                                                                   "ici")
         psched = T2D.dsp_schedule(cfg, sp, t_len=t_len, s_len=s_len,
-                                  batch=batch,
-                                  topology=mesh_topology(mesh, "ici"),
-                                  joint=True)
+                                  batch=batch, topology=topo, joint=True)
         meta["planned_switches"] = psched.schedule.n_switches()
         meta["planned_comm_bytes"] = psched.schedule.per_device_bytes(sp)
         meta["planned_comm_seconds"] = psched.schedule.per_device_seconds()
+        meta.update(topology_meta(topo))
         _record_roundtrip(meta, psched.schedule, sp)
 
     def train_step(params, opt_state, b):

@@ -229,13 +229,13 @@ def attention_sp(p, x, cfg: AttnConfig, *, sharder, backend: str = "pallas",
                 qkv = sharder.heads_stacked(jnp.stack([q, k, v]))  # ONE a2a
                 q, k, v = qkv[0], qkv[1], qkv[2]
             elif fused_switch:
-                q = sharder.heads(q)
+                q = sharder.heads_enter(q)
                 kv = sharder.heads_stacked(jnp.stack([k, v]))
                 k, v = kv[0], kv[1]
             else:                                # Ulysses-style: 3 separate
-                q = sharder.heads(q)
-                k = sharder.heads(k)
-                v = sharder.heads(v)
+                q = sharder.heads_enter(q)
+                k = sharder.heads_enter(k)
+                v = sharder.heads_enter(v)
             o = chunked_attention(q, k, v, cfg, mesh=sharder.mesh,
                                   layout="heads", causal=is_causal,
                                   backend=backend)
@@ -246,7 +246,9 @@ def attention_sp(p, x, cfg: AttnConfig, *, sharder, backend: str = "pallas",
                 softcap=cfg.softcap, scale=cfg.scale, backend=backend)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
     o = L.linear(p["wo"], o)
-    o = sharder.act3(o)                          # switch back: seq-sharded
+    # switch back to the resid layout; as the mixer-exit boundary its
+    # backward constrains the cotangent to the mixer's planned bwd layout
+    o = sharder.mixer_exit3(o)
     if return_kv:
         return o, kv_out
     return o

@@ -71,22 +71,37 @@ def dsp_schedule(cfg: EncDecConfig, n: int, *, s_enc: Optional[int] = None,
                  s_dec: Optional[int] = None,
                  batch: Optional[int] = None, topology=None,
                  joint: bool = False,
-                 grad_dtype_bytes: Optional[int] = None) -> Schedule:
+                 grad_dtype_bytes: Optional[int] = None,
+                 bwd_dims=None) -> Schedule:
     """Solve the switching plan over the full enc-dec stage graph (enter
     sequence-sharded, exit sequence-sharded for the loss).  ``topology``
     prices the plan in seconds on the mesh's links; ``joint=True`` plans the
-    backward pass as its own stage graph (``core.plan.plan_joint``).  The
-    enc-dec forward executes its backward as the autodiff transpose, so a
-    non-mirrored joint plan falls back to the mirrored forward-optimal one
-    (same reasoning as ``models.lm.dsp_schedule``)."""
+    backward pass as its own stage graph (``core.plan.plan_joint``) — and
+    the scanned encoder/decoder loops execute non-mirrored plans through
+    the Sharder's per-period custom_vjp boundaries, so the joint DP runs
+    for real (nothing forces the mirror any more).  ``bwd_dims`` forces a
+    specific backward plan (full per-stage tuple) — used by the parity/HLO
+    test tier on instances where the DP keeps the mirror; like
+    ``models.lm.dsp_schedule`` it deliberately skips the planner's
+    ``Stage.allows`` feasibility check (this graph is dim-forced, so every
+    non-mirrored plan is infeasible in the cost model's sense — parity
+    holds regardless, executed collectives may exceed the priced leg)."""
     st = stages(cfg, s_enc=s_enc, s_dec=s_dec, batch=batch,
                 grad_dtype_bytes=grad_dtype_bytes)
     if joint:
-        return plan_joint_schedule(st, (1, 2), n=max(n, 1), initial=1,
-                                   final=1, topology=topology,
-                                   require_mirrored=True)
-    return plan_schedule(st, (1, 2), n=max(n, 1), initial=1, final=1,
-                         topology=topology)
+        sched = plan_joint_schedule(st, (1, 2), n=max(n, 1), initial=1,
+                                    final=1, topology=topology)
+    else:
+        sched = plan_schedule(st, (1, 2), n=max(n, 1), initial=1, final=1,
+                              topology=topology)
+    if bwd_dims is not None:
+        bwd_dims = tuple(bwd_dims)
+        if len(bwd_dims) != len(st):
+            raise ValueError(
+                f"bwd_dims must cover the full stage graph ({len(st)} "
+                f"stages); got {len(bwd_dims)}")
+        sched = dataclasses.replace(sched, bwd_dims=bwd_dims)
+    return sched
 
 
 def _with_planned_schedule(sharder, cfg: EncDecConfig,
@@ -154,9 +169,10 @@ def encode(params, feats, cfg: EncDecConfig, *, sharder=None,
     sharder = _with_planned_schedule(sharder, cfg, s_enc=feats.shape[1],
                                      batch=feats.shape[0])
     x = L.patch_embed(params["frontend"], feats.astype(cfg.dtype))
-    x = sharder.act3(x)
+    x = sharder.enter3(x)
 
     def body(xc, lp):
+        xc = sharder.wrap3(xc)     # scan-carry anchor (bwd steady state)
         h = _norm(cfg, lp["ln1"], xc)
         h = A.attention_sp(lp["attn"], h, cfg.attn_cfg(), sharder=sharder,
                            backend=backend, fused_switch=fused_switch,
@@ -180,9 +196,10 @@ def decode(params, tokens, enc_out, cfg: EncDecConfig, *, sharder=None,
     sharder = _with_planned_schedule(sharder, cfg, s_dec=tokens.shape[1],
                                      batch=tokens.shape[0])
     x = L.embed(params["embed"], tokens)
-    x = sharder.act3(x)
+    x = sharder.enter3(x)
 
     def body(xc, lp):
+        xc = sharder.wrap3(xc)     # scan-carry anchor (bwd steady state)
         h = _norm(cfg, lp["ln1"], xc)
         h = A.attention_sp(lp["self_attn"], h, cfg.attn_cfg(),
                            sharder=sharder, backend=backend,

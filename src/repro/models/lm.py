@@ -155,6 +155,10 @@ def stages(cfg: LMConfig, *, seq: Optional[int] = None,
     out: List[Stage] = []
     for layer in range(cfg.n_layers):
         spec = specs[layer % len(specs)]
+        # per-period grad declaration: the cotangent crossing each boundary
+        # backward is activation-shaped (Stage.bwd_shape defaults to shape)
+        # at grad width ``gb`` — the joint round-trip DP prices the backward
+        # leg from these
         out.append(Stage(frozenset({2}), f"L{layer}.proj", shape, db,
                          bwd_dtype_bytes=gb))
         out.append(Stage(frozenset({1}), f"L{layer}.{spec.mixer}", shape, db,
@@ -173,26 +177,53 @@ def stage_period(cfg: LMConfig) -> int:
 def dsp_schedule(cfg: LMConfig, n: int, *, seq: Optional[int] = None,
                  batch: Optional[int] = None, topology=None,
                  joint: bool = False,
-                 grad_dtype_bytes: Optional[int] = None) -> Schedule:
+                 grad_dtype_bytes: Optional[int] = None,
+                 bwd_dims=None) -> Schedule:
     """Solve the switching plan (enter sequence-sharded from the dataloader
     split, return to it for the loss) and validate it is scan-periodic.
     ``topology`` prices the plan in seconds on the mesh's links (byte model
     when None); ``joint=True`` plans the backward pass too
-    (``core.plan.plan_joint``).  The LM executes through SCANNED layers
-    whose backward is always the autodiff transpose, so when the joint DP
-    returns a non-mirrored round trip (whose forward may be
-    forward-suboptimal) the whole schedule falls back to the mirrored
-    forward-optimal plan — executing the joint forward with a transposed
-    backward would be strictly worse than not planning jointly at all."""
+    (``core.plan.plan_joint``) — and since the scanned execution consumes
+    non-mirrored plans (per-period custom_vjp boundaries through the
+    Sharder hooks; docs/architecture.md §3.5), the joint DP runs for real:
+    the priced round trip IS the executed round trip.  Only a joint plan
+    that is not scan-periodic falls back to the mirrored forward-optimal
+    baseline (``lax.scan`` needs a steady state on both legs).
+
+    ``bwd_dims`` forces a specific backward plan (a per-period pattern or
+    the full per-stage tuple) — the parity/HLO test tier and benchmarks use
+    it to pin non-mirrored execution on instances where the DP keeps the
+    mirror.  Forcing deliberately skips the planner's ``Stage.allows``
+    feasibility check: this stage graph admits exactly one dim per stage,
+    so every non-mirrored plan is "infeasible" in the cost model's sense —
+    gradients stay bit-identical regardless (the constraints are layout
+    only), but the executed collectives of a forced plan may exceed what
+    the pricing assumes (XLA inserts the intra-stage reshards the cost
+    model would have charged a feasible plan nothing for)."""
     st = stages(cfg, seq=seq, batch=batch, grad_dtype_bytes=grad_dtype_bytes)
+    period = stage_period(cfg)
     if joint:
         sched = plan_joint_schedule(st, (1, 2), n=max(n, 1), initial=1,
-                                    final=1, topology=topology,
-                                    require_mirrored=True)
+                                    final=1, topology=topology)
+        try:
+            sched.periodic(period)
+        except ValueError:
+            sched = plan_joint_schedule(st, (1, 2), n=max(n, 1), initial=1,
+                                        final=1, topology=topology,
+                                        require_mirrored=True)
     else:
         sched = plan_schedule(st, (1, 2), n=max(n, 1), initial=1, final=1,
                               topology=topology)
-    sched.periodic(stage_period(cfg))          # scanned layers: steady state
+    if bwd_dims is not None:
+        bwd_dims = tuple(bwd_dims)
+        if len(bwd_dims) == period:
+            bwd_dims = bwd_dims * (len(st) // period)
+        if len(bwd_dims) != len(st):
+            raise ValueError(
+                f"bwd_dims must cover one period ({period} stages) or the "
+                f"full plan ({len(st)} stages); got {len(bwd_dims)}")
+        sched = dataclasses.replace(sched, bwd_dims=bwd_dims)
+    sched.periodic(period)     # scanned layers: steady state, both legs
     return sched
 
 
@@ -308,7 +339,7 @@ def _apply_layer(p, x, cfg: LMConfig, spec: LayerSpec, sharder: Sharder,
     else:
         h = S.ssm_block(p["ssm"], h, cfg.ssm_cfg, backend=backend,
                         sharder=sharder)
-        h = sharder.act3(h)
+        h = sharder.mixer_exit3(h)
     if cfg.post_norm:
         h = _apply_norm(cfg, p["pn1"], h)
     x = x + h
@@ -325,7 +356,11 @@ def _apply_layer(p, x, cfg: LMConfig, spec: LayerSpec, sharder: Sharder,
         if cfg.post_norm:
             h = _apply_norm(cfg, p["pn2"], h)
         x = x + h
-    return sharder.act3(x), aux
+        # layer exit: a resid-stage boundary (the ffn was the last stage)
+        return sharder.act3(x), aux
+    # ffn-less layers end on the mixer stage: the boundary's backward
+    # carries the cotangent into the mixer's planned bwd layout
+    return sharder.mixer_exit3(x), aux
 
 
 # ---------------------------------------------------------------------------
@@ -428,10 +463,13 @@ def forward(params, tokens, cfg: LMConfig, *, sharder: Optional[Sharder] = None,
         pe = L.patch_embed(params["frontend"], extra["patch_embeds"])
         x = jnp.concatenate([pe.astype(x.dtype),
                              x[:, cfg.frontend_tokens:]], axis=1)
-    x = sharder.act3(x)
+    x = sharder.enter3(x)       # entry boundary; its bwd is the input grad
 
     def period_body(carry, pp):
         x, aux = carry
+        # scan-carry anchor: pins the steady-state backward layout of the
+        # cotangent crossing periods (a forward keep — lowers to nothing)
+        x = sharder.wrap3(x)
         for i, spec in enumerate(specs):
             x, a = _apply_layer(pp[str(i)], x, cfg, spec, sharder, backend,
                                 fused_switch, moe_impl)

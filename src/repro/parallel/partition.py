@@ -22,6 +22,17 @@ legacy mode-based defaults apply (dsp/tp: residual seq-sharded, mixer
 head-sharded), which is exactly what the planner derives for these
 alternating-stage models — the schedule is the source of truth, the
 defaults its fixed point.
+
+The BACKWARD leg is plan-driven too: when the schedule carries a planned
+backward (``Schedule.bwd_dims``, non-mirrored), every stage-boundary hook
+lowers through ``core.schedule.planned_constraint`` — a custom_vjp whose
+forward constrains the planned forward layout and whose backward
+constrains the cotangent to the planned BACKWARD layout instead of the
+autodiff transpose.  Inside a scanned layer loop these become the
+per-period custom_vjp boundaries that let non-mirrored joint plans run
+under ``jax.lax.scan`` (docs/architecture.md §3.5); with a mirrored
+schedule every hook stays a plain ``with_sharding_constraint`` and the
+compiled HLO is unchanged.
 """
 from __future__ import annotations
 
@@ -208,7 +219,14 @@ class Sharder:
     (B, S, H·Dh) stage view; ``resid_dim``/``mixer_dim`` cache the planned
     shard dim of the residual/channel stages (dim 1 = sequence) and of the
     mixer stages (dim 2 = heads/channels) — consecutive hooks whose planned
-    dims differ are the paper's dynamic switches."""
+    dims differ are the paper's dynamic switches.
+
+    ``bwd_resid_dim``/``bwd_mixer_dim`` cache the planned BACKWARD class
+    layouts when the schedule is non-mirrored (None otherwise);
+    ``bwd_entry_dim`` is where the input gradient returns (the schedule's
+    ``initial``) and ``bwd_carry_dim`` the steady-state layout the scan
+    carries the cotangent in (``bwd_plan[-1]`` — the wrap anchor's target;
+    see ``core.schedule.PeriodicSchedule.bwd_wrap``)."""
 
     mesh: Optional[Mesh]
     plan: ParallelPlan
@@ -217,6 +235,10 @@ class Sharder:
     schedule: Optional[Any] = None
     resid_dim: Optional[int] = None
     mixer_dim: Optional[int] = None
+    bwd_resid_dim: Optional[int] = None
+    bwd_mixer_dim: Optional[int] = None
+    bwd_entry_dim: Optional[int] = None
+    bwd_carry_dim: Optional[int] = None
     # mesh communication model (core.topology.Topology) the schedule was (or
     # will be) solved against — carried alongside the plan so model forwards
     # that attach a schedule late price it on the same fabric
@@ -224,11 +246,12 @@ class Sharder:
 
     def with_schedule(self, schedule) -> "Sharder":
         resid, mixer = _stage_dims(self.plan, schedule)
+        bwd = _stage_bwd_dims(schedule)
         topo = (schedule.topology if getattr(schedule, "topology", None)
                 is not None else self.topology)
         return dataclasses.replace(self, schedule=schedule,
                                    resid_dim=resid, mixer_dim=mixer,
-                                   topology=topo)
+                                   topology=topo, **bwd)
 
     @property
     def sp_size(self) -> int:
@@ -240,42 +263,122 @@ class Sharder:
         layout otherwise)."""
         return self.mixer_dim == 2 and n_heads % max(self.sp_size, 1) == 0
 
-    def _c(self, x, *spec):
-        if self.mesh is None:
-            return x
+    def _ns(self, spec) -> NamedSharding:
         dims = [d if d != "__dp__" else
                 (self.dp if len(self.dp) > 1 else self.dp[0]) for d in spec]
         dims = [d if d != "__sp__" else self.sp for d in dims]
-        return jax.lax.with_sharding_constraint(
-            x, NamedSharding(self.mesh, P(*dims)))
+        return NamedSharding(self.mesh, P(*dims))
+
+    def _c(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self._ns(spec))
+
+    def _c2(self, x, fwd, bwd):
+        """One stage-boundary hook constraint.  ``fwd``/``bwd`` are entry
+        tuples; with a mirrored schedule (``bwd`` is None) or identical
+        layouts this is a plain constraint, otherwise it lowers through
+        ``core.schedule.planned_constraint`` so the cotangent crossing this
+        point backward is constrained to the PLANNED backward layout."""
+        if self.mesh is None:
+            return x
+        if bwd is None or tuple(bwd) == tuple(fwd):
+            return self._c(x, *fwd)
+        from repro.core.schedule import planned_constraint
+        return planned_constraint(x, self._ns(fwd), self._ns(bwd))
+
+    @staticmethod
+    def _e3(d):
+        """(B, S, C)-shaped entries for logical shard dim ``d`` (1 = the
+        sequence, 2 = the flattened head/channel axis)."""
+        if d == 1:
+            return ("__dp__", "__sp__", None)
+        if d == 2:
+            return ("__dp__", None, "__sp__")
+        return ("__dp__", None, None)
+
+    @property
+    def _planned_bwd(self) -> bool:
+        return self.bwd_resid_dim is not None or self.bwd_mixer_dim is not None
 
     # -- (B, S, C) residual stream: the planned resid-stage layout.  The
     # planner keeps it sequence-sharded in BOTH dsp and tp (Megatron-SP keeps
     # inter-block activations seq-sharded too; this is what bounds the
-    # 88-layer scan carry) -----------------------------------------------------
+    # 88-layer scan carry).  With a planned (non-mirrored) backward the
+    # cotangent crossing a resid-stage boundary backward is constrained to
+    # the backward plan's resid layout instead of the transposed forward -------
     def act3(self, x):
-        if self.resid_dim == 1:
-            return self._c(x, "__dp__", "__sp__", None)     # sequence-sharded
-        if self.resid_dim == 2:
-            return self._c(x, "__dp__", None, "__sp__")     # channel-sharded
-        return self._c(x, "__dp__", None, None)
+        bwd = self._e3(self.bwd_resid_dim) if self._planned_bwd else None
+        return self._c2(x, self._e3(self.resid_dim), bwd)
 
-    # -- (B, H, S, D) attention heads: the planned mixer-stage layout ----------
+    # -- entry boundary (called once, before the layer loop): forward = the
+    # resid layout; the cotangent crossing it backward is the INPUT GRADIENT
+    # and returns in the schedule's ``initial`` (dataloader) layout ------------
+    def enter3(self, x):
+        bwd = None
+        if self._planned_bwd:
+            d = (self.bwd_entry_dim if self.bwd_entry_dim is not None
+                 else self.bwd_resid_dim)
+            bwd = self._e3(d)
+        return self._c2(x, self._e3(self.resid_dim), bwd)
+
+    # -- scan-carry anchor at the top of the period body: forward is a keep
+    # (the carry already holds the resid layout — lowers to nothing); the
+    # backward pins the cotangent crossing the wrap to ``bwd_carry_dim``
+    # (= bwd_plan[-1]) so the while loop carries ONE steady-state backward
+    # layout and the seam reshard lands outside the body (the executed
+    # structure ScheduleExecutor.expected_bwd_collectives accounts) ------------
+    def wrap3(self, x):
+        bwd = self._e3(self.bwd_carry_dim) if self._planned_bwd else None
+        return self._c2(x, self._e3(self.resid_dim), bwd)
+
+    # -- boundary out of a mixer stage back into the residual stream (the
+    # paper's switch back): forward = resid layout; the cotangent crossing
+    # it backward enters the MIXER's backward — the planned mixer bwd dim ------
+    def mixer_exit3(self, x):
+        bwd = self._e3(self.bwd_mixer_dim) if self._planned_bwd else None
+        return self._c2(x, self._e3(self.resid_dim), bwd)
+
+    @staticmethod
+    def _e4(d):
+        """(B, H, S, D)-shaped entries for logical shard dim ``d``."""
+        if d == 2:
+            return ("__dp__", "__sp__", None, None)
+        if d == 1:
+            return ("__dp__", None, "__sp__", None)
+        return ("__dp__", None, None, None)
+
+    # -- (B, H, S, D) attention heads: the planned mixer-stage layout.  An
+    # INTRA-mixer anchor — its backward keeps the cotangent on the mixer's
+    # planned bwd layout (the attention output re-assert in attention_sp) ------
     def heads(self, x):
-        if self.mixer_dim == 2:
-            return self._c(x, "__dp__", "__sp__", None, None)
-        if self.mixer_dim == 1:
-            return self._c(x, "__dp__", None, "__sp__", None)
-        return self._c(x, "__dp__", None, None, None)
+        bwd = self._e4(self.bwd_mixer_dim) if self._planned_bwd else None
+        return self._c2(x, self._e4(self.mixer_dim), bwd)
+
+    # -- (B, H, S, D) boundary INTO the mixer stage (unfused / GQA q entry):
+    # same forward layout as ``heads`` but the cotangent crossing it backward
+    # leaves toward the preceding resid stage's backward — mirrors
+    # ``heads_stacked``, which is this boundary's fused form ------------------
+    def heads_enter(self, x):
+        bwd = self._e4(self.bwd_resid_dim) if self._planned_bwd else None
+        return self._c2(x, self._e4(self.mixer_dim), bwd)
+
+    @staticmethod
+    def _e5(d):
+        """(3|2, B, H, S, D) stacked-qkv entries for logical dim ``d``."""
+        if d == 2:
+            return (None, "__dp__", "__sp__", None, None)
+        if d == 1:
+            return (None, "__dp__", None, "__sp__", None)
+        return (None, "__dp__", None, None, None)
 
     # -- (3|2, B, H, S, D) stacked q/k/v: ONE constraint -> ONE all-to-all
-    # (the fused DSP switch; beyond-paper optimisation for 1-D archs) ----------
+    # (the fused DSP switch; beyond-paper optimisation for 1-D archs).  The
+    # boundary INTO the mixer stage: its backward carries the cotangent
+    # toward the preceding resid stage's backward ------------------------------
     def heads_stacked(self, x):
-        if self.mixer_dim == 2:
-            return self._c(x, None, "__dp__", "__sp__", None, None)
-        if self.mixer_dim == 1:
-            return self._c(x, None, "__dp__", None, "__sp__", None)
-        return self._c(x, None, "__dp__", None, None, None)
+        bwd = self._e5(self.bwd_resid_dim) if self._planned_bwd else None
+        return self._c2(x, self._e5(self.mixer_dim), bwd)
 
     # -- (B, H, S, D) q/out kept sequence-sharded (kv-gather attention path:
     # heads don't divide the SP axis; the paper's *gather* primitive applies
@@ -289,22 +392,35 @@ class Sharder:
     def kv_gathered(self, x):
         return self._c(x, None, "__dp__", None, None, None)
 
-    # -- (B, S, F) MLP hidden -------------------------------------------------
+    # -- (B, S, F) MLP hidden: an intra-resid-stage anchor — its backward
+    # keeps the cotangent on the resid stage's planned bwd layout --------------
     def ffn_hidden(self, x):
         if self.plan.mode == "dsp":
-            if self.resid_dim == 2:
-                return self._c(x, "__dp__", None, "__sp__")
-            return self._c(x, "__dp__", "__sp__", None)
+            fwd = self._e3(self.resid_dim if self.resid_dim == 2 else 1)
+            bwd = None
+            if self._planned_bwd:
+                bwd = self._e3(self.bwd_resid_dim
+                               if self.bwd_resid_dim == 2 else 1)
+            return self._c2(x, fwd, bwd)
         if self.plan.mode == "tp":
             return self._c(x, "__dp__", None, "__sp__")
         return self._c(x, "__dp__", None, None)
 
     # -- (B, L, H, P) ssm scan inputs: planned mixer layout (switch
-    # seq-shard -> head-shard) ------------------------------------------------
+    # seq-shard -> head-shard); intra-mixer anchor on the backward too ---------
     def ssm_heads(self, x):
-        if self.plan.mode == "dsp" and self.mixer_dim == 2:
-            return self._c(x, "__dp__", None, "__sp__", None)
-        return self._c(x, "__dp__", None, None, None)
+        if self.plan.mode != "dsp":
+            return self._c(x, "__dp__", None, None, None)
+        fwd = (("__dp__", None, "__sp__", None) if self.mixer_dim == 2
+               else ("__dp__", None, None, None))
+        bwd = None
+        if self._planned_bwd:
+            bwd = (("__dp__", None, "__sp__", None)
+                   if self.bwd_mixer_dim == 2
+                   else ("__dp__", "__sp__", None, None)
+                   if self.bwd_mixer_dim == 1
+                   else ("__dp__", None, None, None))
+        return self._c2(x, fwd, bwd)
 
     # -- (B, L, D) flat ssm scan operands: planned mixer layout on the flat
     # channel dim (the (H, P) reshape keeps an H-major representable shard).
@@ -314,16 +430,23 @@ class Sharder:
     def channels3(self, x):
         if self.plan.mode not in ("dsp", "tp"):
             return x
-        if self.mixer_dim == 2:
-            return self._c(x, "__dp__", None, "__sp__")
-        return self._c(x, "__dp__", None, None)
+        fwd = (("__dp__", None, "__sp__") if self.mixer_dim == 2
+               else ("__dp__", None, None))
+        bwd = None
+        if self.plan.mode == "dsp" and self._planned_bwd:
+            bwd = (("__dp__", None, "__sp__") if self.bwd_mixer_dim == 2
+                   else ("__dp__", "__sp__", None) if self.bwd_mixer_dim == 1
+                   else ("__dp__", None, None))
+        return self._c2(x, fwd, bwd)
 
     # -- (B, L, D) scan output: planned switch back to the resid-stage layout
-    # (dsp only — tp never moved the activation shard into the scan) -----------
+    # (dsp only — tp never moved the activation shard into the scan).  A
+    # mixer-exit boundary: the cotangent crossing it backward enters the
+    # scan's backward in the planned mixer bwd layout --------------------------
     def scan_out3(self, x):
         if self.plan.mode != "dsp":
             return x
-        return self.act3(x)
+        return self.mixer_exit3(x)
 
     # -- replicated-by-plan small tensors (SSM B/C groups: G may undershoot
     # the SP degree and they are ~d_state/d_inner of the activation) -----------
@@ -472,18 +595,57 @@ def _stage_dims(plan: ParallelPlan, schedule) -> Tuple[Optional[int],
     return None, None
 
 
+def _stage_bwd_dims(schedule) -> dict:
+    """Planned-backward class layouts for the hook path.
+
+    Mirrored schedules (or none) contribute nothing — every hook stays a
+    plain constraint.  A non-mirrored schedule must assign ONE backward dim
+    per stage class (mixer vs resid), exactly like the forward
+    (``_stage_dims``): the hook mechanism executes one layout per class, so
+    a per-stage-divergent backward plan is rejected loudly.  Also derives
+    the entry (input-gradient) layout and the steady-state scan-carry
+    layout (``bwd_plan[-1]`` — what ``Sharder.wrap3`` anchors)."""
+    none = {"bwd_resid_dim": None, "bwd_mixer_dim": None,
+            "bwd_entry_dim": None, "bwd_carry_dim": None}
+    if schedule is None or getattr(schedule, "mirrored", True):
+        return none
+    resid = mixer = None
+    for st, d in zip(schedule.stages, schedule.bwd_plan):
+        if 1 in st.compute_dims:
+            if mixer is not None and mixer != d:
+                raise ValueError(
+                    f"non-uniform backward plan: mixer stage {st.name!r} "
+                    f"runs its backward on dim {d}, earlier mixer stages on "
+                    f"{mixer}; the Sharder hook path needs one backward "
+                    f"layout per stage class")
+            mixer = d
+        else:
+            if resid is not None and resid != d:
+                raise ValueError(
+                    f"non-uniform backward plan: stage {st.name!r} runs its "
+                    f"backward on dim {d}, earlier resid stages on {resid}; "
+                    f"the Sharder hook path needs one backward layout per "
+                    f"stage class")
+            resid = d
+    return {"bwd_resid_dim": resid, "bwd_mixer_dim": mixer,
+            "bwd_entry_dim": schedule.initial,
+            "bwd_carry_dim": schedule.bwd_plan[-1]}
+
+
 def make_sharder(mesh: Optional[Mesh], plan: ParallelPlan,
                  schedule=None, topology=None) -> Sharder:
     """``topology`` (core.topology.Topology) models the SP axis's links;
     when ``schedule`` already carries one it wins (the plan was solved on
     it)."""
     resid, mixer = _stage_dims(plan, schedule)
+    bwd = _stage_bwd_dims(schedule)
     if schedule is not None and getattr(schedule, "topology", None) is not None:
         topology = schedule.topology
     if mesh is None:
         return Sharder(mesh=None, plan=plan, schedule=schedule,
-                       resid_dim=resid, mixer_dim=mixer, topology=topology)
+                       resid_dim=resid, mixer_dim=mixer, topology=topology,
+                       **bwd)
     dp = tuple(a for a in mesh.axis_names if a != "model")
     return Sharder(mesh=mesh, plan=plan, dp=dp, sp="model",
                    schedule=schedule, resid_dim=resid, mixer_dim=mixer,
-                   topology=topology)
+                   topology=topology, **bwd)

@@ -1,13 +1,31 @@
 """Subprocess worker for tests/test_hlo_collectives.py.
 
-Runs with XLA_FLAGS=--xla_force_host_platform_device_count=8; compiles the
-transformer2d DSP forward through BOTH executor backends (auto constraints
-under jit, explicit collectives inside shard_map) plus a bare ``split``, and
-prints one JSON line with the parsed HLO collective counts next to the
-planned counts from the schedule executor.
+Runs with XLA_FLAGS=--xla_force_host_platform_device_count=8; compiles
+
+* the transformer2d DSP forward through BOTH executor backends (auto
+  constraints under jit, explicit collectives inside shard_map) plus a bare
+  ``split``,
+* the scanned t2d TRAIN step (loss + grad) on both backends — the mirrored
+  joint plan, the per-leg control case,
+* a synthetic scanned executor program (free stages, ``lax.scan``) under a
+  mirrored plan and two FORCED non-mirrored joint plans — the per-period
+  custom_vjp backward contract, leg by leg,
+* the scanned-LM train loss + grad under the mirrored joint plan and a
+  forced non-mirrored plan,
+
+and prints one JSON line with the parsed HLO collective counts next to the
+planned counts from the schedule executor
+(``expected_collectives`` / ``expected_bwd_collectives``).
 """
 import json
 import sys
+
+
+def _counts(parse, fn, *args):
+    import jax
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    st = parse(txt)
+    return {k: int(v) for k, v in st.by_kind_count.items()}
 
 
 def main():
@@ -17,47 +35,138 @@ def main():
 
     from repro.analysis.roofline import parse_data_collectives
     from repro.core import compat
-    from repro.core.schedule import ScheduleExecutor
+    from repro.core.layout import from_mesh
+    from repro.core.plan import Stage
+    from repro.core.schedule import Schedule, ScheduleExecutor
     from repro.models.transformer2d import (T2DConfig, dsp_schedule, forward,
-                                            init_t2d, make_spmd_forward)
+                                            init_t2d, make_spmd_forward,
+                                            t2d_loss)
 
     cfg = T2DConfig(name="hlo", n_layers=4, d_model=64, n_heads=4, d_ff=128,
                     in_dim=16, modulate=False, dtype=jnp.float32)
     b, t, s = 2, 8, 16
     mesh = compat.make_mesh((2, 4), ("data", "model"))
+    ctx = from_mesh(mesh)
     params = init_t2d(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (b, t, s, cfg.in_dim))
     tt = jnp.zeros((b,))
 
-    # the planned schedule both backends execute
+    def counts(fn, *args):
+        return _counts(parse_data_collectives, fn, *args)
+
+    # ---- forward contract (both backends + split) -------------------------
     psched = dsp_schedule(cfg, mesh.shape["model"], t_len=t, s_len=s, batch=b)
     ex = ScheduleExecutor(psched, backend="explicit")
     planned = ex.expected_collectives(cfg.n_layers // 2)
 
-    def counts(hlo_text):
-        # data-moving collectives only: scalar-constant broadcast re-tiling
-        # artifacts are excluded (see parse_data_collectives)
-        st = parse_data_collectives(hlo_text)
-        return {k: int(v) for k, v in st.by_kind_count.items()}
+    auto = counts(lambda p, xx, ttt: forward(p, xx, ttt, cfg, mesh=mesh,
+                                             mode="dsp", backend="ref",
+                                             remat=False), params, x, tt)
+    explicit = counts(make_spmd_forward(cfg, mesh, mode="dsp", backend="ref"),
+                      params, x, tt)
 
-    # auto backend: layout constraints under jit
-    auto_fn = jax.jit(lambda p, xx, ttt: forward(p, xx, ttt, cfg, mesh=mesh,
-                                                 mode="dsp", backend="ref",
-                                                 remat=False))
-    auto = counts(auto_fn.lower(params, x, tt).compile().as_text())
-
-    # explicit backend: collectives inside shard_map
-    exp_fn = jax.jit(make_spmd_forward(cfg, mesh, mode="dsp", backend="ref"))
-    explicit = counts(exp_fn.lower(params, x, tt).compile().as_text())
-
-    # split is communication-free (paper Table 2): a shard_map body that only
-    # splits a replicated tensor must compile to ZERO collectives
     from repro.core.dsp import split as dsp_split
-    split_fn = jax.jit(compat.shard_map(
+    split_fn = compat.shard_map(
         lambda y: dsp_split(y, 1), mesh=mesh,
-        in_specs=P(None, None), out_specs=P(None, "model")))
-    split_counts = counts(split_fn.lower(
-        jnp.zeros((4, 8), jnp.float32)).compile().as_text())
+        in_specs=P(None, None), out_specs=P(None, "model"))
+    split_counts = counts(split_fn, jnp.zeros((4, 8), jnp.float32))
+
+    # ---- scanned t2d TRAIN step: per-leg counts, mirrored joint control ---
+    batch = {"x": x, "t": None, "target": x}
+    jsched = dsp_schedule(cfg, mesh.shape["model"], t_len=t, s_len=s,
+                          batch=b, joint=True)
+    jex = ScheduleExecutor(jsched, backend="auto", ctx=ctx)
+
+    def auto_loss(p):
+        return t2d_loss(p, batch, cfg, mesh=mesh, backend="ref", remat=False,
+                        schedule=jsched)[0]
+
+    t2d_train = {
+        "planned_fwd": jex.expected_collectives(cfg.n_layers // 2),
+        "planned_bwd": jex.expected_bwd_collectives(cfg.n_layers // 2),
+        "fwd": counts(auto_loss, params),
+        "grad": counts(jax.grad(auto_loss), params),
+        "mirrored": jsched.schedule.mirrored,
+    }
+
+    exp_fwd = make_spmd_forward(cfg, mesh, mode="dsp", backend="ref")
+
+    def exp_loss(p):
+        err = (exp_fwd(p, batch["x"], tt).astype(jnp.float32)
+               - batch["target"].astype(jnp.float32)) ** 2
+        return jnp.mean(err)
+
+    t2d_train["explicit_fwd"] = counts(exp_loss, params)
+    t2d_train["explicit_grad"] = counts(jax.grad(exp_loss), params)
+
+    # ---- synthetic scanned executor program: forced non-mirrored legs -----
+    N_PERIODS = 3
+    free = tuple(Stage(frozenset(), f"s{i}") for i in range(2 * N_PERIODS))
+
+    def scan_case(dims, bwd, initial, final):
+        sched = Schedule(free, tuple(dims), initial=initial, final=final,
+                         bwd_dims=bwd)
+        ps = sched.periodic(2)
+        cex = ScheduleExecutor(ps, backend="auto", ctx=ctx)
+
+        def loss(w, xx):
+            xx = cex.enter(xx)
+
+            def body(xc, wi):
+                xc = cex.anchor(xc, 0)      # stage-0 anchor: well-formed body
+                xc = (xc + wi) * 0.5
+                xc = cex.boundary(xc, 1)
+                xc = xc * 2.0
+                xc = cex.wrap(xc)
+                return xc, None
+
+            xx, _ = jax.lax.scan(body, xx, w)
+            xx = cex.exit(xx)
+            return jnp.sum(xx.astype(jnp.float32) ** 2)
+
+        w = jnp.linspace(0.9, 1.1, N_PERIODS)
+        xx = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 8))
+        return {
+            "planned_fwd": cex.expected_collectives(N_PERIODS),
+            "planned_bwd": cex.expected_bwd_collectives(N_PERIODS),
+            "fwd": counts(loss, w, xx),
+            "grad": counts(jax.grad(loss, argnums=(0, 1)), w, xx),
+        }
+
+    synthetic = {
+        "mirrored": scan_case((1, 2) * N_PERIODS, None, 1, 1),
+        "swapped": scan_case((1, 2) * N_PERIODS, (2, 1) * N_PERIODS, 1, 1),
+        "parked": scan_case((3,) * (2 * N_PERIODS), (1, 2) * N_PERIODS, 3, 3),
+    }
+
+    # ---- scanned-LM train step: planned backward reaches the compiler -----
+    from repro.models.lm import (LMConfig, dsp_schedule as lm_schedule,
+                                 init_lm, lm_loss)
+    from repro.parallel.partition import ParallelPlan, make_sharder
+
+    lcfg = LMConfig(name="hlo", n_layers=4, d_model=64, n_heads=8,
+                    n_kv_heads=8, head_dim=8, d_ff=128, vocab=64,
+                    dtype=jnp.float32)
+    lparams = init_lm(jax.random.PRNGKey(3), lcfg)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 32), 0, 64)
+    lbatch = {"tokens": toks, "labels": toks}
+    lplan = ParallelPlan(mode="dsp", shard_vocab=False, zero=False)
+
+    def lm_case(**kw):
+        sched = lm_schedule(lcfg, mesh.shape["model"], seq=32, batch=2,
+                            joint=True, **kw)
+        sharder = make_sharder(mesh, lplan, schedule=sched)
+
+        def loss(p, bb):
+            return lm_loss(p, bb, lcfg, sharder=sharder, backend="ref",
+                           remat=False)[0]
+
+        return {"fwd": counts(loss, lparams, lbatch),
+                "grad": counts(jax.grad(loss), lparams, lbatch),
+                "mirrored": sched.mirrored}
+
+    lm_train = {"mirrored": lm_case(),
+                "forced": lm_case(bwd_dims=(2, 2, 2))}
 
     print(json.dumps({
         "planned": planned,
@@ -65,6 +174,9 @@ def main():
         "explicit": explicit,
         "split": split_counts,
         "n_periods": cfg.n_layers // 2,
+        "t2d_train": t2d_train,
+        "synthetic": synthetic,
+        "lm_train": lm_train,
     }))
 
 

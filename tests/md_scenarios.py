@@ -212,6 +212,58 @@ def scenario_joint_bwd_parity():
             assert float(np.abs(a - b).max()) / denom < 2e-4
 
 
+def scenario_scan_joint_bwd_parity():
+    """Planned backward under ``lax.scan`` on a REAL 8-device mesh: the
+    scanned-LM train step under a joint plan — and under a FORCED
+    non-mirrored joint plan (per-period custom_vjp boundaries through the
+    Sharder hooks) — must reproduce the unsharded reference: losses
+    bit-identical, gradients to fp32 reduction-order (the weight-grad
+    contractions run over the sharded sequence, so their psum order differs
+    from the local sum; the single-device tier in tests/test_scan_joint.py
+    pins the grads BIT-identical where layouts alone change)."""
+    import jax, jax.numpy as jnp
+    from repro.core.compat import make_mesh
+    from repro.models.lm import LMConfig, dsp_schedule, init_lm, lm_loss
+    from repro.parallel.partition import ParallelPlan, make_sharder
+
+    cfg = LMConfig(name="t", n_layers=2, d_model=64, n_heads=8, n_kv_heads=8,
+                   head_dim=8, d_ff=128, vocab=96, dtype=jnp.float32)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 96)
+    batch = {"tokens": toks, "labels": toks}
+
+    def run(sharder):
+        f = jax.jit(jax.value_and_grad(lambda p: lm_loss(
+            p, batch, cfg, sharder=sharder, backend="ref", remat=False)[0]))
+        loss, grads = f(params)
+        return np.asarray(loss), grads
+
+    ref_loss, ref_grads = run(None)                     # unsharded reference
+    mesh = _mesh((2, 4), ("data", "model"))
+    plan = ParallelPlan(mode="dsp", shard_vocab=False)
+    mirrored = dsp_schedule(cfg, 4, seq=32, batch=2, joint=True)
+    assert mirrored.mirrored
+    forced = dsp_schedule(cfg, 4, seq=32, batch=2, joint=True,
+                          bwd_dims=(2, 2, 2))
+    assert not forced.mirrored
+    mir_loss, mir_grads = run(make_sharder(mesh, plan, schedule=mirrored))
+    f_loss, f_grads = run(make_sharder(mesh, plan, schedule=forced))
+
+    # losses: bit-identical, sharded vs unsharded AND forced vs mirrored
+    assert ref_loss == mir_loss == f_loss, (ref_loss, mir_loss, f_loss)
+
+    def close(a_tree, b_tree, tol):
+        for a, b in zip(jax.tree_util.tree_leaves(a_tree),
+                        jax.tree_util.tree_leaves(b_tree)):
+            a, b = np.asarray(a), np.asarray(b)
+            denom = max(float(np.abs(a).max()), 1e-9)
+            assert float(np.abs(a - b).max()) / denom < tol
+
+    close(ref_grads, mir_grads, 1e-5)
+    close(mir_grads, f_grads, 1e-5)
+    close(ref_grads, f_grads, 1e-5)
+
+
 def scenario_grad_allreduce_compression():
     """DP gradients with int8 EF compression on an explicit pod-style axis."""
     import jax, jax.numpy as jnp

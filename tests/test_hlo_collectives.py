@@ -4,6 +4,16 @@ constraints under jit) and the explicit path (collectives inside shard_map)
 must both compile to EXACTLY one all-to-all per planned switch, and the
 ``split`` primitive to zero collectives.
 
+PR 5 extends the contract to the TRAIN step, per leg: on the scanned t2d
+train step (both backends, mirrored joint plan as the control case) the
+compiled grad shows exactly one all-to-all per planned forward switch plus
+one per planned backward switch; on a synthetic scanned executor program
+the same holds for FORCED non-mirrored joint plans (the per-period
+custom_vjp backward), with counts matching
+``ScheduleExecutor.expected_bwd_collectives``; and on the scanned-LM train
+step the planned backward provably reaches the compiler (forward leg
+invariant, backward leg changes with the plan).
+
 Runs the compile in a subprocess with 8 simulated CPU devices so the main
 pytest process keeps its 1-device default (same pattern as
 tests/test_multidevice.py).
@@ -60,3 +70,53 @@ def test_explicit_path_matches_plan(hlo_counts):
 def test_split_is_communication_free(hlo_counts):
     """Paper Table 2: s_hat -> s_i is a local slice — zero collectives."""
     assert hlo_counts["split"] == {}, hlo_counts
+
+
+# ---------------------------------------------------------------------------
+# Train-step per-leg contract (PR 5)
+# ---------------------------------------------------------------------------
+
+def _a2a(c):
+    return c.get("all-to-all", 0)
+
+
+def test_t2d_train_step_per_leg_counts(hlo_counts):
+    """Scanned t2d train step, mirrored joint plan (the control case):
+    forward leg == planned forward switches; the grad compile adds exactly
+    the planned backward leg — on BOTH backends."""
+    tr = hlo_counts["t2d_train"]
+    assert tr["mirrored"]                      # symmetric model: DP keeps it
+    assert _a2a(tr["fwd"]) == _a2a(tr["planned_fwd"]), tr
+    assert _a2a(tr["grad"]) == _a2a(tr["fwd"]) + _a2a(tr["planned_bwd"]), tr
+    # explicit backend: the mirrored transpose re-emits each collective once
+    assert _a2a(tr["explicit_fwd"]) == _a2a(tr["planned_fwd"]), tr
+    assert _a2a(tr["explicit_grad"]) == \
+        _a2a(tr["explicit_fwd"]) + _a2a(tr["planned_bwd"]), tr
+
+
+def test_synthetic_scan_planned_backward_per_leg_counts(hlo_counts):
+    """A scan-periodic schedule with distinct bwd_dims lowers to per-period
+    custom_vjp boundaries whose compiled backward leg shows EXACTLY the
+    planned all-to-alls (``expected_bwd_collectives``): steady-state
+    periodic leg inside the while body, seam + carry-init + input-grad
+    entry outside it.  The mirrored case is the control."""
+    for name, case in hlo_counts["synthetic"].items():
+        assert _a2a(case["fwd"]) == _a2a(case["planned_fwd"]), (name, case)
+        bwd = _a2a(case["grad"]) - _a2a(case["fwd"])
+        assert bwd == _a2a(case["planned_bwd"]), (name, case)
+    # the contract distinguishes the legs: the forced plans' backward legs
+    # differ from the mirrored control's
+    syn = hlo_counts["synthetic"]
+    assert _a2a(syn["swapped"]["planned_bwd"]) != \
+        _a2a(syn["mirrored"]["planned_bwd"])
+
+
+def test_scanned_lm_train_planned_backward_reaches_compiler(hlo_counts):
+    """Scanned-LM train step: a forced non-mirrored joint plan leaves the
+    forward leg untouched (identical collective counts) but changes the
+    compiled backward — if ``require_mirrored=True`` came back (bwd_dims
+    ignored), the two grad compiles would be identical and this fails."""
+    lm = hlo_counts["lm_train"]
+    assert lm["mirrored"]["mirrored"] and not lm["forced"]["mirrored"]
+    assert lm["mirrored"]["fwd"] == lm["forced"]["fwd"], lm
+    assert lm["mirrored"]["grad"] != lm["forced"]["grad"], lm

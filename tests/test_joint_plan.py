@@ -316,19 +316,32 @@ def test_periodic_planned_backward_seam_targets_last_stage(monkeypatch):
     assert recorded[0] == recorded[1]
 
 
-def test_lm_joint_falls_back_to_mirror_when_not_executable():
-    """REGRESSION: scanned models execute the autodiff-transposed backward,
-    so a non-mirrored joint plan (whose forward may be forward-suboptimal)
-    must NOT leak its forward into the scanned execution — dsp_schedule
-    falls back to the mirrored forward-optimal plan."""
+def test_lm_joint_runs_the_joint_dp_for_real(monkeypatch):
+    """REGRESSION (PR 5): the scanned LM executes non-mirrored joint plans
+    (per-period custom_vjp boundaries through the Sharder hooks), so
+    ``dsp_schedule(joint=True)`` must run the joint DP — reintroducing
+    ``require_mirrored=True`` fails this test.  On the LM's forced stage
+    graph (each stage admits exactly one dim) the DP keeps the mirror, and
+    the executed forward stays the fwd-only optimum."""
     import jax.numpy as jnp
+    import repro.core.schedule as schedule_mod
     from repro.models.lm import LMConfig, dsp_schedule, stages
     cfg = LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
                    head_dim=16, d_ff=128, vocab=64, dtype=jnp.float32)
     from repro.core.plan import plan_switches_dp
+    seen = []
+    real = schedule_mod.plan_joint
+
+    def spy(*a, **kw):
+        seen.append(kw.get("require_mirrored", False))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(schedule_mod, "plan_joint", spy)
     sched = dsp_schedule(cfg, 8, seq=64, batch=2, joint=True)
+    # the joint DP actually ran (no forced-mirror shortcut) ...
+    assert seen and seen[0] is False
+    # ... and on this forced graph it keeps the mirror, fwd-optimal
     assert sched.mirrored
-    # the executed forward is the fwd-only optimum, never the joint fwd
     fwd_only = tuple(plan_switches_dp(stages(cfg, seq=64, batch=2), (1, 2),
                                       n=8, initial=1, final=1))
     assert sched.dims == fwd_only

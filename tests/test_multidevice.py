@@ -18,6 +18,7 @@ SCENARIOS = [
     "elastic_checkpoint",
     "grad_allreduce_compression",
     "joint_bwd_parity",
+    "scan_joint_bwd_parity",
     "continuous_serving_sharded",
 ]
 

@@ -312,6 +312,34 @@ def test_serve_driver_profile_topology(tmp_path):
     assert resolve_topology("ici_dcn", 8, n_hosts=2).axes[0].name == "dcn"
 
 
+def test_dryrun_cell_meta_records_profile_fabric(tmp_path):
+    """Satellite (PR 5): the dry-run cells accept a fitted profile fabric
+    (``launch/dryrun.py --topology profile:<path>`` resolves through the
+    same ``launch.mesh.resolve_topology``) and record it — plus the
+    executed-vs-priced backward identity — in the cell meta."""
+    import json
+    from repro.configs import get
+    from repro.core.compat import make_mesh
+    from repro.launch.mesh import resolve_topology as resolve
+    from repro.launch.steps import build_cell
+    samples = [[1 << 20, 1e-4], [1 << 24, 1.2e-3], [1 << 26, 4.6e-3]]
+    p = tmp_path / "fabric.json"
+    p.write_text(json.dumps(samples))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    topo = resolve(f"profile:{p}", max(mesh.shape["model"], 2))
+    spec = get("gemma2-2b")
+    shape = [s for s, v in spec.shapes().items()
+             if v["step"] == "train"][0]
+    meta = build_cell(spec, shape, mesh, topology=topo).meta
+    assert meta["topology"][0]["name"] == "measured"
+    assert meta["bottleneck_bandwidth_gbps"] > 1
+    # the priced backward IS the executed backward (one schedule object)
+    assert meta["bwd_mirrored"] is True
+    assert meta["planned_bwd_switches"] == meta["planned_switches"]
+    assert meta["executed_bwd_dims"][:3] == [1, 2, 1]
+    assert "planned_roundtrip_seconds" in meta
+
+
 REPLAN_SCRIPT = r"""
 import jax, jax.numpy as jnp
 import numpy as np
