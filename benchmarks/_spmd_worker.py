@@ -36,9 +36,10 @@ def main():
     x = jax.random.normal(jax.random.PRNGKey(1), (b, t, s, cfg.in_dim))
     tt = jax.random.uniform(jax.random.PRNGKey(2), (b,))
 
+    overlap = cfg_json.get("overlap")    # dsp only: decomposed switches
     if cfg_json.get("grad"):
         fwd = make_spmd_forward(cfg, mesh, mode=mode, backend="ref",
-                                remat=True)
+                                remat=True, overlap=overlap)
 
         def step(p, x, tt):
             def loss(p):
@@ -47,7 +48,8 @@ def main():
             return jax.grad(loss)(p)
         fn = jax.jit(step)
     else:
-        fn = jax.jit(make_spmd_forward(cfg, mesh, mode=mode, backend="ref"))
+        fn = jax.jit(make_spmd_forward(cfg, mesh, mode=mode, backend="ref",
+                                       overlap=overlap))
 
     lowered = fn.lower(params, x, tt)
     compiled = lowered.compile()

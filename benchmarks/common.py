@@ -10,11 +10,12 @@ SRC = os.path.join(HERE, "..", "src")
 
 def spmd_measure(devices: int, mode: str, *, batch=2, temporal=8,
                  spatial=32, layers=4, d_model=128, heads=8, d_ff=256,
-                 modulate=True, grad=False, time_it=False, reps=3):
+                 modulate=True, grad=False, time_it=False, reps=3,
+                 overlap=None):
     cfg = dict(devices=devices, mode=mode, batch=batch, temporal=temporal,
                spatial=spatial, layers=layers, d_model=d_model, heads=heads,
                d_ff=d_ff, modulate=modulate, grad=grad, time=time_it,
-               reps=reps)
+               reps=reps, overlap=overlap)
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")

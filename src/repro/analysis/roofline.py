@@ -300,3 +300,83 @@ def roofline(*, hlo_flops_per_dev: float, hlo_bytes_per_dev: float,
 def extrapolate_depth(f1: float, f2: float, periods: int) -> float:
     """Affine-in-depth extrapolation: cost(T) = f1 + (T-1)*(f2-f1)."""
     return f1 + (periods - 1) * (f2 - f1)
+
+
+# ---------------------------------------------------------------------------
+# Per-stage compute estimate (the overlap planner's hide budget)
+# ---------------------------------------------------------------------------
+
+def stage_flops(stage, cfg) -> float:
+    """Dense-kernel FLOPs of one planner stage (GLOBAL, all devices).
+
+    Derived from the stage's declared activation shape — ``(..., L_i ...,
+    d_model)``, sequence extents in the middle — and the model config's
+    widths, with the standard 2-FLOPs-per-MAC convention the roofline
+    report already uses:
+
+    * a mixer stage (``compute_dims`` non-empty): qkvo projections
+      ``8·T·d²`` plus attention score+value matmuls ``4·T·L·d`` with ``L``
+      the product of the compute-dim extents (the flash-attention kernel's
+      inner length);
+    * a channel stage (``compute_dims`` empty... or rather no sequence dim
+      forbidden beyond the projections): the FFN matmuls ``k·T·d·d_ff``
+      with ``k = 4`` (up+down) or ``6`` for gated MLPs.
+
+    ``T`` is the token count ``prod(shape[:-1])``.  Returns 0.0 when the
+    stage carries no shape or the config lacks ``d_model`` — the planner
+    then treats the boundary as fully exposed, reproducing the synchronous
+    plan.
+    """
+    if stage.shape is None:
+        return 0.0
+    d = getattr(cfg, "d_model", None)
+    if not d:
+        return 0.0
+    tokens = 1
+    for e in stage.shape[:-1]:
+        tokens *= e
+    if stage.compute_dims:
+        length = 1
+        for dim in stage.compute_dims:
+            if dim < len(stage.shape):
+                length *= stage.shape[dim]
+        return 8.0 * tokens * d * d + 4.0 * tokens * length * d
+    d_ff = getattr(cfg, "d_ff", None) or 4 * d
+    gated = "glu" in str(getattr(cfg, "mlp_kind", "")).lower()
+    return (6.0 if gated else 4.0) * tokens * d * d_ff
+
+
+def stage_compute_seconds(stage, cfg, topology=None) -> float:
+    """Per-device kernel seconds of one planner stage — the compute budget
+    an overlapped switch into it can hide behind (``Topology
+    .exposed_seconds``; the ``overlap=`` arguments of ``core.plan``).
+
+    One convention with the roofline report: seconds are
+    ``flops_per_device / PEAK_FLOPS``, exactly ``roofline(...).compute_s``
+    for the same per-device FLOPs.  The stage's tokens divide evenly over
+    the SP group (DSP computes on full sequences with the OTHER dim
+    sharded), so per-device FLOPs are ``stage_flops / topology.size``
+    (``topology=None`` or an int degree are accepted).
+    """
+    f = stage_flops(stage, cfg)
+    if not f:
+        return 0.0
+    if topology is None:
+        n = 1
+    elif isinstance(topology, int):
+        n = max(topology, 1)
+    else:
+        n = topology.size
+    return f / n / PEAK_FLOPS
+
+
+def attach_compute_seconds(stages, cfg, topology=None):
+    """Return the stage list with ``Stage.compute_seconds`` filled from
+    ``stage_compute_seconds`` (stages that already declare one keep it) —
+    what ``models.*.dsp_schedule(overlap=...)`` feeds the overlap-aware
+    planner."""
+    import dataclasses as _dc
+    return [st if st.compute_seconds is not None else
+            _dc.replace(st, compute_seconds=stage_compute_seconds(
+                st, cfg, topology))
+            for st in stages]

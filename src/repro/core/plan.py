@@ -87,6 +87,12 @@ class Stage:
     whose VJP carries extra payload); asymmetric fwd/bwd bytes are what make
     the joint round-trip DP (``plan_joint``) diverge from the mirrored plan.
     See docs/architecture.md §2.4.
+
+    ``compute_seconds`` (optional) is the stage's per-device kernel time
+    (``analysis.roofline.stage_compute_seconds`` /
+    ``attach_compute_seconds``) — the budget an OVERLAPPED switch into this
+    stage can hide behind.  Ignored unless a solver/pricer is called with
+    ``overlap=`` and a topology; plans are bit-for-bit unchanged otherwise.
     """
 
     compute_dims: FrozenSet[int]
@@ -95,6 +101,7 @@ class Stage:
     dtype_bytes: int = 2
     bwd_shape: Optional[Tuple[int, ...]] = None
     bwd_dtype_bytes: Optional[int] = None
+    compute_seconds: Optional[float] = None
 
     def allows(self, dim: int) -> bool:
         return dim not in self.compute_dims
@@ -167,12 +174,62 @@ def transition_seconds(src: Optional[int], tgt: Optional[int],
 
 
 def _transition_cost(src: Optional[int], tgt: Optional[int],
-                     global_bytes: float, n: int, topology) -> float:
+                     global_bytes: float, n: int, topology, *,
+                     hide: float = 0.0) -> float:
     """The ONE edge weight both solvers and all pricers use: Table-2 bytes
-    without a topology, seconds on it otherwise."""
+    without a topology, seconds on it otherwise.  ``hide`` (seconds of
+    kernel compute the edge can overlap with — zero unless the caller plans
+    with ``overlap=``) turns a switch's cost into its EXPOSED seconds,
+    ``max(comm, hide) - hide`` (``Topology.exposed_seconds``)."""
     if topology is None:
         return transition_bytes(src, tgt, global_bytes, n)
+    if hide > 0.0:
+        return topology.exposed_seconds(transition_kind(src, tgt),
+                                        global_bytes, src, tgt,
+                                        compute_seconds=hide)
     return transition_seconds(src, tgt, global_bytes, topology)
+
+
+# executor overlap modes accepted by the ``overlap=`` planner arguments
+# (kept in sync with core.overlap.OVERLAP_MODES without importing jax here)
+_OVERLAP_MODES = (None, "chunked", "double_buffer")
+
+
+def _check_overlap(overlap: Optional[str]) -> None:
+    if overlap not in _OVERLAP_MODES:
+        raise ValueError(f"overlap {overlap!r} not in {_OVERLAP_MODES}")
+
+
+def _hide_seconds(stages: Sequence[Stage], t: int,
+                  overlap: Optional[str]) -> float:
+    """Compute seconds available to hide the switch INTO stage ``t``:
+    the consuming stage's kernel under ``"chunked"`` (shard ``i+1`` streams
+    while the kernel consumes shard ``i``), plus the PRODUCING stage's
+    kernel under ``"double_buffer"`` (the staged hops carry no inter-chunk
+    dependencies, so in a scanned body they hide behind the whole period).
+    Stages without a ``compute_seconds`` estimate contribute nothing — the
+    boundary stays fully exposed."""
+    if overlap is None:
+        return 0.0
+    c = stages[t].compute_seconds or 0.0
+    if overlap == "double_buffer" and t > 0:
+        c += stages[t - 1].compute_seconds or 0.0
+    return c
+
+
+def _bwd_hide_seconds(stages: Sequence[Stage], t: int,
+                      overlap: Optional[str]) -> float:
+    """Hide budget for the cotangent crossing boundary ``t`` BACKWARD, into
+    stage ``t-1``'s backward kernel (its VJP computes along the same dims,
+    for at least as long — the forward estimate is the conservative floor).
+    ``"double_buffer"`` adds the producing stage ``t``'s backward (the loss
+    seam, ``t == len(stages)``, has no producing kernel)."""
+    if overlap is None or t <= 0:
+        return 0.0
+    c = stages[t - 1].compute_seconds or 0.0
+    if overlap == "double_buffer" and t < len(stages):
+        c += stages[t].compute_seconds or 0.0
+    return c
 
 
 def _boundary_bytes(stages: Sequence[Stage], t: int,
@@ -250,7 +307,8 @@ def plan_switches_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
                      *, n: int = 2, initial: Optional[int] = None,
                      final: Optional[int] = None,
                      final_bytes: Optional[float] = None,
-                     topology=None) -> List[int]:
+                     topology=None,
+                     overlap: Optional[str] = None) -> List[int]:
     """Exact minimum-cost plan: DP over (stage, shard_dim).
 
     Transition into stage ``t`` is weighted by the bytes of the activation
@@ -264,22 +322,35 @@ def plan_switches_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
     shard), so the state space stays on ``seq_dims``.  Ties break toward
     keeping the current shard, then the smaller dim, so uniform instances
     reproduce the greedy's plans.
+
+    ``overlap`` ("chunked" | "double_buffer") prices each switch at its
+    EXPOSED seconds — ``max(comm, hide) - hide`` with the hide budget from
+    the consuming stage's ``Stage.compute_seconds`` (``_hide_seconds``) —
+    so the DP prefers hiding a switch behind a long flash-attention stage
+    over a cheap-but-exposed boundary.  Requires a topology to matter
+    (exposure is a seconds concept); with ``overlap=None`` or no
+    ``compute_seconds`` annotations the costs — and hence the plans — are
+    bit-for-bit the synchronous ones.  The exit transition to ``final`` has
+    no consuming kernel and stays fully exposed.
     """
     if not stages:
         return []
     _check_feasible(stages, seq_dims)
+    _check_overlap(overlap)
     dims = list(seq_dims)
     INF = float("inf")
 
     nb0 = _boundary_bytes(stages, 0)
+    h0 = _hide_seconds(stages, 0, overlap)
     cost: Dict[int, float] = {
-        d: (_transition_cost(initial, d, nb0, n, topology)
+        d: (_transition_cost(initial, d, nb0, n, topology, hide=h0)
             if initial is not None else 0.0) if stages[0].allows(d) else INF
         for d in dims}
     back: List[Dict[int, Optional[int]]] = []
 
     for t in range(1, len(stages)):
         nb = _boundary_bytes(stages, t)
+        ht = _hide_seconds(stages, t, overlap)
         ncost: Dict[int, float] = {}
         bp: Dict[int, Optional[int]] = {}
         for d in dims:
@@ -291,7 +362,7 @@ def plan_switches_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
                 c0 = cost[d0]
                 if c0 == INF:
                     continue
-                c = c0 + _transition_cost(d0, d, nb, n, topology)
+                c = c0 + _transition_cost(d0, d, nb, n, topology, hide=ht)
                 # tie-break: prefer keeping the shard, then the smaller dim
                 key = (c, d0 != d, d0)
                 if best_key is None or key < best_key:
@@ -319,20 +390,32 @@ def plan_switches_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
     return plan
 
 
+def _overlap_active(stages: Sequence[Stage], topology,
+                    overlap: Optional[str]) -> bool:
+    """Overlap pricing changes edge weights only when a mode is requested,
+    seconds are being priced (topology given), AND at least one stage has a
+    compute estimate to hide behind — otherwise every hide budget is zero
+    and the costs are the synchronous ones."""
+    return (overlap is not None and topology is not None
+            and any(st.compute_seconds for st in stages))
+
+
 def make_plan(stages: Sequence[Stage], seq_dims: Sequence[int],
               *, n: int = 2, initial: Optional[int] = None,
               final: Optional[int] = None,
               final_bytes: Optional[float] = None,
-              topology=None) -> List[int]:
+              topology=None, overlap: Optional[str] = None) -> List[int]:
     """Dispatch: Belady greedy when it is provably optimal (uniform boundary
     costs — uniform bytes AND a cost-uniform topology — with a free final
-    layout), exact DP otherwise."""
+    layout and no active overlap pricing), exact DP otherwise."""
+    _check_overlap(overlap)
     topo_uniform = topology is None or topology.is_uniform
-    if final is None and topo_uniform and _uniform_cost(stages):
+    if (final is None and topo_uniform and _uniform_cost(stages)
+            and not _overlap_active(stages, topology, overlap)):
         return plan_switches(stages, seq_dims, initial)
     return plan_switches_dp(stages, seq_dims, n=n, initial=initial,
                             final=final, final_bytes=final_bytes,
-                            topology=topology)
+                            topology=topology, overlap=overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -390,11 +473,15 @@ class JointCost:
 
 def _bwd_leg_cost(stages: Sequence[Stage], fwd: Sequence[int],
                   bwd: Sequence[int], *, n: int, initial: Optional[int],
-                  final: Optional[int], topology) -> float:
+                  final: Optional[int], topology,
+                  overlap: Optional[str] = None) -> float:
     """Cost of the cotangent's path: seam -> bwd[T-1] -> ... -> bwd[0] ->
     initial.  The gradient crossing boundary ``t`` is priced at stage
     ``t``'s ``bwd_nbytes`` (same boundary tensor as the forward, in
-    gradient form)."""
+    gradient form).  With ``overlap`` each edge is priced at its exposed
+    seconds against the consuming backward kernel (``_bwd_hide_seconds``);
+    the input-gradient return to ``initial`` has no consumer and stays
+    fully exposed."""
     if not bwd:
         return 0.0
     total = 0.0
@@ -403,10 +490,12 @@ def _bwd_leg_cost(stages: Sequence[Stage], fwd: Sequence[int],
     # when pinned, else wherever the forward ended)
     seam = final if final is not None else fwd[-1]
     total += _transition_cost(seam, bwd[-1], _bwd_boundary_bytes(stages, T - 1),
-                              n, topology)
+                              n, topology,
+                              hide=_bwd_hide_seconds(stages, T, overlap))
     for t in range(T - 1, 0, -1):
         total += _transition_cost(bwd[t], bwd[t - 1],
-                                  _bwd_boundary_bytes(stages, t), n, topology)
+                                  _bwd_boundary_bytes(stages, t), n, topology,
+                                  hide=_bwd_hide_seconds(stages, t, overlap))
     if initial is not None:
         # input gradient returns in the dataloader layout
         total += _transition_cost(bwd[0], initial,
@@ -428,11 +517,13 @@ def _couple_cost(stages: Sequence[Stage], t: int, f: int, b: int,
 def _joint_cost(stages: Sequence[Stage], fwd: Sequence[int],
                 bwd: Sequence[int], *, n: int, initial: Optional[int],
                 final: Optional[int], final_bytes: Optional[float],
-                topology, couple: bool) -> JointCost:
+                topology, couple: bool,
+                overlap: Optional[str] = None) -> JointCost:
     fc = _plan_cost(stages, fwd, n=n, initial=initial, final=final,
-                    final_bytes=final_bytes, topology=topology)
+                    final_bytes=final_bytes, topology=topology,
+                    overlap=overlap)
     bc = _bwd_leg_cost(stages, fwd, bwd, n=n, initial=initial, final=final,
-                       topology=topology)
+                       topology=topology, overlap=overlap)
     cc = 0.0
     if couple:
         for t, (f, b) in enumerate(zip(fwd, bwd)):
@@ -466,13 +557,17 @@ def joint_cost_seconds(stages: Sequence[Stage], plan: JointPlan, topology, *,
                        initial: Optional[int] = None,
                        final: Optional[int] = None,
                        final_bytes: Optional[float] = None,
-                       couple: bool = False) -> JointCost:
+                       couple: bool = False,
+                       overlap: Optional[str] = None) -> JointCost:
     """Price a joint plan's round trip in seconds on a ``Topology`` — the
     objective ``plan_joint`` minimises when a topology is given.  Same
-    arguments as ``joint_cost_bytes``."""
+    arguments as ``joint_cost_bytes``; ``overlap`` prices every switch at
+    its EXPOSED seconds against the consuming kernel's
+    ``Stage.compute_seconds``."""
+    _check_overlap(overlap)
     return _joint_cost(stages, plan.fwd, plan.bwd, n=topology.size,
                        initial=initial, final=final, final_bytes=final_bytes,
-                       topology=topology, couple=couple)
+                       topology=topology, couple=couple, overlap=overlap)
 
 
 def plan_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
@@ -480,7 +575,8 @@ def plan_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
                final: Optional[int] = None,
                final_bytes: Optional[float] = None,
                topology=None, couple: bool = False,
-               require_mirrored: bool = False) -> JointPlan:
+               require_mirrored: bool = False,
+               overlap: Optional[str] = None) -> JointPlan:
     """Solve the round trip exactly: DP over (stage, fwd_dim, bwd_dim).
 
     The forward leg prices boundary transitions exactly as
@@ -515,12 +611,19 @@ def plan_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
         joint DP — for callers whose execution can only run the autodiff
         transpose (scanned model forwards), where a non-mirrored plan
         would be priced but never executed.
+      overlap: price every switch at its EXPOSED seconds — forward edges
+        hide behind the consuming stage's ``compute_seconds``
+        (``_hide_seconds``), backward edges behind the consuming backward
+        kernel (``_bwd_hide_seconds``) — so the round trip prefers
+        boundaries the executor can hide.  No-op without a topology or
+        without compute estimates.
     Returns:
       the optimal ``JointPlan`` (``.mirrored`` when the mirror was kept).
     """
     if not stages:
         return JointPlan((), ())
     _check_feasible(stages, seq_dims)
+    _check_overlap(overlap)
     dims = list(seq_dims)
     T = len(stages)
     INF = float("inf")
@@ -528,12 +631,13 @@ def plan_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
     def cost_args(jp):
         return _joint_cost(stages, jp.fwd, jp.bwd, n=n, initial=initial,
                            final=final, final_bytes=final_bytes,
-                           topology=topology, couple=couple).total
+                           topology=topology, couple=couple,
+                           overlap=overlap).total
 
     # mirrored baseline: the forward-optimal plan, backward retracing it
     mirror_fwd = tuple(plan_switches_dp(
         stages, dims, n=n, initial=initial, final=final,
-        final_bytes=final_bytes, topology=topology))
+        final_bytes=final_bytes, topology=topology, overlap=overlap))
     mirror = JointPlan(mirror_fwd, mirror_fwd)
     if require_mirrored:
         return mirror
@@ -555,7 +659,9 @@ def plan_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
             c = state_couple(0, f, b)
             if initial is not None:
                 c += _transition_cost(initial, f, _boundary_bytes(stages, 0),
-                                      n, topology)
+                                      n, topology,
+                                      hide=_hide_seconds(stages, 0, overlap))
+                # the input gradient's return has no consuming kernel
                 c += _transition_cost(b, initial,
                                       _bwd_boundary_bytes(stages, 0),
                                       n, topology)
@@ -565,6 +671,8 @@ def plan_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
     for t in range(1, T):
         fb = _boundary_bytes(stages, t)
         bb = _bwd_boundary_bytes(stages, t)
+        fh = _hide_seconds(stages, t, overlap)
+        bh = _bwd_hide_seconds(stages, t, overlap)
         ncost: Dict[Tuple[int, int], float] = {}
         bp: Dict[Tuple[int, int], Tuple[int, int]] = {}
         for f1 in dims:
@@ -577,8 +685,8 @@ def plan_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
                 best, arg, best_key = INF, None, None
                 for (f0, b0), c0 in cost.items():
                     c = (c0 + base
-                         + _transition_cost(f0, f1, fb, n, topology)
-                         + _transition_cost(b1, b0, bb, n, topology))
+                         + _transition_cost(f0, f1, fb, n, topology, hide=fh)
+                         + _transition_cost(b1, b0, bb, n, topology, hide=bh))
                     # tie-break: prefer the mirror, then keeping both
                     # shards, then smaller dims — deterministic plans
                     key = (c, f0 != b0, f0 != f1, b0 != b1, f0, b0)
@@ -593,12 +701,18 @@ def plan_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
         stages, T - 1)
     bwd_fbytes = _bwd_boundary_bytes(stages, T - 1)
 
+    seam_hide = _bwd_hide_seconds(stages, T, overlap)
+
     def seam_cost(f, b):
         if final is not None:
+            # forward exit has no consuming kernel; the seam's cotangent
+            # edge hides behind the last stage's backward
             return (_transition_cost(f, final, fbytes, n, topology)
-                    + _transition_cost(final, b, bwd_fbytes, n, topology))
+                    + _transition_cost(final, b, bwd_fbytes, n, topology,
+                                       hide=seam_hide))
         # free seam: the cotangent is created in the forward's exit layout
-        return _transition_cost(f, b, bwd_fbytes, n, topology)
+        return _transition_cost(f, b, bwd_fbytes, n, topology,
+                                hide=seam_hide)
 
     best_state, best_key = None, None
     for (f, b), c in cost.items():
@@ -626,7 +740,8 @@ def brute_force_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
                       n: int = 2, initial: Optional[int] = None,
                       final: Optional[int] = None,
                       final_bytes: Optional[float] = None,
-                      topology=None, couple: bool = False) -> float:
+                      topology=None, couple: bool = False,
+                      overlap: Optional[str] = None) -> float:
     """Exponential exact minimum round-trip cost (test oracle only)."""
     best = None
     for fwd in itertools.product(seq_dims, repeat=len(stages)):
@@ -637,7 +752,8 @@ def brute_force_joint(stages: Sequence[Stage], seq_dims: Sequence[int], *,
                 continue
             c = _joint_cost(stages, fwd, bwd, n=n, initial=initial,
                             final=final, final_bytes=final_bytes,
-                            topology=topology, couple=couple).total
+                            topology=topology, couple=couple,
+                            overlap=overlap).total
             if best is None or c < best:
                 best = c
     if best is None:
@@ -663,17 +779,20 @@ def switch_count(plan: Sequence[int], initial: Optional[int] = None) -> int:
 
 def _plan_cost(stages: Sequence[Stage], plan: Sequence[int],
                *, n: int, initial: Optional[int], final: Optional[int],
-               final_bytes: Optional[float], topology) -> float:
+               final_bytes: Optional[float], topology,
+               overlap: Optional[str] = None) -> float:
     total = 0.0
     prev = initial
     for t, d in enumerate(plan):
         if prev is not None:
             total += _transition_cost(prev, d, _boundary_bytes(stages, t), n,
-                                      topology)
+                                      topology,
+                                      hide=_hide_seconds(stages, t, overlap))
         prev = d
     if final is not None and plan:
         fb = final_bytes if final_bytes is not None else _boundary_bytes(
             stages, len(stages) - 1)
+        # exit to the pinned final layout has no consuming kernel
         total += _transition_cost(prev, final, fb, n, topology)
     return total
 
@@ -691,13 +810,18 @@ def plan_cost_bytes(stages: Sequence[Stage], plan: Sequence[int],
 def plan_cost_seconds(stages: Sequence[Stage], plan: Sequence[int],
                       topology, *, initial: Optional[int] = None,
                       final: Optional[int] = None,
-                      final_bytes: Optional[float] = None) -> float:
+                      final_bytes: Optional[float] = None,
+                      overlap: Optional[str] = None) -> float:
     """Total seconds of a plan on a Topology (alpha+beta collective models)
     — what benchmarks report next to planned bytes, and the objective the
-    topology-aware DP minimises."""
+    topology-aware DP minimises.  With ``overlap`` the result is the plan's
+    EXPOSED seconds (each switch discounted by the consuming stage's
+    ``compute_seconds``); the difference vs ``overlap=None`` is the comm
+    time the executor hides."""
+    _check_overlap(overlap)
     return _plan_cost(stages, plan, n=topology.size, initial=initial,
                       final=final, final_bytes=final_bytes,
-                      topology=topology)
+                      topology=topology, overlap=overlap)
 
 
 def brute_force_plan(stages: Sequence[Stage], seq_dims: Sequence[int],
@@ -719,7 +843,7 @@ def brute_force_cost(stages: Sequence[Stage], seq_dims: Sequence[int],
                      *, n: int = 2, initial: Optional[int] = None,
                      final: Optional[int] = None,
                      final_bytes: Optional[float] = None,
-                     topology=None) -> float:
+                     topology=None, overlap: Optional[str] = None) -> float:
     """Exponential exact minimum cost — bytes, or seconds on ``topology``
     (test oracle only)."""
     best = None
@@ -728,7 +852,7 @@ def brute_force_cost(stages: Sequence[Stage], seq_dims: Sequence[int],
             continue
         c = _plan_cost(stages, assign, n=n, initial=initial,
                        final=final, final_bytes=final_bytes,
-                       topology=topology)
+                       topology=topology, overlap=overlap)
         if best is None or c < best:
             best = c
     if best is None:

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compat
+from repro.core.overlap import ring_stream
 
 NEG_INF = -1e30
 
@@ -43,16 +44,14 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                    scale: Optional[float] = None) -> jax.Array:
     """q, k, v: local (B, S/N, H, D) sharded along the sequence.  Returns the
     local output shard (B, S/N, H, D)."""
-    n = compat.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     b, s_local, h, d = q.shape
     scale = scale if scale is not None else d ** -0.5
-    perm = [(i, (i + 1) % n) for i in range(n)]
     q_pos = idx * s_local + jnp.arange(s_local)
 
-    def body(t, carry):
-        k_blk, v_blk, o, m, l, any_valid = carry
-        src = (idx - t) % n                               # owner of current K/V block
+    def fold(t, src, blocks, carry):
+        k_blk, v_blk = blocks                 # owned by device ``src``
+        o, m, l, any_valid = carry
         k_pos = src * s_local + jnp.arange(s_local)
         o_b, m_b, l_b, dead = _block_attn(q, k_blk, v_blk, q_pos, k_pos, scale, causal)
         # online-softmax merge; dead rows (fully masked block) contribute nothing
@@ -61,11 +60,8 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         c_new = jnp.where(dead, 0.0, jnp.exp(m_b - m_new))
         o = o * c_old[..., None].transpose(0, 2, 1, 3) + o_b * c_new[..., None].transpose(0, 2, 1, 3)
         l = l * c_old + l_b * c_new
-        m = m_new
         any_valid = any_valid | ~dead
-        k_blk = jax.lax.ppermute(k_blk, axis_name, perm)
-        v_blk = jax.lax.ppermute(v_blk, axis_name, perm)
-        return k_blk, v_blk, o, m, l, any_valid
+        return o, m_new, l, any_valid
 
     o0 = jnp.zeros((b, s_local, h, d), jnp.float32)
     m0 = jnp.full((b, h, s_local), NEG_INF, jnp.float32)
@@ -73,10 +69,10 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     valid0 = jnp.zeros((b, h, s_local), bool)
     # mark constant-initialised carries as varying over the ring axis so the
     # scan carry types line up under shard_map's vma tracking
-    o0, m0, l0, valid0 = compat.pvary((o0, m0, l0, valid0), (axis_name,))
-    # fori_loop keeps HLO compact for long rings; unrolled for tiny N is fine too.
-    k_f, v_f, o, m, l, any_valid = jax.lax.fori_loop(
-        0, n, body, (k, v, o0, m0, l0, valid0))
+    carry0 = compat.pvary((o0, m0, l0, valid0), (axis_name,))
+    # the shared chunk/rotate helper (one ppermute hop per K/V block)
+    o, m, l, any_valid = ring_stream((k, v), carry0, fold,
+                                     axis_name=axis_name)
     l = jnp.where(any_valid, l, 1.0)
     out = o / l[..., None].transpose(0, 2, 1, 3)
     return out.astype(q.dtype)

@@ -101,6 +101,14 @@ class Schedule:
     the mirrored default — the backward retraces the forward plan, which is
     exactly what autodiff transposition executes, so pricing helpers treat
     None as ``dims``.  See docs/architecture.md §2.4/§3.3.
+
+    ``overlap`` ("chunked" | "double_buffer" | None) records the executor
+    mode the plan was priced for: switches decompose into per-shard
+    ``ppermute`` hops interleaved with the consuming kernel
+    (``core.overlap.overlapped_switch``).  ``overlap_mode(t)`` selects the
+    mode PER BOUNDARY — only switches whose consuming stage carries a
+    ``compute_seconds`` estimate run overlapped; everything else stays
+    synchronous.  See docs/architecture.md §3.6.
     """
 
     stages: Tuple[Stage, ...]
@@ -109,6 +117,7 @@ class Schedule:
     final: Optional[int] = None
     topology: Optional[object] = None
     bwd_dims: Optional[Tuple[int, ...]] = None
+    overlap: Optional[str] = None
 
     def __post_init__(self):
         assert len(self.stages) == len(self.dims), (len(self.stages),
@@ -116,6 +125,8 @@ class Schedule:
         if self.bwd_dims is not None:
             assert len(self.bwd_dims) == len(self.dims), (len(self.bwd_dims),
                                                           len(self.dims))
+        if self.overlap not in (None, "chunked", "double_buffer"):
+            raise ValueError(f"overlap {self.overlap!r}")
 
     # -- boundary transitions ------------------------------------------------
     def boundary(self, t: int) -> Transition:
@@ -170,12 +181,56 @@ class Schedule:
                    for t in range(len(self.dims) - 1, -1, -1))
         return out
 
+    # -- comm-compute overlap -------------------------------------------------
+    def overlap_mode(self, t: int) -> Optional[str]:
+        """Executor mode for the boundary INTO stage ``t``: the schedule's
+        ``overlap`` mode when that boundary is a switch the consuming stage
+        can hide behind (``Stage.compute_seconds`` attached), else None —
+        the per-boundary selection the planner priced (gathers don't
+        decompose, keeps move nothing, stages without a compute estimate
+        have no hide budget)."""
+        if self.overlap is None:
+            return None
+        if self.boundary(t).kind != "switch":
+            return None
+        if not self.stages[t].compute_seconds:
+            return None
+        return self.overlap
+
+    def exposed_seconds(self, topology=None) -> float:
+        """Planned EXPOSED collective seconds of the forward plan — each
+        switch discounted by the consuming stage's ``compute_seconds``
+        under this schedule's ``overlap`` mode (``== per_device_seconds``
+        when ``overlap`` is None)."""
+        topo = topology if topology is not None else self.topology
+        if topo is None:
+            raise ValueError("exposed_seconds needs a Topology (none was "
+                             "attached at plan time)")
+        return plan_cost_seconds(self.stages, self.dims, topo,
+                                 initial=self.initial, final=self.final,
+                                 overlap=self.overlap)
+
+    def hidden_comm_seconds(self, topology=None) -> float:
+        """Planned comm seconds the executor HIDES behind kernel compute:
+        synchronous cost minus exposed cost (0.0 when ``overlap`` is
+        None)."""
+        topo = topology if topology is not None else self.topology
+        if topo is None:
+            raise ValueError("hidden_comm_seconds needs a Topology (none "
+                             "was attached at plan time)")
+        return self.per_device_seconds(topo) - self.exposed_seconds(topo)
+
     # -- accounting ----------------------------------------------------------
     def n_switches(self) -> int:
         return sum(1 for tr in self.transitions() if tr.kind == "switch")
 
     def expected_collectives(self) -> Dict[str, int]:
-        """HLO collective kind -> count this schedule must compile to."""
+        """HLO collective kind -> count this schedule must compile to.
+
+        Counts the SYNCHRONOUS lowering; a boundary running overlapped
+        (``overlap_mode(t)`` non-None on the explicit backend) lowers its
+        all-to-all to ``n - 1`` ``collective-permute`` ops instead —
+        tests/test_hlo_collectives.py accounts that form directly."""
         counts: Dict[str, int] = {}
         for tr in self.transitions():
             c = tr.collective
@@ -353,7 +408,8 @@ class UnrolledSchedule:
 
 def plan_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
                   n: int = 2, initial: Optional[int] = None,
-                  final: Optional[int] = None, topology=None) -> Schedule:
+                  final: Optional[int] = None, topology=None,
+                  overlap: Optional[str] = None) -> Schedule:
     """Solve the switching plan (``core.plan.make_plan``: Belady greedy on
     uniform costs, exact DP otherwise — in seconds when a Topology is given)
     and wrap it as a Schedule carrying that topology.
@@ -364,20 +420,25 @@ def plan_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
       n: SP degree for byte pricing (ignored when ``topology`` is given).
       initial/final: entry layout and pinned exit layout (None = free).
       topology: price plans in seconds on this mesh model.
+      overlap: executor overlap mode ("chunked" | "double_buffer"); the
+        solver prices each switch at its EXPOSED seconds against the
+        consuming stage's ``compute_seconds`` and the mode travels on the
+        returned schedule for the executor to pick up.
     Returns:
       a ``Schedule`` with a mirrored (autodiff-transposed) backward.
     """
     dims = make_plan(stages, seq_dims, n=n, initial=initial, final=final,
-                     topology=topology)
+                     topology=topology, overlap=overlap)
     return Schedule(tuple(stages), tuple(dims), initial=initial, final=final,
-                    topology=topology)
+                    topology=topology, overlap=overlap)
 
 
 def plan_joint_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
                         n: int = 2, initial: Optional[int] = None,
                         final: Optional[int] = None, topology=None,
                         couple: bool = False,
-                        require_mirrored: bool = False) -> Schedule:
+                        require_mirrored: bool = False,
+                        overlap: Optional[str] = None) -> Schedule:
     """Solve the joint forward+backward round trip
     (``core.plan.plan_joint``) and wrap it as a Schedule.
 
@@ -392,10 +453,11 @@ def plan_joint_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
     """
     jp = plan_joint(stages, seq_dims, n=n, initial=initial, final=final,
                     topology=topology, couple=couple,
-                    require_mirrored=require_mirrored)
+                    require_mirrored=require_mirrored, overlap=overlap)
     return Schedule(tuple(stages), jp.fwd, initial=initial, final=final,
                     topology=topology,
-                    bwd_dims=None if jp.mirrored else jp.bwd)
+                    bwd_dims=None if jp.mirrored else jp.bwd,
+                    overlap=overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -454,18 +516,37 @@ class ScheduleExecutor:
     sequence instead of the autodiff transposition of the forward's.  The
     explicit backend cannot decouple the two (local array shapes pin each
     cotangent to its primal's layout) and rejects non-mirrored schedules.
+
+    COMM-COMPUTE OVERLAP (explicit backend only): with ``overlap`` set —
+    explicitly, or inherited from ``Schedule.overlap`` — every switch whose
+    consuming stage carries a ``compute_seconds`` estimate
+    (``Schedule.overlap_mode``) is issued as
+    ``core.overlap.overlapped_switch``: ``n - 1`` per-shard
+    ``ppermute`` hops with no inter-hop dependencies, free for the compiler
+    to interleave with the consuming kernel, instead of one blocking
+    all-to-all.  The auto backend cannot decompose the all-to-all XLA emits
+    for a sharding constraint (overlap there is up to XLA's collective
+    pipeliner), so an explicit ``overlap=`` argument with ``backend="auto"``
+    is an error while a schedule-carried mode is silently ignored.
     """
 
     def __init__(self, psched: Optional[Union[PeriodicSchedule,
                                               UnrolledSchedule]], *,
                  backend: str, ctx=None, axis_name: str = "model",
-                 batch_dim: int = 0):
+                 batch_dim: int = 0, overlap: Optional[str] = None):
         if backend not in ("explicit", "auto", "null"):
             raise ValueError(backend)
         if backend == "auto" and ctx is None:
             raise ValueError("auto backend needs a ParallelContext")
         if backend != "null" and psched is None:
             raise ValueError(f"{backend} backend needs a schedule")
+        if overlap not in (None, "chunked", "double_buffer"):
+            raise ValueError(f"overlap {overlap!r}")
+        if overlap is not None and backend != "explicit":
+            raise ValueError(
+                "overlap executes on the explicit backend only: the auto "
+                "backend's sharding constraints lower to XLA's own "
+                "all-to-all, which this executor cannot decompose")
         self.psched = psched
         self.backend = backend
         self.ctx = ctx
@@ -473,6 +554,11 @@ class ScheduleExecutor:
         self.batch_dim = batch_dim
         self.unrolled = isinstance(psched, UnrolledSchedule)
         sched = psched.schedule if psched is not None else None
+        # explicit overlap argument wins; otherwise the explicit backend
+        # inherits the mode the planner attached to the schedule
+        if overlap is None and backend == "explicit" and sched is not None:
+            overlap = sched.overlap
+        self.overlap = overlap
         self._planned_bwd = (backend == "auto" and sched is not None
                              and not sched.mirrored)
         if (backend == "explicit" and sched is not None
@@ -508,10 +594,28 @@ class ScheduleExecutor:
             ctx.mesh, ctx.dp_axes, ctx.sp_axis)
         return _planned_constraint(x, fwd_s, bwd_s)
 
-    def apply(self, x, tr: Transition, bwd_tgt: Optional[int] = None):
+    def _overlap_for(self, tr: Transition,
+                     consumer: Optional[int]) -> Optional[str]:
+        """Overlap mode for one applied transition: the executor's mode when
+        the transition is a switch whose consuming stage (``consumer``,
+        index into ``Schedule.stages``) carries a ``compute_seconds``
+        estimate — the same per-boundary selection the planner priced."""
+        if self.overlap is None or self.backend != "explicit":
+            return None
+        if tr.kind != "switch" or consumer is None:
+            return None
+        if not self.psched.schedule.stages[consumer].compute_seconds:
+            return None
+        return self.overlap
+
+    def apply(self, x, tr: Transition, bwd_tgt: Optional[int] = None,
+              consumer: Optional[int] = None):
         """Apply one boundary transition.  ``bwd_tgt`` is the PLANNED layout
         of the cotangent after it crosses this boundary backward (auto
-        backend with a planned-backward schedule only; ignored otherwise)."""
+        backend with a planned-backward schedule only; ignored otherwise).
+        ``consumer`` is the stage index whose kernel consumes the
+        transitioned tensor — it selects the overlap mode for switches
+        (None, e.g. the exit transition, always runs synchronously)."""
         if self.backend == "null":
             return x
         if self.backend == "auto":
@@ -523,6 +627,11 @@ class ScheduleExecutor:
         if tr.kind == "keep":
             return x
         if tr.kind == "switch":
+            mode = self._overlap_for(tr, consumer)
+            if mode is not None:
+                from repro.core.overlap import overlapped_switch
+                return overlapped_switch(x, tr.src, tr.tgt, self.axis_name,
+                                         mode=mode)
             return dsp.dynamic_switch(x, tr.src, tr.tgt, self.axis_name)
         if tr.kind == "split":
             return dsp.split(x, tr.tgt, self.axis_name)
@@ -546,7 +655,7 @@ class ScheduleExecutor:
         # in the dataloader layout
         bwd_tgt = None if bwdp is None else (
             initial if initial is not None else bwdp[0])
-        return self.apply(x, self.psched.enter(), bwd_tgt)
+        return self.apply(x, self.psched.enter(), bwd_tgt, consumer=0)
 
     def boundary(self, x, i: int):
         """Transition into stage ``i`` — in-period index for a periodic
@@ -555,7 +664,7 @@ class ScheduleExecutor:
             return x
         bwdp = self._bwd_plan
         bwd_tgt = None if bwdp is None else bwdp[i - 1]
-        return self.apply(x, self.psched.boundary(i), bwd_tgt)
+        return self.apply(x, self.psched.boundary(i), bwd_tgt, consumer=i)
 
     def wrap(self, x):
         if self.backend == "null":
@@ -565,7 +674,8 @@ class ScheduleExecutor:
                              "iterate boundary(t) over absolute indices")
         bwdp = self._bwd_plan
         bwd_tgt = None if bwdp is None else bwdp[self.psched.period - 1]
-        return self.apply(x, self.psched.wrap(), bwd_tgt)
+        # the wrap feeds the NEXT period's first stage
+        return self.apply(x, self.psched.wrap(), bwd_tgt, consumer=0)
 
     def exit(self, x):
         if self.backend == "null":

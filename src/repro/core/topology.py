@@ -283,6 +283,35 @@ class Topology:
             return self.gather_seconds(nbytes, src)
         raise ValueError(f"unknown primitive {kind!r}")
 
+    def exposed_seconds(self, kind: str, nbytes: float,
+                        src: Optional[int], tgt: Optional[int], *,
+                        compute_seconds: float = 0.0) -> float:
+        """Seconds of one Table-2 primitive that stay EXPOSED when the
+        transition overlaps with ``compute_seconds`` of kernel compute:
+        ``max(comm, compute) - compute``.
+
+        Only switches decompose into per-shard ``ppermute`` chunks
+        (``core.overlap.overlapped_switch``), so only they hide; gathers and
+        the free kinds price as ``transition_seconds``.  With
+        ``compute_seconds=0`` this IS ``transition_seconds`` — the overlap-
+        aware planner (``core.plan``, ``overlap=`` arguments) reduces to the
+        synchronous cost model whenever no compute estimate is attached.
+
+        Args:
+          kind: "keep" | "split" | "switch" | "gather".
+          nbytes: global tensor bytes (M).
+          src/tgt: logical dims involved (select the placement groups).
+          compute_seconds: kernel seconds the transition can hide behind
+            (per-stage estimates come from
+            ``analysis.roofline.stage_compute_seconds``).
+        Returns:
+          exposed seconds (>= 0).
+        """
+        comm = self.transition_seconds(kind, nbytes, src, tgt)
+        if kind != "switch" or compute_seconds <= 0.0:
+            return comm
+        return max(comm, compute_seconds) - compute_seconds
+
     # -- elastic resize ------------------------------------------------------
 
     def resized(self, n: int) -> "Topology":

@@ -198,6 +198,12 @@ def main():
                          "[global_bytes, seconds] all-gather samples fitted "
                          "by Topology.from_profile); default flat ICI.  The "
                          "fitted fabric is recorded in each cell meta")
+    ap.add_argument("--overlap", default=None,
+                    choices=["chunked", "double_buffer"],
+                    help="price plans overlap-aware (switches discounted by "
+                         "the consuming stage's roofline compute) and record "
+                         "overlap_mode / planned_exposed_seconds / "
+                         "hidden_comm_seconds in each DSP cell meta")
     args = ap.parse_args()
 
     if args.list:
@@ -220,7 +226,7 @@ def main():
         try:
             rec = run_cell(arch, shape, multi_pod=args.multi_pod,
                            depth_extras=not args.no_depth,
-                           topology=args.topology,
+                           topology=args.topology, overlap=args.overlap,
                            hlo_path=path.replace(".json", ".hlo.gz"))
             with open(path, "w") as fh:
                 json.dump(rec, fh, indent=1)

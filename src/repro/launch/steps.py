@@ -102,6 +102,19 @@ def _record_roundtrip(meta: Dict[str, Any], schedule, sp: int) -> None:
         meta["planned_roundtrip_seconds"] = rs.total
 
 
+def _record_overlap(meta: Dict[str, Any], schedule) -> None:
+    """Record the comm-compute overlap the plan was priced for:
+    ``overlap_mode`` (None = synchronous switches), the plan's
+    ``planned_exposed_seconds`` (comm left on the critical path after
+    hiding) and ``hidden_comm_seconds`` (comm the executor overlaps with
+    kernel compute) — next to the planned-bytes fields, so dry-run metas
+    show exactly how much of the priced communication is hidden."""
+    meta["overlap_mode"] = schedule.overlap
+    if schedule.topology is not None:
+        meta["planned_exposed_seconds"] = schedule.exposed_seconds()
+        meta["hidden_comm_seconds"] = schedule.hidden_comm_seconds()
+
+
 def _abstract(fn, *args):
     """eval_shape with configs closed over (static); array trees as args."""
     return jax.eval_shape(fn, *args)
@@ -136,7 +149,8 @@ def build_lm_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
                   opt_cfg: Optional[OptConfig] = None,
                   fused_switch: bool = True,
                   remat: bool = True, remat_policy: str = "full",
-                  grad_barrier: bool = False, topology=None) -> Cell:
+                  grad_barrier: bool = False, topology=None,
+                  overlap: Optional[str] = None) -> Cell:
     cfg, plan = spec.config, spec.plan
     shp = spec.shapes()[shape_name]
     seq, batch, kind = shp["seq"], shp["batch"], shp["step"]
@@ -153,11 +167,13 @@ def build_lm_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
         topo = topology if topology is not None else mesh_topology(mesh,
                                                                    "ici")
         schedule = LM.dsp_schedule(cfg, sp, seq=seq, batch=batch,
-                                   topology=topo, joint=(kind == "train"))
+                                   topology=topo, joint=(kind == "train"),
+                                   overlap=overlap)
         meta["planned_switches"] = schedule.n_switches()
         meta["planned_comm_bytes"] = schedule.per_device_bytes(sp)
         meta["planned_comm_seconds"] = schedule.per_device_seconds()
         meta.update(topology_meta(topo))
+        _record_overlap(meta, schedule)
         if kind == "train":
             _record_roundtrip(meta, schedule, sp)
     sharder = make_sharder(mesh, plan, schedule=schedule)
@@ -279,7 +295,7 @@ def build_lm_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
 def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
                       opt_cfg: Optional[OptConfig] = None,
                       fused_switch: bool = True, remat: bool = True,
-                      topology=None) -> Cell:
+                      topology=None, overlap: Optional[str] = None) -> Cell:
     cfg, plan = spec.config, spec.plan
     shp = spec.shapes()[shape_name]
     seq, batch, kind = shp["seq"], shp["batch"], shp["step"]
@@ -293,11 +309,13 @@ def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
                                                                    "ici")
         schedule = ED.dsp_schedule(cfg, sp, s_enc=seq, s_dec=s_dec,
                                    batch=batch, topology=topo,
-                                   joint=(kind == "train"))
+                                   joint=(kind == "train"),
+                                   overlap=overlap)
         meta["planned_switches"] = schedule.n_switches()
         meta["planned_comm_bytes"] = schedule.per_device_bytes(sp)
         meta["planned_comm_seconds"] = schedule.per_device_seconds()
         meta.update(topology_meta(topo))
+        _record_overlap(meta, schedule)
         if kind == "train":
             _record_roundtrip(meta, schedule, sp)
     sharder = make_sharder(mesh, plan, schedule=schedule)
@@ -378,7 +396,7 @@ def build_encdec_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
 def build_t2d_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
                    opt_cfg: Optional[OptConfig] = None,
                    mode: str = "dsp", remat: bool = True,
-                   topology=None) -> Cell:
+                   topology=None, overlap: Optional[str] = None) -> Cell:
     cfg, plan = spec.config, spec.plan
     shp = spec.shapes()[shape_name]
     t_len, s_len, batch = shp["temporal"], shp["spatial"], shp["batch"]
@@ -421,11 +439,13 @@ def build_t2d_cell(spec: ArchSpec, shape_name: str, mesh: Mesh, *,
         topo = topology if topology is not None else mesh_topology(mesh,
                                                                    "ici")
         psched = T2D.dsp_schedule(cfg, sp, t_len=t_len, s_len=s_len,
-                                  batch=batch, topology=topo, joint=True)
+                                  batch=batch, topology=topo, joint=True,
+                                  overlap=overlap)
         meta["planned_switches"] = psched.schedule.n_switches()
         meta["planned_comm_bytes"] = psched.schedule.per_device_bytes(sp)
         meta["planned_comm_seconds"] = psched.schedule.per_device_seconds()
         meta.update(topology_meta(topo))
+        _record_overlap(meta, psched.schedule)
         _record_roundtrip(meta, psched.schedule, sp)
 
     def train_step(params, opt_state, b):

@@ -72,7 +72,7 @@ def dsp_schedule(cfg: EncDecConfig, n: int, *, s_enc: Optional[int] = None,
                  batch: Optional[int] = None, topology=None,
                  joint: bool = False,
                  grad_dtype_bytes: Optional[int] = None,
-                 bwd_dims=None) -> Schedule:
+                 bwd_dims=None, overlap: Optional[str] = None) -> Schedule:
     """Solve the switching plan over the full enc-dec stage graph (enter
     sequence-sharded, exit sequence-sharded for the loss).  ``topology``
     prices the plan in seconds on the mesh's links; ``joint=True`` plans the
@@ -85,15 +85,22 @@ def dsp_schedule(cfg: EncDecConfig, n: int, *, s_enc: Optional[int] = None,
     ``models.lm.dsp_schedule`` it deliberately skips the planner's
     ``Stage.allows`` feasibility check (this graph is dim-forced, so every
     non-mirrored plan is infeasible in the cost model's sense — parity
-    holds regardless, executed collectives may exceed the priced leg)."""
+    holds regardless, executed collectives may exceed the priced leg).
+    ``overlap`` attaches roofline compute estimates and prices switches at
+    their exposed seconds (see ``models.lm.dsp_schedule``)."""
     st = stages(cfg, s_enc=s_enc, s_dec=s_dec, batch=batch,
                 grad_dtype_bytes=grad_dtype_bytes)
+    if overlap is not None:
+        from repro.analysis.roofline import attach_compute_seconds
+        st = attach_compute_seconds(
+            st, cfg, topology if topology is not None else max(n, 1))
     if joint:
         sched = plan_joint_schedule(st, (1, 2), n=max(n, 1), initial=1,
-                                    final=1, topology=topology)
+                                    final=1, topology=topology,
+                                    overlap=overlap)
     else:
         sched = plan_schedule(st, (1, 2), n=max(n, 1), initial=1, final=1,
-                              topology=topology)
+                              topology=topology, overlap=overlap)
     if bwd_dims is not None:
         bwd_dims = tuple(bwd_dims)
         if len(bwd_dims) != len(st):

@@ -178,7 +178,7 @@ def dsp_schedule(cfg: LMConfig, n: int, *, seq: Optional[int] = None,
                  batch: Optional[int] = None, topology=None,
                  joint: bool = False,
                  grad_dtype_bytes: Optional[int] = None,
-                 bwd_dims=None) -> Schedule:
+                 bwd_dims=None, overlap: Optional[str] = None) -> Schedule:
     """Solve the switching plan (enter sequence-sharded from the dataloader
     split, return to it for the loss) and validate it is scan-periodic.
     ``topology`` prices the plan in seconds on the mesh's links (byte model
@@ -199,21 +199,32 @@ def dsp_schedule(cfg: LMConfig, n: int, *, seq: Optional[int] = None,
     gradients stay bit-identical regardless (the constraints are layout
     only), but the executed collectives of a forced plan may exceed what
     the pricing assumes (XLA inserts the intra-stage reshards the cost
-    model would have charged a feasible plan nothing for)."""
+    model would have charged a feasible plan nothing for).
+
+    ``overlap`` attaches roofline compute estimates to the stages, prices
+    switches at their exposed seconds, and stamps the mode on the schedule
+    (the explicit executor then streams each switch as per-shard
+    ``ppermute`` hops; docs/architecture.md §3.6)."""
     st = stages(cfg, seq=seq, batch=batch, grad_dtype_bytes=grad_dtype_bytes)
+    if overlap is not None:
+        from repro.analysis.roofline import attach_compute_seconds
+        st = attach_compute_seconds(
+            st, cfg, topology if topology is not None else max(n, 1))
     period = stage_period(cfg)
     if joint:
         sched = plan_joint_schedule(st, (1, 2), n=max(n, 1), initial=1,
-                                    final=1, topology=topology)
+                                    final=1, topology=topology,
+                                    overlap=overlap)
         try:
             sched.periodic(period)
         except ValueError:
             sched = plan_joint_schedule(st, (1, 2), n=max(n, 1), initial=1,
                                         final=1, topology=topology,
-                                        require_mirrored=True)
+                                        require_mirrored=True,
+                                        overlap=overlap)
     else:
         sched = plan_schedule(st, (1, 2), n=max(n, 1), initial=1, final=1,
-                              topology=topology)
+                              topology=topology, overlap=overlap)
     if bwd_dims is not None:
         bwd_dims = tuple(bwd_dims)
         if len(bwd_dims) == period:
@@ -396,25 +407,21 @@ def sharded_embed(params, tokens, cfg: LMConfig, sharder: Sharder):
         dp = None                      # batch=1 decode: replicate batch
     seq_shard = tokens.shape[1] % sp == 0 and tokens.shape[1] > 1
     chunk = vocab // sp
-    perm = [(i, (i + 1) % sp) for i in range(sp)]
 
     def local(tbl, tok):
-        idx = jax.lax.axis_index("model")
+        from repro.core.overlap import ring_stream
 
-        def body(i, carry):
-            tbl_c, acc = carry
-            src = (idx - i) % sp              # owner of the held chunk
+        def fold(i, src, tbl_c, acc):
+            # ``src`` owns the held table chunk: gather the tokens that
+            # fall in its vocab range, mask the rest
             rel = tok - src * chunk
             ok = (rel >= 0) & (rel < chunk)
             e = jnp.take(tbl_c, jnp.clip(rel, 0, chunk - 1), axis=0)
-            acc = acc + jnp.where(ok[..., None], e, 0)
-            tbl_c = jax.lax.ppermute(tbl_c, "model", perm)
-            return tbl_c, acc
+            return acc + jnp.where(ok[..., None], e, 0)
 
         acc0 = jnp.zeros(tok.shape + (d,), tbl.dtype)
         acc0 = compat.pvary(acc0, ("model",))
-        _, acc = jax.lax.fori_loop(0, sp, body, (tbl, acc0))
-        return acc
+        return ring_stream(tbl, acc0, fold, axis_name="model")
 
     tok_spec = P(dp, "model") if seq_shard else P(dp, None)
     out_spec = P(dp, "model", None) if seq_shard else P(dp, None, None)

@@ -153,7 +153,8 @@ def stages(cfg: T2DConfig, *, t_len: Optional[int] = None,
 def dsp_schedule(cfg: T2DConfig, n: int, *, t_len: Optional[int] = None,
                  s_len: Optional[int] = None, batch: Optional[int] = None,
                  initial: int = 1, topology=None, joint: bool = False,
-                 grad_dtype_bytes: Optional[int] = None):
+                 grad_dtype_bytes: Optional[int] = None,
+                 overlap: Optional[str] = None):
     """Solve the switching plan for this model (enter sharded on T, return
     to T for the loss/head).  Returns the scan-body ``PeriodicSchedule``
     when the plan repeats with the 2-stage layer period, else the
@@ -169,12 +170,22 @@ def dsp_schedule(cfg: T2DConfig, n: int, *, t_len: Optional[int] = None,
     sequence dims and each stage forbidding one, excluding either leaves
     some stage infeasible — non-divisible extents are instead handled
     downstream (the auto path pads; the explicit path rejects them in
-    ``dynamic_switch``)."""
+    ``dynamic_switch``).
+
+    ``overlap`` ("chunked" | "double_buffer") attaches per-stage roofline
+    compute estimates (``analysis.roofline.attach_compute_seconds``), has
+    the solver price switches at their EXPOSED seconds, and stamps the mode
+    on the schedule so the explicit executor decomposes each planned switch
+    into compute-interleaved ``ppermute`` hops."""
     st = stages(cfg, t_len=t_len, s_len=s_len, batch=batch,
                 grad_dtype_bytes=grad_dtype_bytes)
+    if overlap is not None:
+        from repro.analysis.roofline import attach_compute_seconds
+        st = attach_compute_seconds(
+            st, cfg, topology if topology is not None else max(n, 1))
     solve = plan_joint_schedule if joint else plan_schedule
     sched = solve(st, [1, 2], n=max(n, 1), initial=initial, final=initial,
-                  topology=topology)
+                  topology=topology, overlap=overlap)
     try:
         return sched.periodic(2)
     except ValueError:
@@ -372,7 +383,8 @@ def _megatron_block(p, x, cfg: T2DConfig, *, axis: int, t_emb=None,
 def forward(params, x, t, cfg: T2DConfig, *, mesh: Optional[Mesh] = None,
             mode: str = "dsp", backend: str = "pallas", remat: bool = True,
             remat_group: int = 2, t_offset=0, s_offset=0,
-            topology=None, joint: bool = False, schedule=None):
+            topology=None, joint: bool = False, schedule=None,
+            overlap: Optional[str] = None):
     """Compiler-path forward.  x: (B, T, S, C_in) global; with a mesh given,
     the planned DSP schedule (``dsp_schedule``) drives every stage-boundary
     layout change through the auto-backend ScheduleExecutor; XLA lowers each
@@ -383,7 +395,14 @@ def forward(params, x, t, cfg: T2DConfig, *, mesh: Optional[Mesh] = None,
     the backward runs its own planned switch sequence.  ``schedule``
     overrides the solved plan with a caller-provided ``PeriodicSchedule`` /
     ``UnrolledSchedule``; non-periodic (unrolled) schedules python-unroll
-    the layer loop instead of scanning."""
+    the layer loop instead of scanning.
+
+    ``overlap`` makes the PLAN overlap-aware (exposed-seconds pricing; the
+    mode and hide budgets land on the schedule for metas/benchmarks) but
+    this auto path still emits sharding constraints — decomposed,
+    compute-interleaved switches need the explicit backend
+    (``make_spmd_forward(..., overlap=...)``); here any hiding is up to
+    XLA's collective pipeliner."""
     ex = ScheduleExecutor.null()
     fold_hook = None
     stage_hook = None
@@ -393,7 +412,8 @@ def forward(params, x, t, cfg: T2DConfig, *, mesh: Optional[Mesh] = None,
         ctx = from_mesh(mesh)
         psched = schedule if schedule is not None else dsp_schedule(
             cfg, ctx.sp_size, t_len=x.shape[1], s_len=x.shape[2],
-            batch=x.shape[0], topology=topology, joint=joint)
+            batch=x.shape[0], topology=topology, joint=joint,
+            overlap=overlap)
         ex = ScheduleExecutor(psched, backend="auto", ctx=ctx)
 
         def fold_hook(y):
@@ -503,12 +523,17 @@ def t2d_loss(params, batch, cfg: T2DConfig, **kw):
 
 def make_spmd_forward(cfg: T2DConfig, mesh: Mesh, *, mode: str = "dsp",
                       axis_name: str = "model", backend: str = "ref",
-                      remat: bool = False):
+                      remat: bool = False, overlap: Optional[str] = None):
     """Build jit-able forward(params, x, t) where x: (B, T, S, C_in) global.
 
     mode in {"dsp", "ulysses", "ulysses_fused", "ring", "megatron"}.
     Sequence parallel over ``axis_name`` (T enters sharded); batch over the
     remaining axes.  Collective counts/volumes match paper Table 3.
+
+    ``overlap`` (dsp mode only) runs every planned switch through
+    ``core.overlap.overlapped_switch``: n-1 independent per-shard
+    ``ppermute`` hops the compiler interleaves with the consuming block's
+    kernels, instead of one blocking all-to-all.
     """
     dp_axes = tuple(a for a in mesh.axis_names if a != axis_name)
     dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
@@ -528,7 +553,8 @@ def make_spmd_forward(cfg: T2DConfig, mesh: Mesh, *, mode: str = "dsp",
             # the SAME planned schedule as the auto path, explicit backend:
             # transitions are the paper's collectives inside shard_map
             psched = dsp_schedule(cfg, n, t_len=x.shape[1] * n,
-                                  s_len=x.shape[2], batch=x.shape[0])
+                                  s_len=x.shape[2], batch=x.shape[0],
+                                  overlap=overlap)
             ex = ScheduleExecutor(psched, backend="explicit",
                                   axis_name=axis_name)
 

@@ -5,6 +5,11 @@ Runs with XLA_FLAGS=--xla_force_host_platform_device_count=8; compiles
 * the transformer2d DSP forward through BOTH executor backends (auto
   constraints under jit, explicit collectives inside shard_map) plus a bare
   ``split``,
+* the explicit DSP forward under ``overlap="chunked"|"double_buffer"``:
+  every planned switch decomposes into n-1 independent collective-permute
+  hops (zero all-to-all), no permute depends on another permute without
+  kernel compute between them, and output/grad stay bitwise equal to the
+  synchronous executor,
 * the scanned t2d TRAIN step (loss + grad) on both backends — the mirrored
   joint plan, the per-leg control case,
 * a synthetic scanned executor program (free stages, ``lax.scan``) under a
@@ -26,6 +31,66 @@ def _counts(parse, fn, *args):
     txt = jax.jit(fn).lower(*args).compile().as_text()
     st = parse(txt)
     return {k: int(v) for k, v in st.by_kind_count.items()}
+
+
+def _instructions(lines):
+    """(name, opcode, operand-names) per instruction of one computation."""
+    import re
+    out = []
+    for ln in lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+                     r"(?:\([^=]*?\)|\S+)\s+([\w\-]+)\((.*)\)", ln)
+        if not m:
+            continue
+        name, op, rest = m.groups()
+        # strip shapes/attrs so top-level commas separate operands
+        rest = re.sub(r"\[[^\]]*\]|\{[^}]*\}", "", rest)
+        operands = []
+        for chunk in rest.split(","):
+            if "=" in chunk:          # index=0, direction=LT, to_apply=...
+                continue
+            toks = chunk.split()
+            if toks:
+                operands.append(toks[-1].lstrip("%"))
+        out.append((name, op, operands))
+    return out
+
+
+def _bare_permute_chains(hlo: str) -> int:
+    """Collective-permute pairs serialized WITHOUT kernel compute between
+    them: walk each permute's operands backwards through data-movement ops
+    only (slice / reshape / copy / tuple / ...), stopping at anything
+    opaque (fusion, dot, while, parameter, ...).  0 means every
+    permute->permute dependency path crosses kernel compute — the
+    structural form of "the hops span the kernel" on a backend that lowers
+    collectives synchronously (CPU emits no -start/-done pairs to inspect),
+    which is what lets the async pipeliner stream shard i+1 while the
+    kernel consumes shard i."""
+    from repro.analysis.roofline import _split_computations
+    stop = {"fusion", "dot", "convolution", "while", "parameter",
+            "constant", "iota", "custom-call", "call", "conditional",
+            "all-reduce", "all-gather", "all-to-all", "reduce-scatter",
+            "reduce", "scatter", "gather", "sort", "rng",
+            "rng-bit-generator"}
+    bad = 0
+    for lines in _split_computations(hlo).values():
+        defs = {name: (op, ops) for name, op, ops in _instructions(lines)}
+        for name, (op, operands) in defs.items():
+            if op not in ("collective-permute", "collective-permute-start"):
+                continue
+            seen, stack = set(), list(operands)
+            while stack:
+                nm = stack.pop()
+                if nm in seen or nm not in defs:
+                    continue
+                seen.add(nm)
+                kind, ops = defs[nm]
+                if kind in ("collective-permute",
+                            "collective-permute-start"):
+                    bad += 1
+                elif kind == "collective-permute-done" or kind not in stop:
+                    stack.extend(ops)
+    return bad
 
 
 def main():
@@ -70,6 +135,48 @@ def main():
         lambda y: dsp_split(y, 1), mesh=mesh,
         in_specs=P(None, None), out_specs=P(None, "model"))
     split_counts = counts(split_fn, jnp.zeros((4, 8), jnp.float32))
+
+    # ---- overlapped switches (PR 6): decomposed permutes + parity ---------
+    n_model = mesh.shape["model"]
+    sync_fn = make_spmd_forward(cfg, mesh, mode="dsp", backend="ref")
+
+    def auto_fn(p, xx, ttt):
+        return forward(p, xx, ttt, cfg, mesh=mesh, mode="dsp",
+                       backend="ref", remat=False)
+
+    y_sync = jax.jit(sync_fn)(params, x, tt)
+    y_auto = jax.jit(auto_fn)(params, x, tt)
+
+    def mse(fn):
+        def loss(p):
+            err = fn(p, x, tt).astype(jnp.float32) - x.astype(jnp.float32)
+            return jnp.mean(err ** 2)
+        return loss
+
+    g_sync = jax.jit(jax.grad(mse(sync_fn)))(params)
+
+    def bitwise(a, b):
+        leaves = jax.tree_util.tree_leaves(
+            jax.tree_util.tree_map(lambda u, v: bool((u == v).all()), a, b))
+        return all(leaves)
+
+    overlap = {"n_shards": n_model,
+               "planned_switches": planned["all-to-all"]}
+    for m in ("chunked", "double_buffer"):
+        ofn = make_spmd_forward(cfg, mesh, mode="dsp", backend="ref",
+                                overlap=m)
+        txt = jax.jit(ofn).lower(params, x, tt).compile().as_text()
+        st = parse_data_collectives(txt)
+        g_ov = jax.jit(jax.grad(mse(ofn)))(params)
+        overlap[m] = {
+            "counts": {k: int(v) for k, v in st.by_kind_count.items()},
+            "serialized_pairs": _bare_permute_chains(txt),
+            "fwd_bitwise_vs_explicit": bitwise(jax.jit(ofn)(params, x, tt),
+                                               y_sync),
+            "fwd_bitwise_vs_auto": bitwise(jax.jit(ofn)(params, x, tt),
+                                           y_auto),
+            "grad_bitwise_vs_explicit": bitwise(g_ov, g_sync),
+        }
 
     # ---- scanned t2d TRAIN step: per-leg counts, mirrored joint control ---
     batch = {"x": x, "t": None, "target": x}
@@ -174,6 +281,7 @@ def main():
         "explicit": explicit,
         "split": split_counts,
         "n_periods": cfg.n_layers // 2,
+        "overlap": overlap,
         "t2d_train": t2d_train,
         "synthetic": synthetic,
         "lm_train": lm_train,

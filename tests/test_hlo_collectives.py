@@ -14,6 +14,12 @@ custom_vjp backward), with counts matching
 step the planned backward provably reaches the compiler (forward leg
 invariant, backward leg changes with the plan).
 
+PR 6 adds the comm-compute overlap contract: under
+``overlap="chunked"|"double_buffer"`` each planned switch lowers to n-1
+independent collective-permute hops (zero all-to-all) that span the
+consuming kernel's compute, with output AND gradient parity pinned bitwise
+against the synchronous executor.
+
 Runs the compile in a subprocess with 8 simulated CPU devices so the main
 pytest process keeps its 1-device default (same pattern as
 tests/test_multidevice.py).
@@ -109,6 +115,46 @@ def test_synthetic_scan_planned_backward_per_leg_counts(hlo_counts):
     syn = hlo_counts["synthetic"]
     assert _a2a(syn["swapped"]["planned_bwd"]) != \
         _a2a(syn["mirrored"]["planned_bwd"])
+
+
+# ---------------------------------------------------------------------------
+# Comm-compute overlap contract (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_overlap_lowers_switches_to_permute_hops(hlo_counts):
+    """Under overlap mode every planned switch decomposes into exactly n-1
+    collective-permute hops and NO bare all-to-all survives — both modes."""
+    ov = hlo_counts["overlap"]
+    want = (ov["n_shards"] - 1) * ov["planned_switches"]
+    for mode in ("chunked", "double_buffer"):
+        c = ov[mode]["counts"]
+        assert c.get("all-to-all", 0) == 0, (mode, c)
+        assert c.get("collective-permute", 0) == want, (mode, c, want)
+        assert c.get("all-gather", 0) == 0, (mode, c)
+
+
+def test_overlap_permutes_span_kernel_compute(hlo_counts):
+    """The hops are schedulable ACROSS the consuming kernel: no permute's
+    operands reach another permute through data-movement ops alone — every
+    permute->permute dependency path crosses kernel compute (fusion/dot).
+    This is the structural spanning contract on a backend that lowers
+    collectives synchronously; an async backend pipelines exactly these
+    independent hops behind the kernel."""
+    ov = hlo_counts["overlap"]
+    for mode in ("chunked", "double_buffer"):
+        assert ov[mode]["serialized_pairs"] == 0, (mode, ov[mode])
+
+
+def test_overlap_parity_is_bitwise(hlo_counts):
+    """Decomposed switches are numerically FREE: outputs bitwise equal to
+    both the synchronous explicit executor and the auto path, gradients
+    bitwise equal to the synchronous executor's."""
+    ov = hlo_counts["overlap"]
+    for mode in ("chunked", "double_buffer"):
+        case = ov[mode]
+        assert case["fwd_bitwise_vs_explicit"], (mode, case)
+        assert case["fwd_bitwise_vs_auto"], (mode, case)
+        assert case["grad_bitwise_vs_explicit"], (mode, case)
 
 
 def test_scanned_lm_train_planned_backward_reaches_compiler(hlo_counts):

@@ -1,0 +1,311 @@
+"""Overlap-aware planning (comm-compute overlap, ISSUE PR 6).
+
+Pure planner/pricing tests — no devices needed.  Three contracts:
+
+  1. ``overlap=None`` (or no compute estimates, or no topology) reproduces
+     today's plans BIT-FOR-BIT: attaching ``Stage.compute_seconds`` and
+     threading ``overlap`` through every solver is free until both a mode
+     and a fabric are in play.
+  2. With a mode + fabric + compute estimates, switches are priced at their
+     EXPOSED seconds (``max(comm, hide) - hide``) and the DP provably moves
+     a switch point the byte/sync DP would not: behind a long
+     flash-attention stage, even when that boundary moves more bytes — on
+     flat ICI and on the ICIxDCN fabric.
+  3. ``Schedule`` / ``ScheduleExecutor`` select the mode per boundary the
+     way the planner priced it, and reject modes the backend cannot run.
+
+The executor's numerics (decomposed ppermute switches are bitwise identical
+to ``all_to_all``) are pinned under real devices in
+tests/test_hlo_collectives.py.
+"""
+import random
+
+import pytest
+
+from repro.core.plan import (Stage, brute_force_cost, brute_force_joint,
+                             joint_cost_seconds, make_plan, plan_cost_bytes,
+                             plan_cost_seconds, plan_joint, plan_switches_dp)
+from repro.core.schedule import Schedule, ScheduleExecutor, plan_schedule
+from repro.core.topology import Topology
+
+DIMS = [1, 2]
+
+
+def _ici():
+    return Topology.flat_ici(8)
+
+
+def _ici_dcn():
+    # 2 hosts x 4 chips; dims 2 and 3 live on the intra-host ICI ring, dim 1
+    # spans the DCN seam — switches touching dim 1 cross DCN
+    return Topology.multihost(2, 4, placement={2: ("ici",), 3: ("ici",)})
+
+
+def _random_instances(seed=0, count=150):
+    """(stages, dims, initial, final) with compute_seconds attached to a
+    random subset of stages (None / 0.0 / positive)."""
+    rng = random.Random(seed)
+    for _ in range(count):
+        n_stages = rng.randint(1, 6)
+        stages = []
+        for _ in range(n_stages):
+            forbid = {d for d in DIMS if rng.random() < 0.3}
+            if len(forbid) == len(DIMS):
+                forbid.discard(rng.choice(DIMS))
+            shape = (2, rng.choice((4, 64, 1024)), 8, 16)
+            cs = rng.choice((None, 0.0, rng.random() * 1e-4))
+            stages.append(Stage(frozenset(forbid), shape=shape,
+                                compute_seconds=cs))
+        initial = rng.choice([None] + DIMS)
+        final = rng.choice([None] + DIMS)
+        yield stages, initial, final
+
+
+def _strip_compute(stages):
+    import dataclasses
+    return [dataclasses.replace(st, compute_seconds=None) for st in stages]
+
+
+# ---------------------------------------------------------------------------
+# Topology.exposed_seconds math
+# ---------------------------------------------------------------------------
+
+def test_exposed_seconds_math():
+    topo = _ici()
+    nb = 1e6
+    sync = topo.transition_seconds("switch", nb, 1, 2)
+    assert sync > 0.0
+    # no hide budget -> fully exposed
+    assert topo.exposed_seconds("switch", nb, 1, 2) == sync
+    assert topo.exposed_seconds("switch", nb, 1, 2,
+                                compute_seconds=0.0) == sync
+    # partial hide -> comm - compute
+    assert topo.exposed_seconds("switch", nb, 1, 2,
+                                compute_seconds=sync / 4) == pytest.approx(
+        sync * 0.75)
+    # kernel longer than the wire -> fully hidden, never negative
+    assert topo.exposed_seconds("switch", nb, 1, 2,
+                                compute_seconds=10 * sync) == 0.0
+    # only switches decompose: gathers stay fully exposed, keeps are free
+    g = topo.transition_seconds("gather", nb, 1, None)
+    assert topo.exposed_seconds("gather", nb, 1, None,
+                                compute_seconds=10 * g) == g
+    assert topo.exposed_seconds("keep", nb, 1, 1, compute_seconds=1.0) == 0.0
+
+
+def test_invalid_overlap_mode_rejected_everywhere():
+    stages = [Stage(frozenset({1}), shape=(2, 4, 8, 16))]
+    topo = _ici()
+    with pytest.raises(ValueError):
+        make_plan(stages, DIMS, topology=topo, overlap="bogus")
+    with pytest.raises(ValueError):
+        plan_cost_seconds(stages, [2], topo, overlap="bogus")
+    with pytest.raises(ValueError):
+        plan_joint(stages, DIMS, topology=topo, overlap="bogus")
+    with pytest.raises(ValueError):
+        Schedule((Stage(frozenset()),), (1,), overlap="bogus")
+    sched = plan_schedule(stages, DIMS, n=8)
+    with pytest.raises(ValueError):
+        ScheduleExecutor(sched.unrolled(), backend="explicit",
+                         overlap="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3a: overlap=None / no-estimates / no-topology are bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_overlap_none_reproduces_plans_bit_for_bit():
+    """compute_seconds annotations + overlap=None change NOTHING, and a
+    requested mode without estimates (or without a fabric) is equally
+    inert — forward and joint solvers alike."""
+    topo = _ici()
+    for stages, initial, final in _random_instances(seed=1):
+        bare = _strip_compute(stages)
+        base = make_plan(bare, DIMS, n=8, initial=initial, final=final,
+                         topology=topo)
+        # annotations alone don't move the plan...
+        assert make_plan(stages, DIMS, n=8, initial=initial, final=final,
+                         topology=topo, overlap=None) == base
+        # ...nor does a mode with nothing to hide behind...
+        assert make_plan(bare, DIMS, n=8, initial=initial, final=final,
+                         topology=topo, overlap="chunked") == base
+        # ...nor a mode priced in bytes (no fabric -> no seconds -> no hide)
+        byte_base = make_plan(bare, DIMS, n=8, initial=initial, final=final)
+        assert make_plan(stages, DIMS, n=8, initial=initial, final=final,
+                         overlap="double_buffer") == byte_base
+        # pricing agrees with planning
+        assert plan_cost_seconds(stages, base, topo, initial=initial,
+                                 final=final, overlap=None) == \
+            plan_cost_seconds(bare, base, topo, initial=initial, final=final)
+
+        jbase = plan_joint(bare, DIMS, n=8, initial=initial, final=final,
+                           topology=topo)
+        assert plan_joint(stages, DIMS, n=8, initial=initial, final=final,
+                          topology=topo, overlap=None) == jbase
+        assert plan_joint(bare, DIMS, n=8, initial=initial, final=final,
+                          topology=topo, overlap="chunked") == jbase
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3b: overlap pricing is optimal and only ever a discount
+# ---------------------------------------------------------------------------
+
+def test_overlap_dp_matches_brute_force_and_bounds():
+    topo = _ici()
+    for i, (stages, initial, final) in enumerate(
+            _random_instances(seed=2, count=60)):
+        for mode in ("chunked", "double_buffer"):
+            plan = plan_switches_dp(stages, DIMS, n=8, initial=initial,
+                                    final=final, topology=topo, overlap=mode)
+            got = plan_cost_seconds(stages, plan, topo, initial=initial,
+                                    final=final, overlap=mode)
+            want = brute_force_cost(stages, DIMS, n=8, initial=initial,
+                                    final=final, topology=topo, overlap=mode)
+            assert got == pytest.approx(want, rel=1e-12, abs=1e-18), (i, mode)
+            # exposed <= synchronous for the SAME plan (hide only discounts)
+            sync = plan_cost_seconds(stages, plan, topo, initial=initial,
+                                     final=final)
+            assert got <= sync + 1e-18
+        # double_buffer hides at least as much as chunked (same plan)
+        p = plan_switches_dp(stages, DIMS, n=8, initial=initial, final=final,
+                             topology=topo)
+        c = plan_cost_seconds(stages, p, topo, initial=initial, final=final,
+                              overlap="chunked")
+        db = plan_cost_seconds(stages, p, topo, initial=initial, final=final,
+                               overlap="double_buffer")
+        assert db <= c + 1e-18
+
+
+def test_joint_overlap_dp_matches_brute_force():
+    topo = _ici()
+    for stages, initial, final in _random_instances(seed=3, count=25):
+        if len(stages) > 4:
+            continue  # keep the exponential oracle cheap
+        jp = plan_joint(stages, DIMS, initial=initial, final=final,
+                        topology=topo, overlap="chunked")
+        got = joint_cost_seconds(stages, jp, topo, initial=initial,
+                                 final=final, overlap="chunked").total
+        want = brute_force_joint(stages, DIMS, initial=initial, final=final,
+                                 topology=topo, overlap="chunked")
+        assert got == pytest.approx(want, rel=1e-12, abs=1e-18)
+        # the round trip never prices below zero and never above sync
+        sync = joint_cost_seconds(stages, jp, topo, initial=initial,
+                                  final=final).total
+        assert 0.0 <= got <= sync + 1e-18
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3c: the regression — overlap moves a switch point
+# ---------------------------------------------------------------------------
+
+def _switch_point_instance(topo, dims, start, forced):
+    """Three stages: an entry stage, a LONG flash-attention stage with big
+    activations, then a small stage that forces the ``forced`` dim.  The
+    byte/sync DP defers the forced switch to the cheap last boundary; the
+    overlap DP pays the BIG boundary because the flash kernel hides it.
+    (The entry stage is mid-sized so switching straight out of ``start`` at
+    the entry boundary is never tied with the cheap late switch.)"""
+    big = (2, 64, 8, 16)
+    mid = (2, 16, 8, 16)
+    small = (2, 2, 2, 4)
+    s0 = Stage(frozenset(), "in", shape=mid)
+    s1 = Stage(frozenset(), "flash", shape=big)
+    s2 = Stage(frozenset(d for d in dims if d != forced), "head",
+               shape=small)
+    # the hide budget must swallow even the big boundary's wire time
+    wire = topo.transition_seconds("switch", s1.nbytes, start, forced)
+    tiny = wire * 1e-3
+    import dataclasses
+    s0 = dataclasses.replace(s0, compute_seconds=tiny)
+    s1 = dataclasses.replace(s1, compute_seconds=2.0 * wire)
+    s2 = dataclasses.replace(s2, compute_seconds=tiny)
+    return [s0, s1, s2]
+
+
+@pytest.mark.parametrize("fabric,dims,start,forced", [
+    ("ici", [1, 2], 1, 2),
+    # ICIxDCN: the moved switch touches dim 1 and therefore crosses the DCN
+    # seam — the hide budget outweighs even DCN wire time
+    ("ici_dcn", [1, 2, 3], 2, 1),
+])
+def test_overlap_moves_the_switch_point(fabric, dims, start, forced):
+    topo = _ici() if fabric == "ici" else _ici_dcn()
+    stages = _switch_point_instance(topo, dims, start, forced)
+
+    sync = make_plan(stages, dims, n=topo.size, initial=start, topology=topo)
+    ov = make_plan(stages, dims, n=topo.size, initial=start, topology=topo,
+                   overlap="chunked")
+    # sync defers the switch to the small boundary; overlap hides it behind
+    # the flash stage one boundary EARLIER
+    assert sync == [start, start, forced]
+    assert ov == [start, forced, forced]
+
+    # the moved plan pays MORE bytes and MORE synchronous seconds...
+    assert plan_cost_bytes(stages, ov, n=topo.size, initial=start) > \
+        plan_cost_bytes(stages, sync, n=topo.size, initial=start)
+    assert plan_cost_seconds(stages, ov, topo, initial=start) > \
+        plan_cost_seconds(stages, sync, topo, initial=start)
+    # ...but strictly less EXPOSED time: the big switch vanishes behind the
+    # kernel while sync's small switch stays on the critical path
+    ov_exposed = plan_cost_seconds(stages, ov, topo, initial=start,
+                                   overlap="chunked")
+    sync_exposed = plan_cost_seconds(stages, sync, topo, initial=start,
+                                     overlap="chunked")
+    assert ov_exposed < sync_exposed
+    assert ov_exposed == pytest.approx(0.0, abs=1e-18)
+
+    if fabric == "ici_dcn":
+        # the boundary overlap chose really is the expensive DCN-crossing
+        # one: dims 2<->3 stay on the intra-host ring
+        nb = stages[1].nbytes
+        assert topo.transition_seconds("switch", nb, start, forced) > \
+            topo.transition_seconds("switch", nb, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# Schedule / executor mode selection
+# ---------------------------------------------------------------------------
+
+def test_schedule_overlap_fields_and_per_boundary_selection():
+    topo = _ici()
+    stages = _switch_point_instance(topo, [1, 2], 1, 2)
+    sched = plan_schedule(stages, [1, 2], n=8, initial=1, topology=topo,
+                          overlap="chunked")
+    assert sched.overlap == "chunked"
+    assert tuple(sched.dims) == (1, 2, 2)
+    # per-boundary: only the switch INTO a compute-carrying stage overlaps
+    assert sched.overlap_mode(0) is None          # keep (enter in dim 1)
+    assert sched.overlap_mode(1) == "chunked"     # the hidden switch
+    assert sched.overlap_mode(2) is None          # keep
+    # metas: exposed ~0, hidden = the synchronous wire time
+    assert sched.exposed_seconds() == pytest.approx(0.0, abs=1e-18)
+    assert sched.hidden_comm_seconds() == pytest.approx(
+        sched.per_device_seconds(topo), rel=1e-12)
+    # a schedule solved without a fabric can't price seconds
+    plain = plan_schedule(stages, [1, 2], n=8, initial=1)
+    with pytest.raises(ValueError):
+        plain.exposed_seconds()
+    # boundaries into estimate-free stages stay synchronous
+    import dataclasses
+    bare = dataclasses.replace(sched, stages=tuple(_strip_compute(stages)))
+    assert bare.overlap_mode(1) is None
+
+
+def test_executor_overlap_mode_resolution():
+    topo = _ici()
+    stages = _switch_point_instance(topo, [1, 2], 1, 2)
+    sched = plan_schedule(stages, [1, 2], n=8, initial=1, topology=topo,
+                          overlap="double_buffer")
+    un = sched.unrolled()
+    # explicit backend inherits the planned mode...
+    assert ScheduleExecutor(un, backend="explicit").overlap == "double_buffer"
+    # ...an explicit ctor argument wins...
+    assert ScheduleExecutor(un, backend="explicit",
+                            overlap="chunked").overlap == "chunked"
+    # ...and the auto backend cannot decompose XLA's all-to-all
+    with pytest.raises(ValueError):
+        ScheduleExecutor(un, backend="auto", ctx=None, overlap="chunked")
+    # overlapped_switch itself rejects unknown modes before touching a mesh
+    from repro.core.overlap import overlapped_switch
+    with pytest.raises(ValueError):
+        overlapped_switch(object(), 1, 2, mode="bogus")

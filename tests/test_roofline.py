@@ -77,3 +77,51 @@ def test_roofline_terms_and_bottleneck():
 def test_depth_extrapolation():
     assert extrapolate_depth(10.0, 13.0, 1) == pytest.approx(10.0)
     assert extrapolate_depth(10.0, 13.0, 5) == pytest.approx(22.0)
+
+
+# ---------------------------------------------------------------------------
+# Per-stage compute estimates (the overlap planner's hide budgets)
+# ---------------------------------------------------------------------------
+
+def test_stage_compute_seconds_matches_roofline_compute_s():
+    """Plan-time hide budgets and the roofline report derive from ONE
+    function: for the same per-device FLOPs, ``stage_compute_seconds``
+    equals ``roofline(...).compute_s`` exactly."""
+    import types
+    from repro.analysis.roofline import (stage_compute_seconds, stage_flops,
+                                         attach_compute_seconds)
+    from repro.core.plan import Stage
+
+    cfg = types.SimpleNamespace(d_model=64, d_ff=256, mlp_kind="gelu")
+    shape = (2, 8, 16, 64)
+    mixer = Stage(frozenset({1}), "temporal", shape, 2)
+    ffn = Stage(frozenset(), "mlp", shape, 2)
+
+    # formulas: mixer = 8·T·d² + 4·T·L·d, channel = 4·T·d·d_ff
+    tokens = 2 * 8 * 16
+    assert stage_flops(mixer, cfg) == pytest.approx(
+        8.0 * tokens * 64 * 64 + 4.0 * tokens * 8 * 64)
+    assert stage_flops(ffn, cfg) == pytest.approx(4.0 * tokens * 64 * 256)
+    gated = types.SimpleNamespace(d_model=64, d_ff=256, mlp_kind="swiglu")
+    assert stage_flops(ffn, gated) == pytest.approx(6.0 * tokens * 64 * 256)
+
+    for n in (1, 4, 8):
+        per_dev = stage_flops(mixer, cfg) / n
+        rl = roofline(hlo_flops_per_dev=per_dev, hlo_bytes_per_dev=0.0,
+                      collective_bytes_per_dev=0.0, chips=max(n, 2),
+                      model_flops=1.0)
+        assert stage_compute_seconds(mixer, cfg, n) == pytest.approx(
+            rl.compute_s)
+
+    # topology objects are accepted too, and shapeless stages contribute 0
+    from repro.core.topology import Topology
+    assert stage_compute_seconds(mixer, cfg, Topology.uniform(4)) == \
+        pytest.approx(stage_compute_seconds(mixer, cfg, 4))
+    assert stage_compute_seconds(Stage(frozenset({1}), "bare"), cfg) == 0.0
+
+    # attach fills missing estimates and preserves declared ones
+    declared = Stage(frozenset({1}), "pinned", shape, 2, compute_seconds=7.0)
+    out = attach_compute_seconds([mixer, declared], cfg, 4)
+    assert out[0].compute_seconds == pytest.approx(
+        stage_compute_seconds(mixer, cfg, 4))
+    assert out[1].compute_seconds == 7.0
