@@ -28,9 +28,15 @@ def main():
                     d_ff=cfg_json.get("d_ff", 256),
                     in_dim=cfg_json.get("in_dim", 16),
                     modulate=cfg_json.get("modulate", True),
+                    n_kv_heads=cfg_json.get("n_kv_heads"),
                     dtype=jnp.float32)
     from repro.core.compat import make_mesh
-    mesh = make_mesh((n,), ("model",))
+    if mode == "hybrid":
+        # 2D SP process grid (outer DCN factor major) — launch.mesh
+        outer = cfg_json.get("sp_outer") or 2
+        mesh = make_mesh((outer, n // outer), ("sp_out", "sp_in"))
+    else:
+        mesh = make_mesh((n,), ("model",))
 
     params = init_t2d(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (b, t, s, cfg.in_dim))

@@ -41,22 +41,31 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)
 
 from benchmarks.common import spmd_measure, emit
-from repro.core.dsp import comm_volume_bytes
+from repro.core.dsp import per_device_bytes
 
 N = 8
 LAYERS = 4          # 2 layer-pairs
 MODES = ["dsp", "ulysses", "ulysses_fused", "ring", "megatron"]
 
+# benchmark mode -> strategy constant (core.topology.STRATEGIES); the fused
+# ulysses variant moves the same bytes in half the launches
+_STRATEGY_OF_MODE = {"dsp": "dsp", "ulysses": "ulysses",
+                     "ulysses_fused": "ulysses", "ring": "ring",
+                     "megatron": "megatron", "hybrid": "hybrid"}
 
-def analytic_bytes(mode: str, m_bytes: float, n: int) -> float:
-    """Per-layer analytic volume from the shared Table-2 constant."""
-    switch = comm_volume_bytes("switch", m_bytes, n)
-    gather = comm_volume_bytes("gather", m_bytes, n)
-    return {"dsp": 2 * switch,             # 2 planned switches / layer
-            "ulysses": 4 * switch,         # q,k,v seq->head + out head->seq
-            "ulysses_fused": 4 * switch,   # same volume, half the ops
-            "megatron": 8 * gather,        # 4x AG + 4x RS of the full seq
-            "ring": 2 * gather}[mode]      # K+V rotate a full M each
+
+def analytic_bytes(mode: str, m_bytes: float, n: int, *, kv_bytes=None,
+                   kv_heads=None, outer=1) -> float:
+    """Per-layer analytic volume, routed through the ONE shared constant
+    (``core.dsp.per_device_bytes``) that the strategy DP and the mode
+    implementations (``core.ulysses.attention_bytes``,
+    ``core.ring.stream_bytes``, ``core.megatron_sp.block_bytes``) also
+    price from.  ``per_device_bytes`` is per STAGE; a 2D-transformer layer
+    runs megatron's AG/RS wrapping in BOTH blocks (x2 = Table 3's 8M),
+    every other mode pays its collectives once per layer."""
+    v = per_device_bytes(_STRATEGY_OF_MODE[mode], m_bytes, n,
+                         kv_bytes=kv_bytes, kv_heads=kv_heads, outer=outer)
+    return 2 * v if mode == "megatron" else v
 
 
 def _fabrics():
@@ -257,6 +266,98 @@ def main(argv=None):
          f"sync_us={r_sync['us_per_call']:.0f};"
          f"overlap_us={r_ov['us_per_call']:.0f};speedup={speedup:.2f};"
          f"counts={r_ov['by_kind_count']}")
+
+    # megatron-SP planned SECONDS per fabric: it was the only mode reported
+    # in bytes but never in Topology-priced time.  One t2d layer wraps both
+    # blocks, each with an attention AND an MLP AG/RS pair = 4x
+    # core.megatron_sp.block_seconds (alpha+beta ag + rs of the full M)
+    from repro.core.megatron_sp import block_seconds
+    meg_fabrics = {}
+    for label, topo in _fabrics():
+        meg_fabrics[label] = {
+            "planned_seconds_per_layer": 4 * block_seconds(topo, m_bytes)}
+        emit(f"table3/megatron_planned_seconds/{label}", None,
+             f"planned_seconds_per_layer="
+             f"{meg_fabrics[label]['planned_seconds_per_layer']:.3e}")
+    record["megatron_sp"] = {
+        "analytic_bytes_per_layer": analytic_bytes("megatron", m_bytes, N),
+        "fabrics": meg_fabrics,
+    }
+
+    # ---- unified-plan HYBRID row (the (stage, dim, strategy) DP) ----------
+    # Instance: long-temporal latents (T=128, S=4) with GQA (8 q heads, 4 kv
+    # heads) on the ICI x DCN fabric.  S=4 divides the per-host ICI group
+    # but NOT the 8-way SP axis, so dim 2's shard can only live inside a
+    # host (placement={2: ("ici",)} is forced) — pure DSP's alternation
+    # pays a cross-placement switch + DCN gather per pair, while the DP's
+    # hybrid pick stays resident on T and runs USP at temporal stages: a2a
+    # q/k/v inside ICI, K/V ring across DCN.  kv_heads=4 also handicaps
+    # pure Ulysses (4 % 8 != 0 -> K/V replication).  Runs under --quick so
+    # CI smokes the row.
+    from repro.models.transformer2d import (strategy_schedule,
+                                            stages as t2d_stages)
+    from repro.core.topology import Topology
+    from repro.core.plan import (StrategyPlan, plan_switches_dp,
+                                 strategy_plan_cost)
+    hb, ht, hs, hd = 2, 128, 4, 128
+    h_outer = 2
+    hcfg = T2DConfig(name="hybrid", n_layers=LAYERS, d_model=hd, n_heads=8,
+                     d_ff=256, in_dim=16, modulate=False, n_kv_heads=4,
+                     dtype=jnp.float32)
+    hm_bytes = hb * ht * hs * hd * 4
+    hkv_bytes = 2.0 * hb * ht * hs * hcfg.kvh * hcfg.dh * 4
+    topo_h = Topology.multihost(2, N // 2, placement={2: ("ici",)})
+    hsched = strategy_schedule(hcfg, N, t_len=ht, s_len=hs, batch=hb,
+                               topology=topo_h, initial=1)
+    hstages = t2d_stages(hcfg, t_len=ht, s_len=hs, batch=hb)
+    hybrid_planned = hsched.schedule.strategy_seconds() / pairs
+
+    # every PURE mode on the same instance/fabric, priced by the same
+    # strategy cost model: dsp = the classic switch DP's plan; the embedded
+    # modes stay resident on T and run their strategy at temporal stages
+    pure = {}
+    dsp_dims = plan_switches_dp(hstages, [1, 2], topology=topo_h,
+                                initial=1, final=1)
+    pure["dsp"] = strategy_plan_cost(
+        hstages, StrategyPlan(tuple(dsp_dims), ("dsp",) * LAYERS),
+        topology=topo_h, initial=1, final=1) / pairs
+    for strat in ("ulysses", "ring", "megatron"):
+        plan = StrategyPlan((1,) * LAYERS, ("dsp", strat) * pairs)
+        pure[strat] = strategy_plan_cost(hstages, plan, topology=topo_h,
+                                         initial=1, final=1) / pairs
+    assert all(hybrid_planned < v for v in pure.values()), (
+        f"hybrid planned {hybrid_planned} not strictly cheaper than every "
+        f"pure mode: {pure}")
+
+    rh = spmd_measure(N, "hybrid", batch=hb, temporal=ht, spatial=hs,
+                      layers=LAYERS, d_model=hd, modulate=False,
+                      n_kv_heads=hcfg.kvh, sp_outer=h_outer)
+    h_per_pair = rh["collective_bytes_per_dev"] / pairs
+    h_analytic = analytic_bytes("hybrid", hm_bytes, N, kv_bytes=hkv_bytes,
+                                kv_heads=hcfg.kvh, outer=h_outer)
+    record["hybrid"] = {
+        "config": {"devices": N, "layers": LAYERS, "batch": hb,
+                   "temporal": ht, "spatial": hs, "d_model": hd,
+                   "n_heads": hcfg.n_heads, "n_kv_heads": hcfg.kvh,
+                   "sp_outer": h_outer, "fabric": "ici_dcn",
+                   "placement": {"2": ["ici"]}},
+        "strategies_per_period": list(hsched.strategies),
+        "dims_per_period": list(hsched.dims),
+        "planned_seconds_per_pair": hybrid_planned,
+        "pure_planned_seconds_per_pair": pure,
+        "measured_bytes_per_pair": h_per_pair,
+        "analytic_bytes_per_pair": h_analytic,
+        "ratio": h_per_pair / max(h_analytic, 1),
+        "counts": rh["by_kind_count"],
+    }
+    emit("table3/hybrid/planned_seconds", None,
+         f"hybrid={hybrid_planned:.3e};"
+         + ";".join(f"{k}={v:.3e}" for k, v in pure.items())
+         + f";strategies={list(hsched.strategies)}")
+    emit("table3/hybrid/bytes", None,
+         f"measured_per_pair={h_per_pair:.0f};analytic={h_analytic:.0f};"
+         f"ratio={h_per_pair/max(h_analytic, 1):.2f};"
+         f"counts={rh['by_kind_count']}")
 
     if not args.quick:
         # the paper's headline ordering must hold in the measured HLO

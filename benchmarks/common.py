@@ -11,11 +11,12 @@ SRC = os.path.join(HERE, "..", "src")
 def spmd_measure(devices: int, mode: str, *, batch=2, temporal=8,
                  spatial=32, layers=4, d_model=128, heads=8, d_ff=256,
                  modulate=True, grad=False, time_it=False, reps=3,
-                 overlap=None):
+                 overlap=None, n_kv_heads=None, sp_outer=None):
     cfg = dict(devices=devices, mode=mode, batch=batch, temporal=temporal,
                spatial=spatial, layers=layers, d_model=d_model, heads=heads,
                d_ff=d_ff, modulate=modulate, grad=grad, time=time_it,
-               reps=reps, overlap=overlap)
+               reps=reps, overlap=overlap, n_kv_heads=n_kv_heads,
+               sp_outer=sp_outer)
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")

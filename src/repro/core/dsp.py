@@ -145,8 +145,55 @@ def comm_volume_bytes(primitive: str, global_bytes: int, n: int) -> float:
     raise ValueError(f"unknown primitive {primitive!r}")
 
 
+def per_device_bytes(strategy: str, global_bytes: float, n: int, *,
+                     kv_bytes: Optional[float] = None,
+                     kv_heads: Optional[int] = None,
+                     outer: int = 1) -> float:
+    """Per-device communication volume of one STAGE executed with an SP
+    strategy (Table 3 generalised) — the single constant
+    ``benchmarks/comm_volume.py`` AND the strategy DP
+    (``core.plan.plan_strategy_dp`` via ``Topology.embedded_seconds``)
+    price from, so planned-vs-measured byte ratios are 1.00 by
+    construction.
+
+    ``global_bytes`` is the residual stream (M); ``kv_bytes`` the K/V
+    activations (default 2M, the MHA convention).  Units per strategy:
+
+      dsp       2M/N   the layer pair's TWO boundary switches (M/N each,
+                       ``comm_volume_bytes("switch", ...)``)
+      ulysses   2M/N + kv/N   q + out a2as plus the K/V head-scatter a2as;
+                       when ``kv_heads`` does not divide by N (GQA) the K/V
+                       scatter degrades to replication: 2M/N + kv
+      ring      kv     N ppermute hops of kv/N (``core.ring``)
+      megatron  4M     ONE AG/RS-wrapped block (2 collectives x 2M each,
+                       ``core.megatron_sp``); a 2D-transformer layer pair
+                       wraps both blocks = 8M
+      hybrid    (2M + kv)/N + kv*outer/N   USP: inner a2as move host-local
+                       shards, the outer ring streams kv/N per hop for
+                       ``outer`` hops (the outer-axis size)
+
+    Measured counterparts use the HLO result-bytes convention of
+    ``analysis.roofline.parse_collectives`` (while bodies x trip count).
+    """
+    m = float(global_bytes)
+    kv = float(kv_bytes) if kv_bytes is not None else 2.0 * m
+    if strategy == "dsp":
+        return 2.0 * comm_volume_bytes("switch", m, n)
+    if strategy == "ulysses":
+        if kv_heads is not None and kv_heads % n:
+            return 2.0 * m / n + kv          # K/V replicated (all-gather)
+        return 2.0 * m / n + kv / n
+    if strategy == "ring":
+        return kv
+    if strategy == "megatron":
+        return 4.0 * m
+    if strategy == "hybrid":
+        return (2.0 * m + kv) / n + kv * outer / n
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
 __all__ = [
     "dynamic_switch", "split", "gather", "dsp_shard_batch",
     "switch_constraint", "gather_constraint", "split_constraint",
-    "comm_volume_bytes",
+    "comm_volume_bytes", "per_device_bytes",
 ]

@@ -9,8 +9,34 @@ counts 8 ops / 8M per 2D-transformer layer (two blocks).  Runs inside
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+
+
+def block_bytes(global_bytes: float, n: int = 1) -> float:
+    """Per-device volume of ONE AG/RS-wrapped block: routed through the
+    shared constant ``core.dsp.per_device_bytes("megatron", ...)`` (= 4M;
+    a 2D-transformer layer pair wraps both blocks = 8M, the paper's Table-3
+    count)."""
+    from repro.core.dsp import per_device_bytes
+    return per_device_bytes("megatron", global_bytes, n)
+
+
+def block_seconds(topology, nbytes: float, dim: Optional[int] = None) -> float:
+    """Topology-priced seconds of ONE AG/RS-wrapped block on the placement
+    group of ``dim``: the entry all-gather materialises the full sequence
+    (M on the wire per device) and the exit reduce-scatter moves the same
+    volume back — ``all_gather_seconds(M) + reduce_scatter_seconds(M)``
+    with the alpha+beta models of ``core.topology``.  This is the unit the
+    strategy DP charges via ``Topology.embedded_seconds`` (which prices a
+    stage's TWO blocks, attention + MLP) and what
+    ``benchmarks/comm_volume.py`` reports as megatron-sp planned seconds
+    per fabric."""
+    axes = None if dim is None else topology.group(dim)
+    return (topology.all_gather_seconds(nbytes, axes)
+            + topology.reduce_scatter_seconds(nbytes, axes))
 
 
 def allgather_seq(x: jax.Array, seq_dim: int = 1, axis_name: str = "model") -> jax.Array:

@@ -93,6 +93,15 @@ class Stage:
     ``attach_compute_seconds``) — the budget an OVERLAPPED switch into this
     stage can hide behind.  Ignored unless a solver/pricer is called with
     ``overlap=`` and a topology; plans are bit-for-bit unchanged otherwise.
+
+    The last three fields feed the (stage, dim, strategy) DP
+    (``plan_strategy_dp``) and are inert everywhere else.  ``strategies``
+    restricts the embedded strategy candidates this stage may run with when
+    the shard sits ON its compute dim (None = all of
+    ``core.topology.STRATEGIES``; () = DSP-switch only, today's
+    behaviour).  ``kv_bytes``/``kv_heads`` describe the stage's K/V
+    activations for the strategies that stream or head-scatter them
+    (defaults: 2x the stream, MHA head counts — the Table-3 conventions).
     """
 
     compute_dims: FrozenSet[int]
@@ -102,6 +111,9 @@ class Stage:
     bwd_shape: Optional[Tuple[int, ...]] = None
     bwd_dtype_bytes: Optional[int] = None
     compute_seconds: Optional[float] = None
+    strategies: Optional[Tuple[str, ...]] = None
+    kv_bytes: Optional[float] = None
+    kv_heads: Optional[int] = None
 
     def allows(self, dim: int) -> bool:
         return dim not in self.compute_dims
@@ -858,6 +870,243 @@ def brute_force_cost(stages: Sequence[Stage], seq_dims: Sequence[int],
     if best is None:
         raise ValueError("infeasible stage sequence")
     return best
+
+
+# ---------------------------------------------------------------------------
+# Unified SP plan space: (stage, dim, strategy) DP
+# ---------------------------------------------------------------------------
+
+# embedded candidates when Stage.strategies is None (the "dsp" resident
+# strategy is always available at stages that allow the dim)
+_EMBEDDED_STRATEGIES = ("ulysses", "ring", "megatron", "hybrid")
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyPlan:
+    """A solved (dim, strategy) assignment per stage.
+
+    ``dims[t]`` is the dim the residual stream is sharded on THROUGH stage
+    ``t`` (the same meaning as the dim-only planners); ``strategies[t]`` is
+    how the stage executes on that shard: ``"dsp"`` when the stage computes
+    freely (the shard avoids its compute dims; boundary switches do the
+    work), or an embedded strategy (``core.topology.STRATEGIES``) when the
+    shard sits ON a compute dim and the stage pays in-stage collectives
+    instead of re-sharding."""
+
+    dims: Tuple[int, ...]
+    strategies: Tuple[str, ...]
+
+    def __post_init__(self):
+        assert len(self.dims) == len(self.strategies)
+
+
+def _embedded_cost(stages: Sequence[Stage], t: int, d: int, strategy: str,
+                   topology, overlap: Optional[str]) -> float:
+    """Cost of executing stage ``t`` with the shard resident on ``d`` under
+    ``strategy`` — 0 for "dsp" on a non-conflicting dim, the strategy's
+    in-stage collectives (``Topology.embedded_seconds``) otherwise, INF when
+    the combination is inadmissible (conflicting dim without an embedded
+    strategy, byte-model pricing, partially-placed dim, hybrid on a
+    single-axis group)."""
+    INF = float("inf")
+    st = stages[t]
+    if strategy == "dsp":
+        return 0.0 if st.allows(d) else INF
+    if topology is None:
+        return INF
+    group = topology.group(d)
+    if topology.group_size(d) < topology.size:
+        return INF              # embedded SP computes across the whole group
+    if strategy == "hybrid" and len(group) < 2:
+        return INF
+    c = (st.compute_seconds or 0.0) if overlap is not None else 0.0
+    return topology.embedded_seconds(
+        strategy, _boundary_bytes(stages, t), d,
+        kv_bytes=st.kv_bytes, kv_heads=st.kv_heads, compute_seconds=c)
+
+
+def _stage_candidates(stage: Stage) -> Tuple[str, ...]:
+    emb = (stage.strategies if stage.strategies is not None
+           else _EMBEDDED_STRATEGIES)
+    return ("dsp",) + tuple(s for s in emb if s != "dsp")
+
+
+def plan_strategy_dp(stages: Sequence[Stage], seq_dims: Sequence[int],
+                     *, n: int = 2, initial: Optional[int] = None,
+                     final: Optional[int] = None,
+                     final_bytes: Optional[float] = None,
+                     topology=None,
+                     overlap: Optional[str] = None) -> StrategyPlan:
+    """Exact minimum-cost plan over the UNIFIED SP plan space: DP over
+    (stage, dim) where each stage additionally chooses the cheapest
+    execution strategy for its resident dim — "dsp" (free) when the stage
+    allows the dim, else the best embedded strategy
+    (``Topology.embedded_seconds``: ulysses a2a / ring permute stream /
+    megatron ag+rs / the USP ring x a2a hybrid).  Boundary transitions
+    reuse the dim-only DP's edge weight (``_transition_cost``) and
+    tie-breaks exactly.
+
+    On ``topology=None`` or a UNIFORM topology this delegates wholesale to
+    ``plan_switches_dp`` with every strategy "dsp" — the byte model stays
+    the oracle and pre-strategy plans are reproduced bit-for-bit (the
+    collapse property of tests/test_strategy_plan.py).  Embedded pricing is
+    a seconds concept; it needs real links to compare against switches.
+
+    ``overlap`` gives the inherently-pipelined permute streams (ring, the
+    hybrid's outer ring) the stage's ``compute_seconds`` as a per-step hide
+    budget; blocking strategies (ulysses/megatron) and the boundary
+    transitions price exactly as in the dim-only DP.
+
+    Returns a ``StrategyPlan``; raises ValueError when some stage admits no
+    (dim, strategy) at all (every dim conflicted and no embedded strategy
+    available).
+    """
+    if not stages:
+        return StrategyPlan((), ())
+    _check_overlap(overlap)
+    if topology is None or topology.is_uniform:
+        dims = plan_switches_dp(stages, seq_dims, n=n, initial=initial,
+                                final=final, final_bytes=final_bytes,
+                                topology=topology, overlap=overlap)
+        return StrategyPlan(tuple(dims), ("dsp",) * len(dims))
+
+    dims = list(seq_dims)
+    INF = float("inf")
+
+    def stage_best(t: int, d: int) -> Tuple[float, Optional[str]]:
+        best, arg = INF, None
+        for s in _stage_candidates(stages[t]):
+            c = _embedded_cost(stages, t, d, s, topology, overlap)
+            if c < best:
+                best, arg = c, s
+        return best, arg
+
+    nb0 = _boundary_bytes(stages, 0)
+    h0 = _hide_seconds(stages, 0, overlap)
+    cost: Dict[int, float] = {}
+    strat: List[Dict[int, Optional[str]]] = [{}]
+    for d in dims:
+        sc, sa = stage_best(0, d)
+        if sc == INF:
+            cost[d] = INF
+            strat[0][d] = None
+            continue
+        c = (_transition_cost(initial, d, nb0, n, topology, hide=h0)
+             if initial is not None else 0.0)
+        c += sc
+        cost[d] = c
+        strat[0][d] = sa
+    if all(cost[d] == INF for d in dims):
+        raise ValueError(f"stage {stages[0].name!r} admits no "
+                         f"(dim, strategy): every sequence dim conflicted "
+                         f"and no embedded strategy available")
+    back: List[Dict[int, Optional[int]]] = []
+
+    for t in range(1, len(stages)):
+        nb = _boundary_bytes(stages, t)
+        ht = _hide_seconds(stages, t, overlap)
+        ncost: Dict[int, float] = {}
+        bp: Dict[int, Optional[int]] = {}
+        sp: Dict[int, Optional[str]] = {}
+        for d in dims:
+            sc, sa = stage_best(t, d)
+            if sc == INF:
+                ncost[d], bp[d], sp[d] = INF, None, None
+                continue
+            best, arg, best_key = INF, None, None
+            for d0 in dims:
+                c0 = cost[d0]
+                if c0 == INF:
+                    continue
+                c = c0 + _transition_cost(d0, d, nb, n, topology, hide=ht)
+                c += sc
+                # same tie-break as plan_switches_dp: keep shard, smaller dim
+                key = (c, d0 != d, d0)
+                if best_key is None or key < best_key:
+                    best, arg, best_key = c, d0, key
+            ncost[d], bp[d], sp[d] = best, arg, sa
+        if all(ncost[d] == INF for d in dims):
+            raise ValueError(f"stage {stages[t].name!r} admits no "
+                             f"(dim, strategy): every sequence dim "
+                             f"conflicted and no embedded strategy "
+                             f"available")
+        back.append(bp)
+        strat.append(sp)
+        cost = ncost
+
+    if final is not None:
+        fb = final_bytes if final_bytes is not None else _boundary_bytes(
+            stages, len(stages) - 1)
+
+        def total(d):
+            return cost[d] + _transition_cost(d, final, fb, n, topology)
+    else:
+        def total(d):
+            return cost[d]
+
+    feas = [d for d in dims if cost[d] < INF]
+    end = min(feas, key=lambda d: (total(d), d != final, d))
+    plan = [end]
+    for bp in reversed(back):
+        plan.append(bp[plan[-1]])
+    plan.reverse()
+    return StrategyPlan(tuple(plan),
+                        tuple(strat[t][d] for t, d in enumerate(plan)))
+
+
+def strategy_plan_cost(stages: Sequence[Stage], plan: StrategyPlan,
+                       *, n: int = 2, initial: Optional[int] = None,
+                       final: Optional[int] = None,
+                       final_bytes: Optional[float] = None,
+                       topology=None,
+                       overlap: Optional[str] = None) -> float:
+    """Price a (dim, strategy) assignment with EXACTLY the DP's edge
+    weights and accumulation order — the shared pricer of
+    ``plan_strategy_dp`` and the brute-force oracle, so DP cost equals the
+    oracle minimum with exact float equality.  INF for inadmissible
+    assignments."""
+    _check_overlap(overlap)
+    total = 0.0
+    prev = initial
+    for t, (d, s) in enumerate(zip(plan.dims, plan.strategies)):
+        if prev is not None:
+            total += _transition_cost(prev, d, _boundary_bytes(stages, t), n,
+                                      topology,
+                                      hide=_hide_seconds(stages, t, overlap))
+        total += _embedded_cost(stages, t, d, s, topology, overlap)
+        prev = d
+    if final is not None and plan.dims:
+        fb = final_bytes if final_bytes is not None else _boundary_bytes(
+            stages, len(stages) - 1)
+        total += _transition_cost(prev, final, fb, n, topology)
+    return total
+
+
+def brute_force_strategy(stages: Sequence[Stage], seq_dims: Sequence[int],
+                         *, n: int = 2, initial: Optional[int] = None,
+                         final: Optional[int] = None,
+                         final_bytes: Optional[float] = None,
+                         topology=None,
+                         overlap: Optional[str] = None
+                         ) -> Tuple[float, StrategyPlan]:
+    """Exponential exact minimum over the full (dim, strategy)^stages
+    product (test oracle only).  Returns (cost, plan)."""
+    choices = [[(d, s) for d in seq_dims for s in _stage_candidates(st)]
+               for st in stages]
+    best, best_plan = None, None
+    for assign in itertools.product(*choices):
+        plan = StrategyPlan(tuple(d for d, _ in assign),
+                            tuple(s for _, s in assign))
+        c = strategy_plan_cost(stages, plan, n=n, initial=initial,
+                               final=final, final_bytes=final_bytes,
+                               topology=topology, overlap=overlap)
+        if c == float("inf"):
+            continue
+        if best is None or c < best:
+            best, best_plan = c, plan
+    if best_plan is None:
+        raise ValueError("no admissible (dim, strategy) assignment")
+    return best, best_plan
 
 
 # Canonical stage sequences ---------------------------------------------------

@@ -20,6 +20,14 @@ from repro.core.overlap import ring_stream
 NEG_INF = -1e30
 
 
+def stream_bytes(global_bytes: float, n: int, *, kv_bytes=None) -> float:
+    """Per-device volume of one ring attention, routed through the shared
+    constant ``core.dsp.per_device_bytes("ring", ...)`` (= the full K/V
+    activation, kv, default 2M — N hops of kv/N each; Table 3)."""
+    from repro.core.dsp import per_device_bytes
+    return per_device_bytes("ring", global_bytes, n, kv_bytes=kv_bytes)
+
+
 def _block_attn(q, k, v, q_pos, k_pos, scale: float, causal: bool):
     """One (Q-shard x K-block) partial attention.  Shapes:
     q: (B, Sq, H, D), k/v: (B, Sk, H, D); returns (o, m, l) un-normalised."""
@@ -42,7 +50,9 @@ def _block_attn(q, k, v, q_pos, k_pos, scale: float, causal: bool):
 def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                    axis_name: str = "model", causal: bool = False,
                    scale: Optional[float] = None) -> jax.Array:
-    """q, k, v: local (B, S/N, H, D) sharded along the sequence.  Returns the
+    """q: local (B, S/N, H, D) sharded along the sequence; k, v may carry
+    fewer heads (B, S/N, Hkv, D) with H % Hkv == 0 — GQA rotates the small
+    K/V blocks and repeats them up to H locally after each hop.  Returns the
     local output shard (B, S/N, H, D)."""
     idx = jax.lax.axis_index(axis_name)
     b, s_local, h, d = q.shape
@@ -52,6 +62,13 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     def fold(t, src, blocks, carry):
         k_blk, v_blk = blocks                 # owned by device ``src``
         o, m, l, any_valid = carry
+        # GQA: the ring streams the SMALL K/V heads (that is the whole
+        # bandwidth win — per-hop volume is kv/N, not the Q width); repeat
+        # up to the Q head count only after the transfer, locally
+        rep = h // k_blk.shape[2]
+        if rep > 1:
+            k_blk = jnp.repeat(k_blk, rep, axis=2)
+            v_blk = jnp.repeat(v_blk, rep, axis=2)
         k_pos = src * s_local + jnp.arange(s_local)
         o_b, m_b, l_b, dead = _block_attn(q, k_blk, v_blk, q_pos, k_pos, scale, causal)
         # online-softmax merge; dead rows (fully masked block) contribute nothing

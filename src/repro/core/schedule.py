@@ -57,10 +57,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.plan import (JointCost, JointPlan, Stage, joint_cost_bytes,
-                             joint_cost_seconds, make_plan, plan_cost_bytes,
-                             plan_cost_seconds, plan_joint, switch_count,
-                             transition_kind)
+from repro.core.plan import (JointCost, JointPlan, Stage, StrategyPlan,
+                             joint_cost_bytes, joint_cost_seconds, make_plan,
+                             plan_cost_bytes, plan_cost_seconds, plan_joint,
+                             plan_strategy_dp, strategy_plan_cost,
+                             switch_count, transition_kind)
 
 # HLO collective emitted per transition kind (None = communication-free).
 COLLECTIVE_OF = {"switch": "all-to-all", "gather": "all-gather",
@@ -109,6 +110,13 @@ class Schedule:
     mode PER BOUNDARY — only switches whose consuming stage carries a
     ``compute_seconds`` estimate run overlapped; everything else stays
     synchronous.  See docs/architecture.md §3.6.
+
+    ``strategies`` (optional) is the per-stage EXECUTION strategy from the
+    unified (stage, dim, strategy) DP (``core.plan.plan_strategy_dp``):
+    "dsp" for stages the boundary switches serve (today's behaviour, the
+    None default everywhere), or an embedded strategy
+    (``core.topology.STRATEGIES``) for stages that compute ON the resident
+    shard with in-stage collectives.  ``strategy(t)`` reads it per stage.
     """
 
     stages: Tuple[Stage, ...]
@@ -118,6 +126,7 @@ class Schedule:
     topology: Optional[object] = None
     bwd_dims: Optional[Tuple[int, ...]] = None
     overlap: Optional[str] = None
+    strategies: Optional[Tuple[str, ...]] = None
 
     def __post_init__(self):
         assert len(self.stages) == len(self.dims), (len(self.stages),
@@ -125,6 +134,9 @@ class Schedule:
         if self.bwd_dims is not None:
             assert len(self.bwd_dims) == len(self.dims), (len(self.bwd_dims),
                                                           len(self.dims))
+        if self.strategies is not None:
+            assert len(self.strategies) == len(self.dims), (
+                len(self.strategies), len(self.dims))
         if self.overlap not in (None, "chunked", "double_buffer"):
             raise ValueError(f"overlap {self.overlap!r}")
 
@@ -143,6 +155,66 @@ class Schedule:
         if self.final is not None:
             out.append(self.exit())
         return out
+
+    # -- per-stage execution strategy ----------------------------------------
+    def strategy(self, t: int) -> str:
+        """Execution strategy of stage ``t`` ("dsp" when the schedule
+        carries no strategy assignment — every pre-strategy plan)."""
+        return self.strategies[t] if self.strategies is not None else "dsp"
+
+    @property
+    def has_embedded(self) -> bool:
+        """True when any stage runs an embedded (non-DSP) strategy."""
+        return (self.strategies is not None
+                and any(s != "dsp" for s in self.strategies))
+
+    def strategy_seconds(self, topology=None) -> float:
+        """Planned seconds of the FULL (dim, strategy) assignment — boundary
+        transitions plus each stage's embedded in-stage collectives
+        (``core.plan.strategy_plan_cost``; equals ``per_device_seconds``
+        for all-"dsp" assignments)."""
+        topo = topology if topology is not None else self.topology
+        if topo is None:
+            raise ValueError("strategy_seconds needs a Topology (none was "
+                             "attached at plan time)")
+        plan = StrategyPlan(self.dims,
+                            self.strategies if self.strategies is not None
+                            else ("dsp",) * len(self.dims))
+        return strategy_plan_cost(self.stages, plan, n=topo.size,
+                                  initial=self.initial, final=self.final,
+                                  topology=topo, overlap=self.overlap)
+
+    def expected_strategy_collectives(self, n: int,
+                                      outer: int = 1) -> Dict[str, int]:
+        """HLO collectives the EMBEDDED stages add per full pass, with the
+        conventions of ``analysis.roofline.parse_collectives`` (while-body
+        instructions multiply by trip count; K and V rotate as two leaves):
+        ulysses/hybrid scatter q,k,v in and o out (4 all-to-alls); a ring
+        over a g-device group streams 2g permutes; megatron wraps each
+        block in an AG/RS pair.  ``n`` is the full SP degree, ``outer`` the
+        hybrid's outer-ring size."""
+        counts: Dict[str, int] = {}
+
+        def add(kind: str, k: int):
+            if k:
+                counts[kind] = counts.get(kind, 0) + k
+
+        for s in (self.strategies or ()):
+            if s == "dsp":
+                continue
+            if s == "ulysses":
+                add("all-to-all", 4)
+            elif s == "ring":
+                add("collective-permute", 2 * n)
+            elif s == "megatron":
+                add("all-gather", 2)
+                add("reduce-scatter", 2)
+            elif s == "hybrid":
+                add("all-to-all", 4)
+                add("collective-permute", 2 * outer)
+            else:
+                raise ValueError(f"unknown strategy {s!r}")
+        return counts
 
     # -- planned backward ----------------------------------------------------
     @property
@@ -290,6 +362,14 @@ class Schedule:
                         f"shards {dims[t % period]} (scanned layers need a "
                         f"steady-state plan; pass final=initial, or execute "
                         f"the plan via Schedule.unrolled())")
+        for t, s in enumerate(self.strategies or ()):
+            if s != self.strategies[t % period]:
+                raise ValueError(
+                    f"strategy plan is not periodic with period {period}: "
+                    f"stage {t} runs {s!r} but stage {t % period} runs "
+                    f"{self.strategies[t % period]!r} (scanned layers need "
+                    f"a steady-state strategy assignment; execute via "
+                    f"Schedule.unrolled())")
         return PeriodicSchedule(self, period)
 
     def unrolled(self) -> "UnrolledSchedule":
@@ -311,6 +391,14 @@ class PeriodicSchedule:
     @property
     def dims(self) -> Tuple[int, ...]:
         return self.schedule.dims[:self.period]
+
+    @property
+    def strategies(self) -> Tuple[str, ...]:
+        """Per-period execution strategies (all-"dsp" when the schedule
+        carries none); ``Schedule.periodic`` validated periodicity."""
+        if self.schedule.strategies is None:
+            return ("dsp",) * self.period
+        return self.schedule.strategies[:self.period]
 
     def enter(self) -> Transition:
         return classify(self.schedule.initial, self.dims[0])
@@ -458,6 +546,29 @@ def plan_joint_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
                     topology=topology,
                     bwd_dims=None if jp.mirrored else jp.bwd,
                     overlap=overlap)
+
+
+def plan_strategy_schedule(stages: Sequence[Stage], seq_dims: Sequence[int],
+                           *, n: int = 2, initial: Optional[int] = None,
+                           final: Optional[int] = None, topology=None,
+                           overlap: Optional[str] = None) -> Schedule:
+    """Solve the unified (stage, dim, strategy) DP
+    (``core.plan.plan_strategy_dp``) and wrap it as a Schedule that carries
+    the per-stage strategy assignment.
+
+    On a uniform (or absent) topology the DP collapses to the classic
+    switch planner bit-for-bit and the returned schedule is all-"dsp" —
+    byte-identical to ``plan_schedule``'s.  On a tiered fabric
+    (e.g. ``Topology.multihost``) stages may come back with embedded
+    strategies ("ulysses" / "ring" / "megatron" / "hybrid"); the executor
+    and ``Sharder`` read ``Schedule.strategies`` to pick layouts and
+    collectives per stage.
+    """
+    sp = plan_strategy_dp(stages, seq_dims, n=n, initial=initial,
+                          final=final, topology=topology, overlap=overlap)
+    return Schedule(tuple(stages), sp.dims, initial=initial, final=final,
+                    topology=topology, overlap=overlap,
+                    strategies=sp.strategies)
 
 
 # ---------------------------------------------------------------------------
@@ -714,6 +825,20 @@ class ScheduleExecutor:
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(ctx.mesh, P(*entries)))
 
+    def strategy_for(self, i: int) -> str:
+        """Execution strategy of stage ``i`` (in-period index for a periodic
+        schedule, absolute for unrolled; "dsp" for strategy-less and null
+        schedules) — how the model body should run the stage's collectives:
+        DSP boundary switches, or an embedded ulysses / ring / megatron /
+        hybrid attention."""
+        if self.backend == "null":
+            return "dsp"
+        sched = self.psched.schedule
+        if sched.strategies is None:
+            return "dsp"
+        return sched.strategies[i if self.unrolled
+                                else i % self.psched.period]
+
     # -- accounting ----------------------------------------------------------
     def expected_collectives(self, n_periods: int = 1) -> Dict[str, int]:
         """Collective counts of the full forward execution — entry + body x
@@ -794,5 +919,6 @@ class ScheduleExecutor:
 __all__ = [
     "Transition", "classify", "Schedule", "PeriodicSchedule",
     "UnrolledSchedule", "plan_schedule", "plan_joint_schedule",
-    "ScheduleExecutor", "planned_constraint", "COLLECTIVE_OF",
+    "plan_strategy_schedule", "ScheduleExecutor", "planned_constraint",
+    "COLLECTIVE_OF",
 ]

@@ -74,6 +74,14 @@ DCN_BW = 2.5e9               # bytes/s per host over the data-center network
 ICI_LATENCY = 1e-6           # seconds per ICI hop
 DCN_LATENCY = 10e-6          # seconds per DCN hop
 
+# Per-stage execution strategies the (stage, dim, strategy) DP searches over
+# (``core.plan.plan_strategy_dp``).  "dsp" is the resident default — the
+# shard sits on a dim the stage computes freely along, cost 0, with the
+# stage-boundary transitions priced separately.  The EMBEDDED strategies run
+# a stage whose compute dim IS the sharded dim without re-sharding the
+# residual stream; ``Topology.embedded_seconds`` prices each one.
+STRATEGIES = ("dsp", "ulysses", "ring", "megatron", "hybrid")
+
 
 @dataclasses.dataclass(frozen=True)
 class Link:
@@ -207,6 +215,55 @@ class Topology:
         return (2 * self._alpha(group)
                 + 2 * nbytes / min(a.bandwidth for a in group))
 
+    def reduce_scatter_seconds(self, nbytes: float, axes=None) -> float:
+        """Ring reduce-scatter of a globally ``nbytes`` tensor: every device
+        sends its full M partial and keeps the reduced M/N shard — same
+        alpha+beta shape as the all-gather it mirrors (Megatron-SP's block
+        exit; ``core.megatron_sp``).
+
+        Args:
+          nbytes: global tensor bytes (M).
+          axes: sub-group as Link objects or axis names (full group when
+            None).
+        Returns:
+          seconds (0.0 for a 1-device group).
+        """
+        group = self._select(axes)
+        n = 1
+        for a in group:
+            n *= a.size
+        if n <= 1:
+            return 0.0
+        return self._alpha(group) + nbytes / min(a.bandwidth for a in group)
+
+    def ring_seconds(self, nbytes: float, axes=None) -> float:
+        """N-step ring stream of a globally ``nbytes`` tensor
+        (``core.overlap.ring_stream``: fixed perm ``i -> i+1``, N hops of
+        M/N).  Unlike the phase-decomposed collectives, every hop crosses
+        the SAME fixed neighbour pairs, so each step is gated by the slowest
+        link on the ring — per-step cost ``max_a(alpha_a + (M/N)/beta_a)``,
+        not a per-axis sum.  On a uniform topology this folds to exactly M
+        (N steps x M/N), the Table-3 ring byte count.
+
+        Args:
+          nbytes: global tensor bytes of the streamed blocks (K+V for ring
+            attention).
+          axes: sub-group as Link objects or axis names (full group when
+            None).
+        Returns:
+          SYNCHRONOUS seconds of the full stream (0.0 for a 1-device
+          group); the per-step overlap with fold compute is applied by
+          ``embedded_seconds``.
+        """
+        group = self._select(axes)
+        n = 1
+        for a in group:
+            n *= a.size
+        if n <= 1:
+            return 0.0
+        step = max(a.latency + (nbytes / n) / a.bandwidth for a in group)
+        return n * step
+
     def all_to_all_seconds(self, nbytes: float, axes=None) -> float:
         """Tiled all-to-all re-tiling each device's M/N shard.  Hierarchical
         groups pay one phase per axis; phi_a folds the single-axis case to
@@ -311,6 +368,105 @@ class Topology:
         if kind != "switch" or compute_seconds <= 0.0:
             return comm
         return max(comm, compute_seconds) - compute_seconds
+
+    # -- embedded strategy pricing (the (stage, dim, strategy) DP) -----------
+
+    def embedded_seconds(self, strategy: str, nbytes: float,
+                         dim: Optional[int], *,
+                         kv_bytes: Optional[float] = None,
+                         kv_heads: Optional[int] = None,
+                         compute_seconds: float = 0.0) -> float:
+        """Seconds a stage pays to compute along the SHARDED dim ``dim``
+        with an embedded SP strategy instead of DSP-switching off it.
+        Prices the strategy's in-stage collectives on the dim's shard group
+        (same alpha+beta models as the Table-2 transitions), with the
+        overlap each strategy structurally provides:
+
+          dsp       0 — the stage computes freely; boundary transitions
+                    price the switches (``transition_seconds``).
+          ulysses   2 a2a of the stream (q in, out back) + 2 a2a of K/V —
+                    or 2 ALL-GATHERS of K/V when ``kv_heads`` does not
+                    divide over the group (GQA: too few heads to scatter).
+                    Blocking collectives: never hides.
+          ring      ``ring_seconds`` of the K/V blocks; each ppermute hop
+                    overlaps the fold compute (``core.overlap.ring_stream``
+                    is inherently pipelined), so with a compute budget c
+                    the exposed cost is N * max(step - c/N, 0).
+          megatron  2 x (all-gather + reduce-scatter) of the full stream
+                    (attention and MLP halves; ``core.megatron_sp``).
+                    Blocking: never hides.
+          hybrid    USP (arxiv 2405.07719) on a >=2-axis group: Ulysses-
+                    style a2a of host-local shards INSIDE the inner axes +
+                    ring K/V stream ACROSS the outer (DCN) axis.  The inner
+                    a2as block; the outer ring hops hide like "ring".
+
+        Args:
+          strategy: one of ``STRATEGIES``.
+          nbytes: global bytes of the residual stream (M).
+          dim: logical dim the shard sits on (selects the placement group).
+            Embedded strategies parallelise the stage's compute across the
+            whole SP group, so a dim placed on a strict sub-group cannot
+            host one — raises ValueError (callers skip such candidates).
+          kv_bytes: global bytes of the K/V activations streamed by
+            ring/hybrid and scattered by ulysses (default 2M, the MHA
+            convention of Table 3).
+          kv_heads: K/V head count, for the GQA divisibility of head-
+            scattering strategies (None = divisible, the MHA default).
+          compute_seconds: per-device kernel seconds of the stage, the hide
+            budget of the inherently-overlapped permute streams (0 under
+            ``overlap=None`` — synchronous pricing).
+        Returns:
+          exposed seconds (>= 0); 0.0 for a 1-device group.
+        """
+        group = self.group(dim)
+        n = 1
+        for a in group:
+            n *= a.size
+        if strategy == "dsp":
+            return 0.0
+        if n <= 1:
+            return 0.0
+        if n < self.size:
+            raise ValueError(
+                f"embedded strategy {strategy!r} on dim {dim}: placement "
+                f"group {tuple(a.name for a in group)} is a strict "
+                f"sub-group ({n} < {self.size}); embedded SP computes "
+                f"across the whole group")
+        kv = float(kv_bytes) if kv_bytes is not None else 2.0 * nbytes
+        c = max(compute_seconds, 0.0)
+
+        def kv_scatter(sub, n_sub, kv_local):
+            # q/out a2as always scatter (q heads = model heads, divisible by
+            # construction of the mesh); K/V falls back to replication when
+            # GQA leaves fewer heads than devices
+            if kv_heads is None or kv_heads % n_sub == 0:
+                return 2.0 * self.all_to_all_seconds(kv_local / 2.0, sub)
+            return 2.0 * self.all_gather_seconds(kv_local / 2.0, sub)
+
+        if strategy == "ulysses":
+            return (2.0 * self.all_to_all_seconds(nbytes, group)
+                    + kv_scatter(group, n, kv))
+        if strategy == "ring":
+            step = max(a.latency + (kv / n) / a.bandwidth for a in group)
+            return n * max(step - c / n, 0.0)
+        if strategy == "megatron":
+            return 2.0 * (self.all_gather_seconds(nbytes, group)
+                          + self.reduce_scatter_seconds(nbytes, group))
+        if strategy == "hybrid":
+            if len(group) < 2:
+                raise ValueError(
+                    "hybrid strategy needs a >=2-axis group (outer ring x "
+                    f"inner a2a); dim {dim} shards over "
+                    f"{tuple(a.name for a in group)}")
+            outer, inner = group[0], group[1:]
+            h = outer.size
+            p = n // h
+            inner_t = (2.0 * self.all_to_all_seconds(nbytes / h, inner)
+                       + kv_scatter(inner, p, kv / h))
+            step = outer.latency + (kv / n) / outer.bandwidth
+            return inner_t + h * max(step - c / h, 0.0)
+        raise ValueError(f"unknown strategy {strategy!r} "
+                         f"(have {STRATEGIES})")
 
     # -- elastic resize ------------------------------------------------------
 
@@ -418,6 +574,6 @@ def plan_seconds(topology: Topology, kinds_bytes: Sequence[Tuple[str, float,
 
 
 __all__ = [
-    "Link", "Topology", "plan_seconds",
+    "Link", "Topology", "plan_seconds", "STRATEGIES",
     "ICI_BW", "DCN_BW", "ICI_LATENCY", "DCN_LATENCY",
 ]

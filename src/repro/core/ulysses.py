@@ -20,6 +20,17 @@ import jax.numpy as jnp
 AttnFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
 
 
+def attention_bytes(global_bytes: float, n: int, *, kv_bytes=None,
+                    kv_heads=None) -> float:
+    """Per-device volume of one Ulysses attention, routed through the
+    shared constant ``core.dsp.per_device_bytes("ulysses", ...)`` (= 4M/N
+    for MHA q/k/v/o a2as; the GQA K/V scatter shrinks — or degrades to
+    replication when kv_heads does not divide N)."""
+    from repro.core.dsp import per_device_bytes
+    return per_device_bytes("ulysses", global_bytes, n, kv_bytes=kv_bytes,
+                            kv_heads=kv_heads)
+
+
 def _a2a(x: jax.Array, axis_name: str, split_axis: int, concat_axis: int) -> jax.Array:
     return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
                               concat_axis=concat_axis, tiled=True)
@@ -37,6 +48,30 @@ def ulysses_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     v = _a2a(v, axis_name, split_axis=head_dim, concat_axis=seq_dim)
     o = attn_fn(q, k, v)                     # (B, S, H/N, D)
     return _a2a(o, axis_name, split_axis=seq_dim, concat_axis=head_dim)
+
+
+def usp_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  inner_axis: str = "sp_in", outer_axis: str = "sp_out",
+                  causal: bool = False, seq_dim: int = 1,
+                  head_dim: int = 2) -> jax.Array:
+    """USP hybrid (arxiv 2405.07719): Ulysses a2a inside the fast mesh axis
+    composed with ring attention across the slow one — the executed form of
+    the strategy DP's "hybrid" pick on a 2D SP process grid
+    (``launch.mesh.make_sp2d_mesh``).
+
+    q: local (B, S/(h*p), H, D) sharded over BOTH axes (outer size h major,
+    inner size p minor); k/v may carry fewer heads (GQA) as long as
+    kv_heads % p == 0.  The inner a2as reshard seq -> heads so each device
+    holds the outer-host-local sequence S/h with H/p heads; the ring then
+    streams K/V blocks across ``outer_axis`` only — the DCN axis carries
+    kv/N per hop and nothing else.  Returns local (B, S/(h*p), H, D).
+    """
+    from repro.core.ring import ring_attention
+    q = _a2a(q, inner_axis, split_axis=head_dim, concat_axis=seq_dim)
+    k = _a2a(k, inner_axis, split_axis=head_dim, concat_axis=seq_dim)
+    v = _a2a(v, inner_axis, split_axis=head_dim, concat_axis=seq_dim)
+    o = ring_attention(q, k, v, axis_name=outer_axis, causal=causal)
+    return _a2a(o, inner_axis, split_axis=seq_dim, concat_axis=head_dim)
 
 
 def ulysses_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,

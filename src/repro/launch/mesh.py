@@ -31,6 +31,39 @@ def make_mesh(shape, axes):
     return compat.make_mesh(tuple(shape), tuple(axes))
 
 
+def factorize_sp(topology: Topology):
+    """Factor an SP degree into the 2D process grid a hybrid (USP) stage
+    runs on: ``(outer, inner)`` with the OUTER (slow, e.g. DCN) axis first
+    — ``Topology`` axes are declared outermost-first, so the outer factor
+    is the first axis's size and the inner factor the rest.  A single-axis
+    fabric has no hybrid factorization and returns ``(1, n)``."""
+    if len(topology.axes) < 2:
+        return 1, topology.size
+    outer = topology.axes[0].size
+    return outer, topology.size // outer
+
+
+def make_sp2d_mesh(outer: int, inner: int, dp: int = 1,
+                   dp_axis: str = "data"):
+    """Mesh whose SP axis is factorized into a 2D process grid
+    ``(sp_out=outer, sp_in=inner)`` — device order keeps the outer (DCN)
+    factor MAJOR so each sp_out slice is one host's ICI group.  A hybrid
+    stage ring-streams K/V over "sp_out" while a2a-ing inside "sp_in"
+    (``core.ulysses.usp_attention``); DSP stages switch over the joint
+    ("sp_out", "sp_in") axis pair.  ``dp > 1`` prepends a data axis."""
+    if dp > 1:
+        return compat.make_mesh((dp, outer, inner),
+                                (dp_axis, "sp_out", "sp_in"))
+    return compat.make_mesh((outer, inner), ("sp_out", "sp_in"))
+
+
+def sp2d_topology(outer: int, inner: int, *, placement=None) -> Topology:
+    """The fabric of ``make_sp2d_mesh``: ``outer`` hosts of ``inner`` chips
+    (DCN outermost) — ``Topology.multihost`` with the same factor order, so
+    ``factorize_sp`` round-trips."""
+    return Topology.multihost(outer, inner, placement=placement)
+
+
 def production_topology(*, multi_pod: bool = False) -> Topology:
     """Topology of the production mesh's SP (``model``) axis: 16 chips on
     ICI.  The pod axis is DCN but carries only DP gradient all-reduces, so

@@ -46,7 +46,7 @@ from repro.core.layout import from_mesh
 from repro.core.plan import Stage
 from repro.core.schedule import (PeriodicSchedule, ScheduleExecutor,
                                  UnrolledSchedule, plan_joint_schedule,
-                                 plan_schedule)
+                                 plan_schedule, plan_strategy_schedule)
 from repro.kernels.ops import flash_attention
 from repro.models import layers as L
 
@@ -63,10 +63,15 @@ class T2DConfig:
     mlp_kind: str = "gelu"            # paper's FFN is 2-layer w/ activation
     modulate: bool = True             # DiT adaLN-zero timestep modulation
     dtype: Any = jnp.bfloat16
+    n_kv_heads: Optional[int] = None  # GQA: K/V head count (None = MHA)
 
     @property
     def dh(self) -> int:
         return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def kvh(self) -> int:
+        return self.n_kv_heads or self.n_heads
 
 
 # ---------------------------------------------------------------------------
@@ -79,8 +84,8 @@ def _init_block(key, cfg: T2DConfig):
     p = {
         "ln1": L.init_norm(d, dtype=cfg.dtype),
         "wq": L.init_linear(ks[0], d, h * dh, dtype=cfg.dtype),
-        "wk": L.init_linear(ks[1], d, h * dh, dtype=cfg.dtype),
-        "wv": L.init_linear(ks[2], d, h * dh, dtype=cfg.dtype),
+        "wk": L.init_linear(ks[1], d, cfg.kvh * dh, dtype=cfg.dtype),
+        "wv": L.init_linear(ks[2], d, cfg.kvh * dh, dtype=cfg.dtype),
         "wo": L.init_linear(ks[3], h * dh, d, dtype=cfg.dtype),
         "ln2": L.init_norm(d, dtype=cfg.dtype),
         "mlp": L.init_mlp(ks[4], d, cfg.d_ff, kind=cfg.mlp_kind,
@@ -116,7 +121,8 @@ def init_t2d(key, cfg: T2DConfig):
 
 def t2d_param_count(cfg: T2DConfig) -> int:
     d, h, dh = cfg.d_model, cfg.n_heads, cfg.dh
-    per_block = d * h * dh * 4 + L.mlp_param_count(d, cfg.d_ff, cfg.mlp_kind)
+    per_block = (d * h * dh * 2 + d * cfg.kvh * dh * 2
+                 + L.mlp_param_count(d, cfg.d_ff, cfg.mlp_kind))
     if cfg.modulate:
         per_block += d * 6 * d
     return cfg.n_layers * per_block + 2 * cfg.in_dim * d + d * d
@@ -138,15 +144,23 @@ def stages(cfg: T2DConfig, *, t_len: Optional[int] = None,
     gradients crossing the same boundaries backward (joint fwd+bwd
     planning; defaults to the activation dtype)."""
     shape = None
+    kv = None
     if None not in (t_len, s_len, batch):
         shape = (batch, t_len, s_len, cfg.d_model)
+        # K + V activations of one attention (the payload embedded
+        # strategies stream or head-scatter; GQA shrinks it)
+        kv = 2.0 * batch * t_len * s_len * cfg.kvh * cfg.dh
     db = jnp.dtype(cfg.dtype).itemsize
     out = []
     for i in range(cfg.n_layers // 2):
         out.append(Stage(frozenset({2}), f"layer{i}.spatial", shape, db,
-                         bwd_dtype_bytes=grad_dtype_bytes))
+                         bwd_dtype_bytes=grad_dtype_bytes,
+                         kv_bytes=None if kv is None else kv * db,
+                         kv_heads=cfg.kvh))
         out.append(Stage(frozenset({1}), f"layer{i}.temporal", shape, db,
-                         bwd_dtype_bytes=grad_dtype_bytes))
+                         bwd_dtype_bytes=grad_dtype_bytes,
+                         kv_bytes=None if kv is None else kv * db,
+                         kv_heads=cfg.kvh))
     return out
 
 
@@ -192,6 +206,31 @@ def dsp_schedule(cfg: T2DConfig, n: int, *, t_len: Optional[int] = None,
         return sched.unrolled()
 
 
+def strategy_schedule(cfg: T2DConfig, n: int, *, t_len: Optional[int] = None,
+                      s_len: Optional[int] = None, batch: Optional[int] = None,
+                      initial: int = 1, topology=None,
+                      overlap: Optional[str] = None):
+    """Solve the unified (stage, dim, strategy) plan for this model
+    (``core.schedule.plan_strategy_schedule``) — on a uniform/absent
+    topology this IS ``dsp_schedule``'s plan (all-"dsp", bit-for-bit); on a
+    tiered fabric stages may come back with embedded strategies, e.g. the
+    ICI x DCN hybrid (ring over DCN x a2a inside ICI) at temporal stages.
+    Returns the scan-body ``PeriodicSchedule`` when the plan repeats with
+    the 2-stage layer period, else the ``UnrolledSchedule`` view."""
+    st = stages(cfg, t_len=t_len, s_len=s_len, batch=batch)
+    if overlap is not None:
+        from repro.analysis.roofline import attach_compute_seconds
+        st = attach_compute_seconds(
+            st, cfg, topology if topology is not None else max(n, 1))
+    sched = plan_strategy_schedule(st, [1, 2], n=max(n, 1), initial=initial,
+                                   final=initial, topology=topology,
+                                   overlap=overlap)
+    try:
+        return sched.periodic(2)
+    except ValueError:
+        return sched.unrolled()
+
+
 # in-period stage index by the block's compute axis (spatial computes S=2)
 _STAGE_OF_AXIS = {2: 0, 1: 1}
 
@@ -227,7 +266,12 @@ AttnImpl = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
 
 def _default_attn(backend: str) -> AttnImpl:
     def impl(q, k, v):
-        # q,k,v: (B', L, H, D) -> (B', L, H, D); non-causal full attention
+        # q: (B', L, H, D); k/v may carry fewer (GQA) heads -> repeat them
+        # up to H locally (the kernel wants equal head counts)
+        rep = q.shape[2] // k.shape[2]
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
         o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                             v.transpose(0, 2, 1, 3), causal=False,
                             backend=backend)
@@ -287,8 +331,8 @@ def t2d_block(p, x, cfg: T2DConfig, *, axis: int, t_emb=None,
     hf = fold(h)
     l = hf.shape[1]
     q = L.linear(p["wq"], hf).reshape(-1, l, h_heads, dh)
-    k = L.linear(p["wk"], hf).reshape(-1, l, h_heads, dh)
-    v = L.linear(p["wv"], hf).reshape(-1, l, h_heads, dh)
+    k = L.linear(p["wk"], hf).reshape(-1, l, cfg.kvh, dh)
+    v = L.linear(p["wv"], hf).reshape(-1, l, cfg.kvh, dh)
     o = attn_impl(q, k, v).reshape(-1, l, h_heads * dh)
     o = anchor(unfold(L.linear(p["wo"], o)))
     if mod is not None:
@@ -427,7 +471,7 @@ def forward(params, x, t, cfg: T2DConfig, *, mesh: Optional[Mesh] = None,
 
         from repro.models.attention import chunked_attention, AttnConfig
         acfg = AttnConfig(d_model=cfg.d_model, n_heads=cfg.n_heads,
-                          n_kv_heads=cfg.n_heads, head_dim=cfg.dh, rope=False)
+                          n_kv_heads=cfg.kvh, head_dim=cfg.dh, rope=False)
 
         def attn_impl(q, k, v):
             return chunked_attention(q, k, v, acfg, mesh=mesh,
@@ -526,21 +570,60 @@ def make_spmd_forward(cfg: T2DConfig, mesh: Mesh, *, mode: str = "dsp",
                       remat: bool = False, overlap: Optional[str] = None):
     """Build jit-able forward(params, x, t) where x: (B, T, S, C_in) global.
 
-    mode in {"dsp", "ulysses", "ulysses_fused", "ring", "megatron"}.
-    Sequence parallel over ``axis_name`` (T enters sharded); batch over the
-    remaining axes.  Collective counts/volumes match paper Table 3.
+    mode in {"dsp", "ulysses", "ulysses_fused", "ring", "megatron",
+    "hybrid"}.  Sequence parallel over ``axis_name`` (T enters sharded);
+    batch over the remaining axes.  Collective counts/volumes match paper
+    Table 3.
+
+    mode="hybrid" is USP (the strategy DP's ICI x DCN pick): the mesh must
+    carry the 2D SP process grid ("sp_out", "sp_in") from
+    ``launch.mesh.make_sp2d_mesh`` — T enters sharded over BOTH axes
+    (sp_out major); temporal attention a2as q/k/v inside "sp_in" and
+    ring-streams K/V across "sp_out" (``core.ulysses.usp_attention``);
+    spatial blocks are fully local.  Requires n_heads and kv_heads
+    divisible by the inner size.
 
     ``overlap`` (dsp mode only) runs every planned switch through
     ``core.overlap.overlapped_switch``: n-1 independent per-shard
     ``ppermute`` hops the compiler interleaves with the consuming block's
     kernels, instead of one blocking all-to-all.
     """
-    dp_axes = tuple(a for a in mesh.axis_names if a != axis_name)
+    sp_axes = ("sp_out", "sp_in") if mode == "hybrid" else (axis_name,)
+    dp_axes = tuple(a for a in mesh.axis_names if a not in sp_axes)
     dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
-    n = mesh.shape[axis_name]
+    if mode == "hybrid":
+        missing = [a for a in sp_axes if a not in mesh.axis_names]
+        if missing:
+            raise ValueError(
+                f"hybrid mode needs a 2D SP mesh with axes {sp_axes} "
+                f"(launch.mesh.make_sp2d_mesh); missing {missing}")
+        h_out = mesh.shape["sp_out"]
+        p_in = mesh.shape["sp_in"]
+        n = h_out * p_in
+        if cfg.n_heads % p_in or cfg.kvh % p_in:
+            raise ValueError(
+                f"hybrid mode a2as heads over the inner axis: n_heads "
+                f"{cfg.n_heads} and kv_heads {cfg.kvh} must divide by "
+                f"sp_in={p_in}")
+    else:
+        n = mesh.shape[axis_name]
+    if mode == "megatron" and cfg.kvh != cfg.n_heads:
+        raise ValueError("megatron mode TP-slices wq/wk/wv uniformly and "
+                         "assumes MHA (n_kv_heads == n_heads)")
+    if mode == "ulysses_fused" and cfg.kvh != cfg.n_heads:
+        raise ValueError("ulysses_fused stacks q/k/v and needs equal "
+                         "shapes (MHA); use mode='ulysses' for GQA")
+    if mode == "ulysses" and cfg.kvh != cfg.n_heads and cfg.kvh % n:
+        raise ValueError(
+            f"ulysses mode a2as K/V heads over the SP axis: kv_heads "
+            f"{cfg.kvh} must divide by n={n} (or use MHA)")
 
     def local_fwd(params, x, t):
-        idx = jax.lax.axis_index(axis_name)
+        if mode == "hybrid":
+            idx = (jax.lax.axis_index("sp_out") * p_in
+                   + jax.lax.axis_index("sp_in"))
+        else:
+            idx = jax.lax.axis_index(axis_name)
         t_loc = x.shape[1]
         x = L.patch_embed(params["embed"], x)
         x = add_pos_embed(x, cfg, t_offset=idx * t_loc, s_offset=0)
@@ -592,6 +675,18 @@ def make_spmd_forward(cfg: T2DConfig, mesh: Mesh, *, mode: str = "dsp",
                 xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
                                attn_impl=temporal_attn, backend=backend)
                 return xc, None
+        elif mode == "hybrid":
+            def temporal_attn(q, k, v):
+                return ulysses_core.usp_attention(
+                    q, k, v, inner_axis="sp_in", outer_axis="sp_out",
+                    causal=False)
+
+            def body(xc, lp):
+                xc = t2d_block(lp["spatial"], xc, cfg, axis=2, t_emb=t_emb,
+                               backend=backend)
+                xc = t2d_block(lp["temporal"], xc, cfg, axis=1, t_emb=t_emb,
+                               attn_impl=temporal_attn, backend=backend)
+                return xc, None
         elif mode == "megatron":
             def body(xc, lp):
                 xc = _megatron_block(lp["spatial"], xc, cfg, axis=2,
@@ -609,7 +704,11 @@ def make_spmd_forward(cfg: T2DConfig, mesh: Mesh, *, mode: str = "dsp",
         x = L.rms_norm(params["final_norm"], x)
         return L.linear(params["head"], x)
 
-    batch_spec = P(dp, axis_name, None, None)    # sharded on T (dim 1)
+    # T (dim 1) enters sharded: over the joint 2D SP grid in hybrid mode
+    # (sp_out MAJOR — each sp_out slice is one host's contiguous T block),
+    # over the single SP axis otherwise
+    seq_entry = sp_axes if mode == "hybrid" else axis_name
+    batch_spec = P(dp, seq_entry, None, None)
     t_spec = P(dp) if dp is not None else P()
     fwd = compat.shard_map(
         local_fwd, mesh=mesh,

@@ -239,6 +239,13 @@ class Sharder:
     bwd_mixer_dim: Optional[int] = None
     bwd_entry_dim: Optional[int] = None
     bwd_carry_dim: Optional[int] = None
+    # EXECUTION strategy of the mixer stages from the unified
+    # (stage, dim, strategy) DP (core.plan.plan_strategy_dp): "dsp" = the
+    # hook layouts above are the whole story (switches at class boundaries);
+    # "ulysses"/"ring"/"hybrid"/"megatron" = the mixer keeps the RESID
+    # layout (shard on its compute dim) and the model body runs the
+    # embedded attention's own collectives instead of a head switch
+    mixer_strategy: str = "dsp"
     # mesh communication model (core.topology.Topology) the schedule was (or
     # will be) solved against — carried alongside the plan so model forwards
     # that attach a schedule late price it on the same fabric
@@ -251,6 +258,7 @@ class Sharder:
                 is not None else self.topology)
         return dataclasses.replace(self, schedule=schedule,
                                    resid_dim=resid, mixer_dim=mixer,
+                                   mixer_strategy=_stage_strategy(schedule),
                                    topology=topo, **bwd)
 
     @property
@@ -632,6 +640,34 @@ def _stage_bwd_dims(schedule) -> dict:
             "bwd_carry_dim": schedule.bwd_plan[-1]}
 
 
+def _stage_strategy(schedule) -> str:
+    """Planned EXECUTION strategy of the mixer stage class.
+
+    A schedule without a strategy assignment (every pre-strategy plan) is
+    all-"dsp".  The hook mechanism executes one strategy per stage class,
+    mirroring ``_stage_dims``: divergent mixer strategies are rejected
+    loudly, and an embedded strategy on a resid/channel stage is rejected
+    outright (nothing in the hook path can execute it — embedded SP is an
+    attention/mixer construct)."""
+    if schedule is None or getattr(schedule, "strategies", None) is None:
+        return "dsp"
+    mixer = None
+    for st, s in zip(schedule.stages, schedule.strategies):
+        if 1 in st.compute_dims:
+            if mixer is not None and mixer != s:
+                raise ValueError(
+                    f"non-uniform strategy plan: mixer stage {st.name!r} "
+                    f"runs {s!r}, earlier mixer stages run {mixer!r}; the "
+                    f"Sharder hook path needs one strategy per stage class")
+            mixer = s
+        elif s != "dsp":
+            raise ValueError(
+                f"stage {st.name!r} is a resid/channel stage but the plan "
+                f"assigns embedded strategy {s!r}; the Sharder hook path "
+                f"executes embedded SP in mixer stages only")
+    return mixer if mixer is not None else "dsp"
+
+
 def make_sharder(mesh: Optional[Mesh], plan: ParallelPlan,
                  schedule=None, topology=None) -> Sharder:
     """``topology`` (core.topology.Topology) models the SP axis's links;
@@ -639,13 +675,14 @@ def make_sharder(mesh: Optional[Mesh], plan: ParallelPlan,
     it)."""
     resid, mixer = _stage_dims(plan, schedule)
     bwd = _stage_bwd_dims(schedule)
+    strategy = _stage_strategy(schedule)
     if schedule is not None and getattr(schedule, "topology", None) is not None:
         topology = schedule.topology
     if mesh is None:
         return Sharder(mesh=None, plan=plan, schedule=schedule,
                        resid_dim=resid, mixer_dim=mixer, topology=topology,
-                       **bwd)
+                       mixer_strategy=strategy, **bwd)
     dp = tuple(a for a in mesh.axis_names if a != "model")
     return Sharder(mesh=mesh, plan=plan, dp=dp, sp="model",
                    schedule=schedule, resid_dim=resid, mixer_dim=mixer,
-                   topology=topology, **bwd)
+                   topology=topology, mixer_strategy=strategy, **bwd)

@@ -275,6 +275,33 @@ def main():
     lm_train = {"mirrored": lm_case(),
                 "forced": lm_case(bwd_dims=(2, 2, 2))}
 
+    # ---- hybrid (ring x DSP) compiled contract (PR 7) ---------------------
+    # The ICI x DCN instance the strategy DP picks hybrid on: 2 hosts x 4
+    # devices, T=128 forces the s-axis (4) below full sharding for embedded
+    # modes at SPATIAL stages, so only temporal stages go hybrid.
+    from repro.core.topology import Topology
+    from repro.models.transformer2d import strategy_schedule
+
+    hcfg = T2DConfig(name="hlo-hybrid", n_layers=4, d_model=128, n_heads=8,
+                     d_ff=256, in_dim=16, modulate=False, n_kv_heads=4,
+                     dtype=jnp.float32)
+    hb, ht, hs = 2, 128, 4
+    hmesh = compat.make_mesh((2, 4), ("sp_out", "sp_in"))
+    hparams = init_t2d(jax.random.PRNGKey(5), hcfg)
+    hx = jax.random.normal(jax.random.PRNGKey(6), (hb, ht, hs, hcfg.in_dim))
+    htt = jnp.zeros((hb,))
+
+    topo = Topology.multihost(2, 4, placement={2: ("ici",)})
+    hsched = strategy_schedule(hcfg, 8, t_len=ht, s_len=hs, batch=hb,
+                               initial=1, topology=topo)
+    hyb_fwd = make_spmd_forward(hcfg, hmesh, mode="hybrid", backend="ref")
+    hybrid = {
+        "planned": hsched.schedule.expected_strategy_collectives(8, outer=2),
+        "strategies": list(hsched.schedule.strategies),
+        "n_periods": hcfg.n_layers // 2,
+        "fwd": counts(hyb_fwd, hparams, hx, htt),
+    }
+
     print(json.dumps({
         "planned": planned,
         "auto": auto,
@@ -285,6 +312,7 @@ def main():
         "t2d_train": t2d_train,
         "synthetic": synthetic,
         "lm_train": lm_train,
+        "hybrid": hybrid,
     }))
 
 

@@ -157,6 +157,25 @@ def test_overlap_parity_is_bitwise(hlo_counts):
         assert case["grad_bitwise_vs_explicit"], (mode, case)
 
 
+# ---------------------------------------------------------------------------
+# Hybrid (ring x DSP) compiled contract (PR 7)
+# ---------------------------------------------------------------------------
+
+def test_hybrid_compiled_contract(hlo_counts):
+    """On the ICI x DCN instance the strategy DP assigns hybrid to the
+    temporal stages and the compiled forward shows EXACTLY the planned
+    embedded collectives — 4 all-to-alls (q,k,v in + o out, inside ICI) and
+    2*outer collective-permutes (the DCN ring) per hybrid stage, plus one
+    all-to-all per planned switch (zero here: dims are constant) and
+    NOTHING else.  No all-gather, no reduce-scatter: the hybrid never
+    materializes an unsharded tensor."""
+    hy = hlo_counts["hybrid"]
+    assert hy["strategies"] == ["dsp", "hybrid"] * hy["n_periods"], hy
+    # 2 hybrid stages x (4 a2a + 2*outer permutes), outer = 2
+    assert hy["planned"] == {"all-to-all": 8, "collective-permute": 8}, hy
+    assert hy["fwd"] == hy["planned"], hy
+
+
 def test_scanned_lm_train_planned_backward_reaches_compiler(hlo_counts):
     """Scanned-LM train step: a forced non-mirrored joint plan leaves the
     forward leg untouched (identical collective counts) but changes the

@@ -1,0 +1,370 @@
+"""The unified (stage, dim, strategy) plan space (core.plan.plan_strategy_dp).
+
+Three pinned properties:
+
+* DP == brute-force oracle (hypothesis) — the exact DP over
+  (stage, dim, strategy) states returns the cheapest admissible assignment,
+  with float-exact cost equality (identical accumulation order).
+* Uniform collapse — on ``Topology.uniform(n)`` (or no topology at all) the
+  strategy DP delegates WHOLESALE to the classic switch DP: dims bit-for-bit
+  identical, strategies all-"dsp".  The byte special case stays the oracle.
+* ICI x DCN regression — on the tiered fabric with a placement-constrained
+  spatial dim, the DP stays resident on T and assigns the USP hybrid (ring
+  across DCN x a2a inside ICI) to the temporal stages, strictly beating
+  every pure mode; on flat ICI the same instance stays pure DSP.
+
+Plus the execution-side derivations: Schedule/Sharder carry the per-stage
+strategy, and the 2D SP factorization round-trips.
+"""
+import pytest
+
+from repro.core.plan import (Stage, StrategyPlan, brute_force_strategy,
+                             plan_strategy_dp, plan_switches_dp,
+                             strategy_plan_cost)
+from repro.core.topology import STRATEGIES, Topology
+
+M = 2 * 128 * 4 * 128 * 4.0          # (2, 128, 4, 128) f32
+
+
+def _t2d_stages(pairs=2, shape=(2, 128, 4, 128), kv_heads=4, db=4):
+    kv = float(shape[0] * shape[1] * shape[2] * shape[3] * db)
+    out = []
+    for i in range(pairs):
+        out.append(Stage(frozenset({2}), f"l{i}.spatial", shape, db,
+                         kv_bytes=kv, kv_heads=kv_heads))
+        out.append(Stage(frozenset({1}), f"l{i}.temporal", shape, db,
+                         kv_bytes=kv, kv_heads=kv_heads))
+    return out
+
+
+def _ici_dcn():
+    # S=4 divides the per-host ICI group but not the 8-way SP axis: dim 2's
+    # shard can only live inside a host — the forced placement is what makes
+    # pure DSP pay a cross-placement switch + DCN gather per pair
+    return Topology.multihost(2, 4, placement={2: ("ici",)})
+
+
+# ---------------------------------------------------------------------------
+# DP == brute force (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _random_topology(draw):
+    import hypothesis.strategies as st
+    kind = draw(st.integers(0, 2))
+    if kind == 0:
+        return Topology.multihost(2, 4)
+    if kind == 1:
+        placed = draw(st.sampled_from([2, 3]))
+        return Topology.multihost(2, 4, placement={placed: ("ici",)})
+    return Topology.flat_ici(8)
+
+
+def test_strategy_dp_matches_brute_force():
+    pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @st.composite
+    def problems(draw):
+        n_dims = draw(st.integers(2, 3))
+        dims = list(range(1, 1 + n_dims))
+        n_stages = draw(st.integers(1, 5))
+        stages = []
+        for i in range(n_stages):
+            forbid = draw(st.sets(st.sampled_from(dims), min_size=0,
+                                  max_size=n_dims - 1))
+            # exercise per-stage strategy restriction too
+            strats = draw(st.one_of(
+                st.none(),
+                st.sets(st.sampled_from(STRATEGIES), min_size=1)
+                .map(tuple)))
+            kvh = draw(st.sampled_from([None, 2, 3, 4, 8]))
+            scale = draw(st.integers(1, 4))
+            stages.append(Stage(frozenset(forbid), f"s{i}",
+                                (2, 16 * scale, 8, 64), 4,
+                                strategies=strats, kv_heads=kvh))
+        topo = _random_topology(draw)
+        initial = draw(st.one_of(st.none(), st.sampled_from(dims)))
+        final = draw(st.one_of(st.none(), st.sampled_from(dims)))
+        return stages, dims, initial, final, topo
+
+    @given(problems())
+    @settings(max_examples=60, deadline=None)
+    def check(problem):
+        stages, dims, initial, final, topo = problem
+        try:
+            plan = plan_strategy_dp(stages, dims, initial=initial,
+                                    final=final, topology=topo)
+        except ValueError:
+            with pytest.raises(ValueError):
+                brute_force_strategy(stages, dims, initial=initial,
+                                     final=final, topology=topo)
+            return
+        cost = strategy_plan_cost(stages, plan, initial=initial,
+                                  final=final, topology=topo)
+        best_cost, best = brute_force_strategy(stages, dims, initial=initial,
+                                               final=final, topology=topo)
+        # float-EXACT: the DP accumulates in the same order as the pricer
+        assert cost == best_cost
+        # validity: "dsp" respects compute dims; embedded strategies are
+        # exactly the stage's shard-on-compute-dim escape hatch
+        for st_, d, s in zip(stages, plan.dims, plan.strategies):
+            if s == "dsp":
+                assert st_.allows(d)
+
+    check()
+
+
+def test_strategy_dp_matches_brute_force_seeded():
+    """Deterministic oracle sweep (runs even without hypothesis)."""
+    import random
+    rng = random.Random(20260808)
+    topos = [Topology.multihost(2, 4),
+             Topology.multihost(2, 4, placement={2: ("ici",)}),
+             Topology.multihost(2, 4, placement={3: ("ici",)}),
+             Topology.flat_ici(8), Topology.uniform(8)]
+    for _ in range(80):
+        n_dims = rng.randint(2, 3)
+        dims = list(range(1, 1 + n_dims))
+        stages = []
+        for i in range(rng.randint(1, 5)):
+            forbid = frozenset(rng.sample(dims, rng.randint(0, n_dims - 1)))
+            strats = (None if rng.random() < 0.5 else
+                      tuple(rng.sample(STRATEGIES,
+                                       rng.randint(1, len(STRATEGIES)))))
+            kvh = rng.choice([None, 2, 3, 4, 8])
+            stages.append(Stage(frozenset(forbid), f"s{i}",
+                                (2, 16 * rng.randint(1, 4), 8, 64), 4,
+                                strategies=strats, kv_heads=kvh))
+        topo = rng.choice(topos)
+        initial = rng.choice([None] + dims)
+        final = rng.choice([None] + dims)
+        try:
+            plan = plan_strategy_dp(stages, dims, initial=initial,
+                                    final=final, topology=topo)
+        except ValueError:
+            with pytest.raises(ValueError):
+                brute_force_strategy(stages, dims, initial=initial,
+                                     final=final, topology=topo)
+            continue
+        cost = strategy_plan_cost(stages, plan, initial=initial,
+                                  final=final, topology=topo)
+        best_cost, _ = brute_force_strategy(stages, dims, initial=initial,
+                                            final=final, topology=topo)
+        assert cost == best_cost, (plan, cost, best_cost)
+
+
+# ---------------------------------------------------------------------------
+# Uniform collapse: bit-for-bit the classic DP
+# ---------------------------------------------------------------------------
+
+def test_uniform_topology_collapses_to_switch_dp():
+    pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @st.composite
+    def problems(draw):
+        n_dims = draw(st.integers(2, 4))
+        dims = list(range(1, 1 + n_dims))
+        n_stages = draw(st.integers(1, 6))
+        stages = []
+        for i in range(n_stages):
+            forbid = draw(st.sets(st.sampled_from(dims), min_size=0,
+                                  max_size=n_dims - 1))
+            scale = draw(st.integers(1, 3))
+            stages.append(Stage(frozenset(forbid), f"s{i}",
+                                (2, 8 * scale, 8, 32), 4))
+        initial = draw(st.one_of(st.none(), st.sampled_from(dims)))
+        final = draw(st.one_of(st.none(), st.sampled_from(dims)))
+        topo = draw(st.sampled_from([None, Topology.uniform(8)]))
+        return stages, dims, initial, final, topo
+
+    @given(problems())
+    @settings(max_examples=100, deadline=None)
+    def check(problem):
+        stages, dims, initial, final, topo = problem
+        try:
+            classic = plan_switches_dp(stages, dims, n=8, initial=initial,
+                                       final=final, topology=topo)
+        except ValueError:
+            with pytest.raises(ValueError):
+                plan_strategy_dp(stages, dims, n=8, initial=initial,
+                                 final=final, topology=topo)
+            return
+        sp = plan_strategy_dp(stages, dims, n=8, initial=initial,
+                              final=final, topology=topo)
+        assert sp.dims == tuple(classic)
+        assert sp.strategies == ("dsp",) * len(classic)
+
+    check()
+
+
+def test_uniform_collapse_t2d_instance():
+    stages = _t2d_stages()
+    topo = Topology.uniform(8)
+    sp = plan_strategy_dp(stages, (1, 2), topology=topo, initial=1, final=1)
+    classic = plan_switches_dp(stages, (1, 2), topology=topo,
+                               initial=1, final=1)
+    assert sp.dims == tuple(classic)
+    assert sp.strategies == ("dsp",) * len(stages)
+
+
+# ---------------------------------------------------------------------------
+# ICI x DCN regression: hybrid at temporal stages, pure DSP on flat ICI
+# ---------------------------------------------------------------------------
+
+def test_ici_dcn_picks_hybrid_at_temporal_stages():
+    stages = _t2d_stages()
+    sp = plan_strategy_dp(stages, (1, 2), topology=_ici_dcn(),
+                          initial=1, final=1)
+    # resident on T; USP hybrid exactly at the temporal (T-computing) stages
+    assert sp.dims == (1, 1, 1, 1)
+    assert sp.strategies == ("dsp", "hybrid", "dsp", "hybrid")
+
+
+def test_ici_dcn_hybrid_beats_every_pure_mode():
+    stages = _t2d_stages()
+    topo = _ici_dcn()
+    sp = plan_strategy_dp(stages, (1, 2), topology=topo, initial=1, final=1)
+    best = strategy_plan_cost(stages, sp, topology=topo, initial=1, final=1)
+    # pure dsp: the classic switch DP's own plan
+    dsp_dims = plan_switches_dp(stages, (1, 2), topology=topo,
+                                initial=1, final=1)
+    costs = {"dsp": strategy_plan_cost(
+        stages, StrategyPlan(tuple(dsp_dims), ("dsp",) * 4),
+        topology=topo, initial=1, final=1)}
+    # pure embedded modes: resident on T, the strategy at temporal stages
+    for strat in ("ulysses", "ring", "megatron"):
+        plan = StrategyPlan((1, 1, 1, 1), ("dsp", strat, "dsp", strat))
+        costs[strat] = strategy_plan_cost(stages, plan, topology=topo,
+                                          initial=1, final=1)
+    for mode, c in costs.items():
+        assert best < c, (mode, best, c)
+
+
+def test_flat_ici_stays_pure_dsp():
+    stages = _t2d_stages()
+    sp = plan_strategy_dp(stages, (1, 2), topology=Topology.flat_ici(8),
+                          initial=1, final=1)
+    assert sp.strategies == ("dsp",) * 4
+    # the classic alternating plan
+    classic = plan_switches_dp(stages, (1, 2),
+                               topology=Topology.flat_ici(8),
+                               initial=1, final=1)
+    assert sp.dims == tuple(classic)
+
+
+def test_embedded_requires_full_sharding_group():
+    # the placement-restricted dim (a strict sub-group) may transit with
+    # "dsp" but can NEVER host an embedded strategy: the stage would be
+    # under-sharded (replicated over DCN) and its compute inflation is not
+    # priced — the guard rejects the exploit
+    topo = _ici_dcn()
+    with pytest.raises(ValueError):
+        topo.embedded_seconds("ulysses", M, 2)
+    sp = plan_strategy_dp(_t2d_stages(), (1, 2), topology=topo,
+                          initial=1, final=1)
+    for d, s in zip(sp.dims, sp.strategies):
+        if s != "dsp":
+            assert topo.group_size(d) == topo.size
+
+
+def test_hybrid_needs_two_axis_group():
+    flat = Topology.flat_ici(8)
+    with pytest.raises(ValueError):
+        flat.embedded_seconds("hybrid", M, 1)
+
+
+# ---------------------------------------------------------------------------
+# Execution-side carry: Schedule / Sharder / mesh factorization
+# ---------------------------------------------------------------------------
+
+def test_plan_strategy_schedule_carries_strategies():
+    from repro.core.schedule import plan_strategy_schedule
+    stages = _t2d_stages()
+    sched = plan_strategy_schedule(stages, (1, 2), topology=_ici_dcn(),
+                                   initial=1, final=1)
+    assert sched.has_embedded
+    assert sched.strategies == ("dsp", "hybrid", "dsp", "hybrid")
+    ps = sched.periodic(2)
+    assert ps.strategies == ("dsp", "hybrid")
+    # the planned seconds of the full assignment price through the shared
+    # strategy cost model
+    assert sched.strategy_seconds() == strategy_plan_cost(
+        stages, StrategyPlan(sched.dims, sched.strategies),
+        topology=_ici_dcn(), initial=1, final=1)
+    # embedded collectives accounting: one hybrid stage = 4 a2a + 2*outer
+    # permutes
+    assert sched.expected_strategy_collectives(8, outer=2) == {
+        "all-to-all": 8, "collective-permute": 8}
+
+
+def test_periodic_rejects_nonperiodic_strategies():
+    from repro.core.schedule import Schedule
+    stages = _t2d_stages()
+    sched = Schedule(tuple(stages), (1, 1, 1, 1), initial=1, final=1,
+                     strategies=("dsp", "hybrid", "dsp", "dsp"))
+    with pytest.raises(ValueError):
+        sched.periodic(2)
+
+
+def test_sharder_derives_mixer_strategy():
+    from repro.core.schedule import plan_strategy_schedule
+    from repro.parallel.partition import ParallelPlan, make_sharder
+    sched = plan_strategy_schedule(_t2d_stages(), (1, 2),
+                                   topology=_ici_dcn(), initial=1, final=1)
+    sh = make_sharder(None, ParallelPlan(mode="dsp"), schedule=sched)
+    assert sh.mixer_strategy == "hybrid"
+    # resident plan: mixer stages keep the resid dim -> no head switch
+    assert sh.mixer_dim == 1 and sh.resid_dim == 1
+    assert not sh.wants_head_switch(8)
+    # strategy-less schedules stay "dsp"
+    from repro.core.schedule import plan_schedule
+    sh2 = make_sharder(None, ParallelPlan(mode="dsp"),
+                       schedule=plan_schedule(_t2d_stages(), (1, 2),
+                                              initial=1, final=1))
+    assert sh2.mixer_strategy == "dsp"
+
+
+def test_sharder_rejects_divergent_mixer_strategies():
+    from repro.core.schedule import Schedule
+    from repro.parallel.partition import ParallelPlan, make_sharder
+    stages = _t2d_stages()
+    sched = Schedule(tuple(stages), (1, 1, 1, 1), initial=1, final=1,
+                     strategies=("dsp", "hybrid", "dsp", "ring"))
+    with pytest.raises(ValueError):
+        make_sharder(None, ParallelPlan(mode="dsp"), schedule=sched)
+
+
+def test_factorize_sp_round_trips():
+    from repro.launch.mesh import factorize_sp, sp2d_topology
+    topo = Topology.multihost(2, 4)
+    assert factorize_sp(topo) == (2, 4)
+    t2 = sp2d_topology(2, 4)
+    assert factorize_sp(t2) == (2, 4)
+    assert t2.size == topo.size
+    # single-axis fabrics have no hybrid factorization
+    assert factorize_sp(Topology.flat_ici(8)) == (1, 8)
+
+
+def test_per_device_bytes_matches_mode_helpers():
+    # satellite: the zoo's byte math routes through ONE constant
+    from repro.core.dsp import comm_volume_bytes, per_device_bytes
+    from repro.core.megatron_sp import block_bytes
+    from repro.core.ring import stream_bytes
+    from repro.core.ulysses import attention_bytes
+    m, n = 524288.0, 8
+    assert per_device_bytes("dsp", m, n) == 2 * comm_volume_bytes(
+        "switch", m, n)
+    assert attention_bytes(m, n) == per_device_bytes("ulysses", m, n) \
+        == 4 * m / n
+    assert stream_bytes(m, n) == per_device_bytes("ring", m, n) == 2 * m
+    assert block_bytes(m, n) == per_device_bytes("megatron", m, n) == 4 * m
+    # GQA: kv shrinks ulysses/ring; non-dividing kv_heads degrade ulysses
+    assert attention_bytes(m, n, kv_bytes=m, kv_heads=8) == 2 * m / n + m / n
+    assert attention_bytes(m, n, kv_bytes=m, kv_heads=4) == 2 * m / n + m
+    assert stream_bytes(m, n, kv_bytes=m) == m
+    # hybrid: inner a2as move (2M+kv)/N; the outer ring kv*outer/N
+    assert per_device_bytes("hybrid", m, n, kv_bytes=m, outer=2) \
+        == 3 * m / n + 2 * m / n
