@@ -462,6 +462,16 @@ class JointPlan:
     def mirrored(self) -> bool:
         return self.fwd == self.bwd
 
+    def to_dict(self) -> Dict:
+        """JSON-safe form (checkpoint manifests record the plan a run was
+        solved with so restore can re-solve — or compare — on any fabric)."""
+        return {"kind": "joint", "fwd": list(self.fwd), "bwd": list(self.bwd)}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "JointPlan":
+        return cls(tuple(int(x) for x in d["fwd"]),
+                   tuple(int(x) for x in d["bwd"]))
+
 
 @dataclasses.dataclass(frozen=True)
 class JointCost:
@@ -898,6 +908,45 @@ class StrategyPlan:
 
     def __post_init__(self):
         assert len(self.dims) == len(self.strategies)
+
+    def to_dict(self) -> Dict:
+        """JSON-safe form (see ``JointPlan.to_dict``)."""
+        return {"kind": "strategy", "dims": list(self.dims),
+                "strategies": list(self.strategies)}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "StrategyPlan":
+        return cls(tuple(int(x) for x in d["dims"]),
+                   tuple(str(s) for s in d["strategies"]))
+
+
+# ---------------------------------------------------------------------------
+# Plan serialization (checkpoint manifests)
+# ---------------------------------------------------------------------------
+
+def plan_to_dict(plan) -> Dict:
+    """Serialize any solved plan — a bare dim sequence, a ``JointPlan`` or a
+    ``StrategyPlan`` — to a JSON-safe tagged dict.  ``train.checkpoint``
+    stores this in the manifest next to the shards: DSP layouts are a
+    planned property of the computation (paper §6), so the plan travels with
+    the weights and the restoring host can re-solve or diff it on the new
+    fabric."""
+    if isinstance(plan, (JointPlan, StrategyPlan)):
+        return plan.to_dict()
+    return {"kind": "dims", "dims": [int(d) for d in plan]}
+
+
+def plan_from_dict(d: Dict):
+    """Inverse of ``plan_to_dict`` (returns ``JointPlan`` / ``StrategyPlan``
+    / ``list`` of dims by the recorded ``kind``)."""
+    kind = d.get("kind")
+    if kind == "joint":
+        return JointPlan.from_dict(d)
+    if kind == "strategy":
+        return StrategyPlan.from_dict(d)
+    if kind == "dims":
+        return [int(x) for x in d["dims"]]
+    raise ValueError(f"unknown plan kind {kind!r}")
 
 
 def _embedded_cost(stages: Sequence[Stage], t: int, d: int, strategy: str,

@@ -492,6 +492,37 @@ class Topology:
         slowest = min(self.axes, key=lambda a: a.bandwidth)
         return Topology((dataclasses.replace(slowest, size=n),))
 
+    # -- serialization (checkpoint manifests, portable fitted fabrics) -------
+
+    def to_dict(self) -> Dict:
+        """JSON-safe description of the fabric: per-link axes + per-dim
+        placement.  Covers ``from_profile`` fits too — a fitted fabric is
+        just a Link with measured bandwidth/latency — which is what makes a
+        checkpoint manifest portable across machines: the restoring host
+        re-solves the plan on the SAME fabric model the run was priced on
+        (``train.checkpoint`` records this next to the shards)."""
+        return {
+            "axes": [{"name": a.name, "size": a.size,
+                      "bandwidth": a.bandwidth, "latency": a.latency}
+                     for a in self.axes],
+            "placement": ({str(d): list(g)
+                           for d, g in self.placement.items()}
+                          if self.placement else None),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Topology":
+        """Inverse of ``to_dict`` — bit-exact round trip (JSON floats are
+        doubles, so measured bandwidths/latencies survive unchanged)."""
+        axes = tuple(Link(a["name"], int(a["size"]), float(a["bandwidth"]),
+                          float(a.get("latency", 0.0))) for a in d["axes"])
+        placement = d.get("placement")
+        if placement:
+            placement = {int(k): tuple(v) for k, v in placement.items()}
+        else:
+            placement = None
+        return cls(axes, placement=placement)
+
     # -- presets -------------------------------------------------------------
 
     @classmethod

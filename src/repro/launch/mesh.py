@@ -31,6 +31,22 @@ def make_mesh(shape, axes):
     return compat.make_mesh(tuple(shape), tuple(axes))
 
 
+def submesh(n_devices: int, data: int = 1, axis_names=("data", "model")):
+    """Mesh over the first ``n_devices`` (the elastic-resize survivor set):
+    (data, n_devices // data).  Built from an explicit device array so it
+    works for any subset size, unlike make_mesh which wants all devices.
+    The ONE resize-mesh builder — ``serving.engine.replan`` and
+    ``train.trainer.Trainer.replan`` both shrink/regrow through it."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    if n_devices % data:
+        raise ValueError(f"{n_devices} devices not divisible by data={data}")
+    devs = np.array(jax.devices()[:n_devices]).reshape(
+        data, n_devices // data)
+    return Mesh(devs, axis_names)
+
+
 def factorize_sp(topology: Topology):
     """Factor an SP degree into the 2D process grid a hybrid (USP) stage
     runs on: ``(outer, inner)`` with the OUTER (slow, e.g. DCN) axis first

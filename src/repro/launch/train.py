@@ -23,6 +23,9 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--replan", type=int, default=0,
+                    help="elastic resize onto N devices after resume "
+                         "(re-solves the plan; lm family)")
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--devices", type=int, default=0,
@@ -43,7 +46,7 @@ def main(argv=None):
     from repro.data.pipeline import DataConfig, make_batch
     from repro.optim.adamw import OptConfig
     from repro.parallel.partition import make_sharder, ParallelPlan
-    from repro.train.trainer import Trainer, TrainerConfig
+    from repro.train.trainer import ElasticSpec, Trainer, TrainerConfig
 
     spec = configs.get(args.arch)
     cfg = spec.config if args.full else spec.smoke
@@ -62,6 +65,7 @@ def main(argv=None):
     # joint fwd+bwd planned schedule: priced into the run summary (and, for
     # the t2d executor path, executed) when training on a DSP mesh
     schedule = None
+    elastic = None
     if spec.family == "lm":
         from repro.models.lm import dsp_schedule, init_lm, lm_loss
         params = init_lm(jax.random.PRNGKey(0), cfg)
@@ -74,6 +78,22 @@ def main(argv=None):
 
         def loss_fn(p, b):
             return lm_loss(p, b, cfg, sharder=sharder, backend="ref")
+
+        # --replan support: rebuild the loss and re-solve the schedule on
+        # whatever mesh the trainer resizes onto
+        def make_loss(m, sh, sched):
+            return lambda p, b: lm_loss(p, b, cfg, sharder=sh,
+                                        backend="ref")
+
+        def solve_schedule(sp, topo):
+            return dsp_schedule(cfg, sp, seq=args.seq, batch=args.batch,
+                                topology=topo, joint=True)
+
+        elastic = ElasticSpec(
+            make_loss=make_loss,
+            solve_schedule=(solve_schedule if spec.plan.mode == "dsp"
+                            else None),
+            plan=spec.plan)
     elif spec.family == "encdec":
         from repro.models.encdec import init_encdec, encdec_loss
         params = init_encdec(jax.random.PRNGKey(0), cfg)
@@ -109,9 +129,12 @@ def main(argv=None):
                           ckpt_every=max(args.steps // 4, 1) if args.ckpt_dir
                           else 0, grad_compress=args.grad_compress),
         data_fn=lambda s: make_batch(dcfg, s),
-        ckpt_dir=args.ckpt_dir, schedule=schedule)
+        ckpt_dir=args.ckpt_dir, schedule=schedule, mesh=mesh,
+        topology=topology, elastic=elastic)
     if args.resume:
         trainer.try_resume()
+    if args.replan:
+        trainer.replan(args.replan)
     out = trainer.run()
     print("history:", out["history"])
     print("stragglers:", out["stragglers"])

@@ -206,6 +206,29 @@ def param_pspecs(params, plan: ParallelPlan, *,
     return tree_map_with_path(rule, params)
 
 
+def leaf_sharded_dims(leaf) -> Tuple[int, ...]:
+    """Dims of ``leaf`` that are actually SHARDED on its mesh (per-device
+    extent < global extent), via ``sharding.shard_shape`` — so it reports
+    what jit/device_put really produced, not what a spec asked for.  Host
+    numpy arrays, scalars and fully-replicated leaves return ``()``.
+
+    This is the per-leaf layout query the plan-aware checkpoint manifest
+    records (``train.checkpoint``): merge/split-on-restore happens along
+    exactly these dims."""
+    sharding = getattr(leaf, "sharding", None)
+    shape = getattr(leaf, "shape", None)
+    if sharding is None or shape is None or not hasattr(sharding, "mesh"):
+        return ()
+    local = sharding.shard_shape(tuple(shape))
+    return tuple(i for i, (l, g) in enumerate(zip(local, shape)) if l != g)
+
+
+def leaf_layouts(tree):
+    """Map ``leaf_sharded_dims`` over a pytree: same structure, each leaf
+    replaced by the tuple of its sharded dim indices."""
+    return jax.tree_util.tree_map(leaf_sharded_dims, tree)
+
+
 # ---------------------------------------------------------------------------
 # Activation sharder
 # ---------------------------------------------------------------------------

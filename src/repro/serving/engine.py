@@ -75,15 +75,10 @@ class Request:
 
 
 def _submesh(n_devices: int, data: int, axis_names=("data", "model")):
-    """Mesh over the first ``n_devices`` (the elastic-resize survivor set):
-    (data, n_devices // data).  Built from an explicit device array so it
-    works for any subset size, unlike make_mesh which wants all devices."""
-    from jax.sharding import Mesh
-    if n_devices % data:
-        raise ValueError(f"{n_devices} devices not divisible by data={data}")
-    devs = np.array(jax.devices()[:n_devices]).reshape(
-        data, n_devices // data)
-    return Mesh(devs, axis_names)
+    """Mesh over the first ``n_devices`` (the elastic-resize survivor set);
+    shared with ``Trainer.replan`` via ``launch.mesh.submesh``."""
+    from repro.launch.mesh import submesh
+    return submesh(n_devices, data, axis_names)
 
 
 class ServingEngine:

@@ -1,33 +1,158 @@
-"""Checkpointing: atomic, keep-last-k, async, mesh-shape-agnostic.
+"""Plan-aware sharded checkpointing: atomic, keep-last-k, async, elastic.
 
-Save path: pytree -> host numpy -> ``<dir>/tmp.<step>`` -> atomic rename to
-``<dir>/step_<step>``.  A crash mid-save never corrupts the latest
-checkpoint (fault tolerance requirement #1).
+Save path: each host snapshots only its LOCAL shards (device->host, one
+``np.save`` per shard under ``step_<n>/shard_<host>/``) plus a manifest
+recording, per leaf, the global shape/dtype, the sharded dim(s)
+(``parallel.partition.leaf_sharded_dims``) and each shard's index ranges —
+and, run-level, the solved plan (``core.plan.plan_to_dict``) and the
+``core.topology.Topology`` the run was priced on (incl. ``from_profile``
+fits, so a run is portable across machines: the fabric model travels with
+the weights).  Writes land in a ``tmp.<step>.<pid>.<uid>`` staging dir, the
+manifest is written LAST (its presence marks the staging dir complete), and
+``os.replace`` publishes atomically — a crash at ANY point never corrupts
+the latest durable checkpoint, and staging dirs abandoned by dead or failed
+writers are garbage-collected on the next save.
 
-Restore path: ``restore(template)`` re-materialises onto whatever mesh the
-*template* tree is sharded for — saving on a 512-chip mesh and resuming on
-256 (or 1) is the elastic-restart path, exercised by tests.
+Restore path: ``restore(template)`` reshards-on-load — each leaf is merged
+from its recorded shards along its recorded dims into the global array,
+then placed onto whatever mesh/sharding the TEMPLATE carries (or, with
+``mesh=``/``plan=``, onto shardings re-derived from the plan).  Because a
+DSP layout is a planned property of the computation — where the sequence
+shards sit, never what the numbers are — resharding is a pure host-side
+merge/slice: save on 8 devices under one plan, restore on 4 (or 1) under
+another, bit-for-bit (docs/architecture.md §6).  Leaf-set or global-shape
+mismatches raise loudly — never silent zero-fill.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import re
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
+from repro.core.plan import plan_to_dict
 
-def _flatten(tree):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    out = {}
+FORMAT = "dsp-ckpt-v1"
+
+# staging dirs currently being written BY THIS PROCESS (any manager); the
+# orphan collector never touches these, so two managers sharing a directory
+# cannot GC each other's in-flight save
+_ACTIVE_TMPS = set()
+_ACTIVE_LOCK = threading.Lock()
+_UID = itertools.count()
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """np dtype from its manifest-recorded name; extended dtypes (bfloat16,
+    float8_*, ...) resolve through ml_dtypes (a jax dependency)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except OSError:
+        return False
+    return True
+
+
+def _key(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _host_shards(leaf):
+    """(index, host_array) pairs for the LOCAL shards of one leaf; index is
+    a per-dim (start, stop) on the global shape.  Replicated copies dedupe
+    exactly (``replica_id == 0`` keeps one copy per distinct index — full
+    and partial replication alike); host numpy / unsharded leaves yield a
+    single full-extent shard."""
+    sharding = getattr(leaf, "sharding", None)
+    shape = tuple(getattr(leaf, "shape", ()))
+    if (sharding is not None and hasattr(sharding, "mesh")
+            and hasattr(leaf, "addressable_shards")):
+        shards = []
+        for s in leaf.addressable_shards:
+            if s.replica_id != 0:
+                continue
+            index = tuple(
+                (0 if sl.start is None else int(sl.start),
+                 dim if sl.stop is None else int(sl.stop))
+                for sl, dim in zip(s.index, shape))
+            shards.append((index, np.asarray(s.data)))
+        if shards:
+            return shards
+    arr = np.asarray(jax.device_get(leaf))
+    return [(tuple((0, d) for d in arr.shape), arr)]
+
+
+def _flatten(tree) -> List[Dict[str, Any]]:
+    """Synchronous host snapshot of ``tree``: one record per leaf with the
+    global shape/dtype, the sharded dims, and the local (index, array)
+    shards.  Runs on the caller's thread so the snapshot is consistent."""
+    from repro.parallel.partition import leaf_sharded_dims
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
     for path, leaf in flat:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                       for k in path)
-        out[key] = np.asarray(jax.device_get(leaf))
+        shape = (tuple(leaf.shape) if hasattr(leaf, "shape")
+                 else tuple(np.shape(leaf)))
+        dtype = np.dtype(leaf.dtype) if hasattr(leaf, "dtype") else \
+            np.asarray(leaf).dtype
+        out.append({
+            "key": _key(path),
+            "shape": shape,
+            "dtype": dtype.name,
+            "sharded_dims": leaf_sharded_dims(leaf),
+            "shards": _host_shards(leaf),
+        })
+    return out
+
+
+def _assemble(base: str, rec: Dict[str, Any]) -> np.ndarray:
+    """Merge one leaf's recorded shards into its global array.  Raises on
+    incomplete coverage (a lost shard must never silently zero-fill) and on
+    dtype corruption; bf16 & friends round-trip through the raw-void view
+    ``np.save`` stores them as — never through a float cast."""
+    dtype = _np_dtype(rec["dtype"])
+    shape = tuple(int(d) for d in rec["shape"])
+    total = 1
+    for d in shape:
+        total *= d
+    out = np.empty(shape, dtype)
+    covered = 0
+    for sh in rec["shards"]:
+        arr = np.load(os.path.join(base, sh["file"]), allow_pickle=False)
+        if arr.dtype != dtype:
+            if arr.dtype.itemsize != dtype.itemsize:
+                raise ValueError(
+                    f"leaf {rec['key']!r}: shard {sh['file']} has dtype "
+                    f"{arr.dtype} ({arr.dtype.itemsize}B), manifest records "
+                    f"{dtype} ({dtype.itemsize}B)")
+            arr = arr.view(dtype)
+        idx = tuple(slice(int(s), int(e)) for s, e in sh["index"])
+        if arr.shape != tuple(e - s for s, e in sh["index"]):
+            raise ValueError(
+                f"leaf {rec['key']!r}: shard {sh['file']} shape {arr.shape} "
+                f"does not match its index extents {sh['index']}")
+        out[idx] = arr
+        n = 1
+        for s, e in sh["index"]:
+            n *= e - s
+        covered += n
+    if covered != total:
+        raise ValueError(
+            f"leaf {rec['key']!r}: shards cover {covered} of {total} "
+            f"elements (global shape {shape}); refusing to zero-fill")
     return out
 
 
@@ -38,45 +163,118 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ----------------------------------------------------------------
-    def save(self, step: int, tree: Any, *, blocking: bool = False):
-        """Device->host fetch happens synchronously (consistent snapshot);
-        serialisation + rename run on a background thread unless blocking."""
-        flat = _flatten(tree)     # sync snapshot
-        self.wait()               # one in-flight save at a time
+    def save(self, step: int, tree: Any, *, blocking: bool = False,
+             plan: Any = None, topology: Any = None,
+             meta: Optional[Dict[str, Any]] = None):
+        """Snapshot + publish ``step``.
+
+        ``wait()`` runs FIRST: the previous async save must finish before
+        this step's device->host snapshot, or the two saves would share
+        ``self._thread`` and interleave.  The snapshot itself is synchronous
+        (consistent view of the tree); serialisation + the atomic publish
+        run on a background thread unless ``blocking``.
+
+        ``plan`` (a solved dim list / ``JointPlan`` / ``StrategyPlan``),
+        ``topology`` (``core.topology.Topology``) and ``meta`` (small
+        JSON-safe dict) are recorded in the manifest.
+        """
+        self.wait()               # one in-flight save at a time: wait FIRST
+        flat = _flatten(tree)     # then the consistent host snapshot
+        host = jax.process_index()
+        plan_d = None if plan is None else plan_to_dict(plan)
+        topo_d = None if topology is None else topology.to_dict()
 
         def work():
-            tmp = os.path.join(self.dir, f"tmp.{step}")
+            self._gc_orphans()
+            tmp = os.path.join(
+                self.dir, f"tmp.{step}.{os.getpid()}.{next(_UID)}")
             final = os.path.join(self.dir, f"step_{step:08d}")
-            if os.path.exists(tmp):
-                shutil.rmtree(tmp)
-            os.makedirs(tmp)
-            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump({"step": step, "keys": sorted(flat)}, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)            # atomic publish
+            with _ACTIVE_LOCK:
+                _ACTIVE_TMPS.add(tmp)
+            try:
+                os.makedirs(os.path.join(tmp, f"shard_{host:05d}"))
+                leaves = []
+                for i, rec in enumerate(flat):
+                    entries = []
+                    for j, (index, arr) in enumerate(rec["shards"]):
+                        fname = f"shard_{host:05d}/arr_{i:04d}_{j:04d}.npy"
+                        np.save(os.path.join(tmp, fname), arr,
+                                allow_pickle=False)
+                        entries.append(
+                            {"file": fname,
+                             "index": [[int(s), int(e)] for s, e in index]})
+                    leaves.append({"key": rec["key"],
+                                   "shape": [int(d) for d in rec["shape"]],
+                                   "dtype": rec["dtype"],
+                                   "sharded_dims": [int(d) for d in
+                                                    rec["sharded_dims"]],
+                                   "shards": entries})
+                manifest = {"format": FORMAT, "step": step, "leaves": leaves,
+                            "plan": plan_d, "topology": topo_d,
+                            "meta": meta or {}}
+                # manifest LAST: a staging dir without one is incomplete
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.replace(tmp, final)           # atomic publish
+            finally:
+                with _ACTIVE_LOCK:
+                    _ACTIVE_TMPS.discard(tmp)
             self._gc()
 
         if blocking or not self.async_save:
             work()
         else:
-            self._thread = threading.Thread(target=work, daemon=True)
+            def guarded():
+                try:
+                    work()
+                except BaseException as e:     # surfaced on next wait()
+                    self._error = e
+            self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
         steps = self.all_steps()
         for s in steps[:-self.keep] if self.keep else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
+
+    def _gc_orphans(self):
+        """Remove staging dirs abandoned by dead or failed writers.  A tmp
+        dir is live only while (a) a manager in THIS process holds it in
+        ``_ACTIVE_TMPS``, or (b) its embedded pid names a DIFFERENT live
+        process.  Everything else — SIGKILLed writers, failed publishes,
+        stale dirs with no pid at all — is garbage."""
+        try:
+            names = os.listdir(self.dir)
+        except OSError:
+            return
+        for name in names:
+            if not name.startswith("tmp."):
+                continue
+            path = os.path.join(self.dir, name)
+            with _ACTIVE_LOCK:
+                if path in _ACTIVE_TMPS:
+                    continue
+            parts = name.split(".")
+            pid = (int(parts[2]) if len(parts) >= 3 and parts[2].isdigit()
+                   else None)
+            if pid is not None and pid != os.getpid() and _alive(pid):
+                continue
+            shutil.rmtree(path, ignore_errors=True)
 
     # -- restore ---------------------------------------------------------------
     def all_steps(self):
@@ -92,26 +290,77 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, template: Any, step: Optional[int] = None):
-        """Restore into the structure/shardings/dtypes of ``template``
-        (concrete or ShapeDtypeStruct+sharding tree).  Returns (step, tree)."""
+    def latest(self) -> Optional[int]:
+        """Alias of ``latest_step`` (the durable-latest the crash tests
+        assert on)."""
+        return self.latest_step()
+
+    def load_manifest(self, step: Optional[int] = None):
+        """(step, manifest dict) of a durable checkpoint — the record
+        ``tools/inspect_ckpt.py`` dumps and ``Trainer.replan`` re-solves
+        from."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
-        data = np.load(path)
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return step, json.load(f)
 
-        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    def restore(self, template: Any, step: Optional[int] = None, *,
+                mesh: Any = None, plan: Any = None):
+        """Restore into the structure/shapes/dtypes of ``template``
+        (concrete or ShapeDtypeStruct+sharding tree), resharding on load:
+        each leaf is merged from its recorded shards and placed per the
+        template leaf's sharding — any mesh size, any plan.  With ``mesh=``
+        and ``plan=`` (a ``parallel.partition.ParallelPlan``) placements are
+        instead re-derived via ``param_pspecs`` on that mesh — the
+        restore-onto-a-newly-solved-plan path.  Returns (step, tree).
+
+        Template keys absent from the checkpoint, global-shape mismatches,
+        or incomplete shard coverage raise ``ValueError`` (no silent
+        zero-fill); checkpoint-only keys are ignored, so a sub-tree (e.g.
+        params without opt state) restores cleanly."""
+        step, man = self.load_manifest(step)
+        base = os.path.join(self.dir, f"step_{step:08d}")
+        records = {r["key"]: r for r in man.get("leaves", [])}
+
+        shardings = None
+        if mesh is not None and plan is not None:
+            from jax.sharding import NamedSharding
+            from repro.parallel.partition import param_pspecs
+            specs = param_pspecs(template, plan,
+                                 axis_sizes=dict(mesh.shape))
+            sflat, _ = jax.tree_util.tree_flatten_with_path(specs)
+            shardings = {_key(p): NamedSharding(mesh, s) for p, s in sflat}
+
+        flat, _ = jax.tree_util.tree_flatten_with_path(template)
+        tkeys = [_key(p) for p, _ in flat]
+        missing = sorted(set(tkeys) - set(records))
+        if missing:
+            extra = sorted(set(records) - set(tkeys))
+            raise ValueError(
+                f"checkpoint step {step} is missing leaves the template "
+                f"requires: {missing} (checkpoint-only leaves: {extra}); "
+                f"refusing to zero-fill")
         leaves = []
-        for p, leaf in flat:
-            key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                           for k in p)
-            arr = data[key]
-            sharding = getattr(leaf, "sharding", None)
-            dtype = leaf.dtype
+        for (path, leaf), key in zip(flat, tkeys):
+            rec = records[key]
+            gshape = tuple(int(d) for d in rec["shape"])
+            tshape = (tuple(leaf.shape) if hasattr(leaf, "shape")
+                      else tuple(np.shape(leaf)))
+            if tshape != gshape:
+                raise ValueError(
+                    f"leaf {key!r}: checkpoint global shape {gshape} != "
+                    f"template shape {tshape}")
+            arr = _assemble(base, rec)
+            dtype = getattr(leaf, "dtype", None)
+            if dtype is not None and arr.dtype != dtype:
+                arr = arr.astype(dtype)
+            sharding = (shardings.get(key) if shardings is not None
+                        else getattr(leaf, "sharding", None))
             if sharding is not None and hasattr(sharding, "mesh"):
-                leaves.append(jax.device_put(arr.astype(dtype), sharding))
+                leaves.append(jax.device_put(arr, sharding))
             else:
-                leaves.append(jax.numpy.asarray(arr, dtype=dtype))
+                leaves.append(jax.numpy.asarray(arr))
         return step, jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(template), leaves)

@@ -20,11 +20,48 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import JointPlan, StrategyPlan
 from repro.optim.adamw import OptConfig, apply_adamw, init_opt_state
 from repro.optim.compress import compress_with_feedback, init_residuals
 from repro.train.checkpoint import CheckpointManager
 
 log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticSpec:
+    """How to rebuild the training computation on a RESIZED mesh — the
+    trainer-side mirror of ``serving.engine.replan``'s derivation.
+
+    ``make_loss(mesh, sharder, schedule) -> loss_fn`` rebuilds the loss for
+    a new parallel triple (mesh may be None for the 1-device degenerate
+    case).  ``solve_schedule(sp, topology) -> Schedule`` re-solves the DSP
+    switching plan for a new SP degree on the resized fabric (called only
+    for sp > 1; None skips planning and the mode-based Sharder defaults
+    apply).  ``plan`` is the ``parallel.partition.ParallelPlan`` parameter
+    placements are derived from on every mesh."""
+
+    make_loss: Callable[..., Callable]
+    solve_schedule: Optional[Callable] = None
+    plan: Any = None
+
+
+def _place_tree(tree, mesh, plan):
+    """Migrate a params-shaped pytree onto ``mesh`` per ``plan``
+    (``param_pspecs``-derived shardings; the path rules see the same leaf
+    names under ``m/``/``v/``/``master/`` prefixes, so AdamW moments and
+    compression residuals reshard exactly like their params).  ``mesh=None``
+    collapses to host-side single-device arrays."""
+    if tree is None:
+        return None
+    if mesh is None:
+        return jax.tree_util.tree_map(
+            lambda x: jnp.asarray(jax.device_get(x)), tree)
+    from jax.sharding import NamedSharding
+    from repro.parallel.partition import param_pspecs
+    specs = param_pspecs(tree, plan, axis_sizes=dict(mesh.shape))
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,14 +125,17 @@ class Trainer:
                  cfg: TrainerConfig, data_fn: Callable[[int], Any],
                  ckpt_dir: Optional[str] = None,
                  jit_kwargs: Optional[dict] = None,
-                 schedule=None):
+                 schedule=None, mesh=None, topology=None,
+                 elastic: Optional[ElasticSpec] = None):
         self.cfg = cfg
         self.data_fn = data_fn
         self.params = params
+        self.opt_cfg = opt_cfg
         self.opt_state = init_opt_state(params, opt_cfg)
         self.residuals = (init_residuals(params) if cfg.grad_compress
                           else None)
         self.ckpt = (CheckpointManager(ckpt_dir) if ckpt_dir else None)
+        self._jit_kwargs = jit_kwargs
         self.step_fn = jax.jit(
             make_train_step(loss_fn, opt_cfg, grad_accum=cfg.grad_accum,
                             grad_compress=cfg.grad_compress),
@@ -103,6 +143,17 @@ class Trainer:
         self.start_step = 0
         self.straggler_events = []
         self.metrics_history = []
+        # elastic state: the mesh/schedule the step runs on today, the
+        # fabric template replan resizes, and the data-axis width an
+        # elastic resize preserves when it still divides
+        self.mesh = mesh
+        self.schedule = schedule
+        self.elastic = elastic
+        self._topology_template = (
+            topology if topology is not None
+            else getattr(schedule, "topology", None))
+        self._data_axis = (mesh.shape.get("data", 1)
+                           if mesh is not None else 1)
         # planned communication of one training step, both legs: the solved
         # DSP Schedule (core.schedule) prices its forward AND its planned
         # backward — surfaced in the run() summary next to measured times
@@ -135,16 +186,105 @@ class Trainer:
         if latest is None:
             return
         template = {"params": self.params, "opt": self.opt_state}
+        if self.cfg.grad_compress and self.residuals is not None:
+            template["residuals"] = self.residuals
         _, tree = self.ckpt.restore(template, latest)
         self.params, self.opt_state = tree["params"], tree["opt"]
+        if "residuals" in template:
+            self.residuals = tree["residuals"]
         self.start_step = latest
         log.info("resumed from step %d", latest)
+
+    def _plan_record(self):
+        """The solved plan the checkpoint manifest records — a
+        ``StrategyPlan`` when the schedule carries strategies, a
+        ``JointPlan`` when the backward was planned, the bare dim sequence
+        otherwise (None without a schedule)."""
+        sch = self.schedule
+        if sch is None:
+            return None
+        if getattr(sch, "strategies", None) is not None:
+            return StrategyPlan(tuple(sch.dims), tuple(sch.strategies))
+        if getattr(sch, "bwd_dims", None) is not None:
+            return JointPlan(tuple(sch.dims), tuple(sch.bwd_dims))
+        return list(sch.dims)
 
     def _checkpoint(self, step: int, blocking: bool = False):
         if self.ckpt is None:
             return
-        self.ckpt.save(step, {"params": self.params, "opt": self.opt_state},
-                       blocking=blocking)
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.cfg.grad_compress and self.residuals is not None:
+            tree["residuals"] = self.residuals
+        sch = self.schedule
+        topo = (getattr(sch, "topology", None) if sch is not None else None)
+        meta = None
+        if sch is not None:
+            meta = {"initial": sch.initial, "final": sch.final}
+        self.ckpt.save(step, tree, blocking=blocking,
+                       plan=self._plan_record(),
+                       topology=topo if topo is not None
+                       else self._topology_template,
+                       meta=meta)
+
+    # -- elastic resize --------------------------------------------------------
+    def replan(self, n_devices: int, *, topology=None):
+        """Re-solve and rebuild for ``n_devices`` — the training mirror of
+        ``serving.engine.replan``.  Re-solves the switching plan on the
+        resized fabric (``Topology.resized``, or an explicit override),
+        rebuilds schedule/sharder/train-step through the ``ElasticSpec``,
+        and migrates params + opt state (AdamW moments, master weights and
+        compression residuals reshard with their params) onto the new mesh.
+        Pure layout movement: an 8-to-4 resize keeps the loss curve
+        bit-aligned with the uninterrupted run (pinned by the
+        ``elastic_train_resize`` scenario)."""
+        if self.elastic is None:
+            raise ValueError("Trainer.replan needs an ElasticSpec "
+                             "(elastic= at construction)")
+        if self.ckpt is not None:
+            self.ckpt.wait()      # never migrate under an in-flight save
+        avail = jax.device_count()
+        if n_devices > avail:
+            raise ValueError(f"replan({n_devices}) exceeds the "
+                             f"{avail} available devices")
+        from repro.parallel.partition import ParallelPlan, make_sharder
+        plan = self.elastic.plan or ParallelPlan(mode="dsp")
+        if n_devices == 1:
+            mesh, schedule, topo = None, None, None
+            plan = ParallelPlan(mode="none")
+            sharder = make_sharder(None, plan)
+        else:
+            from repro.launch.mesh import submesh
+            data = (self._data_axis
+                    if self._data_axis > 0 and
+                    n_devices % max(self._data_axis, 1) == 0
+                    and n_devices // self._data_axis >= 1 else 1)
+            mesh = submesh(n_devices, data)
+            sp = mesh.shape.get("model", 1)
+            topo = topology
+            if topo is None and self._topology_template is not None:
+                topo = self._topology_template.resized(sp)
+            schedule = (self.elastic.solve_schedule(sp, topo)
+                        if self.elastic.solve_schedule is not None and sp > 1
+                        else None)
+            sharder = make_sharder(mesh, plan, schedule, topo)
+        loss_fn = self.elastic.make_loss(mesh, sharder, schedule)
+        self.step_fn = jax.jit(
+            make_train_step(loss_fn, self.opt_cfg,
+                            grad_accum=self.cfg.grad_accum,
+                            grad_compress=self.cfg.grad_compress),
+            **(self._jit_kwargs or {}))
+        # migrate live state: moments/master/residuals follow their params;
+        # the scalar step count is replicated everywhere
+        self.params = _place_tree(self.params, mesh, plan)
+        self.opt_state = _place_tree(self.opt_state, mesh, plan)
+        self.residuals = _place_tree(self.residuals, mesh, plan)
+        self.mesh = mesh
+        self.schedule = schedule
+        self.plan_meta = self._plan_meta(schedule)
+        log.info("replanned onto %d device(s)%s", n_devices,
+                 "" if schedule is None else
+                 f" ({schedule.n_switches()} planned switches)")
+        return self
 
     # -- loop -------------------------------------------------------------------
     def run(self) -> Dict[str, Any]:

@@ -175,6 +175,125 @@ def scenario_elastic_checkpoint():
         assert leaf.sharding.mesh.shape["data"] == 4
 
 
+def scenario_elastic_train_resize():
+    """Elastic training survives a mid-run SP resize: scanned-LM training on
+    the 8-device mesh, plan-aware checkpoint at step k, resize to 4 devices
+    via ``Trainer.replan`` (re-solves the schedule on the resized fabric,
+    migrates params + AdamW state), continue to 2k — the LOSS CURVE is
+    bit-identical fp32 to an uninterrupted 8-device run, and the restored +
+    migrated state is bit-identical to what was saved.  Final params close
+    at 1e-5, not bit: the weight-grad contractions psum over a different
+    shard count after the resize — the same fp32 reduction-order caveat
+    ``scenario_scan_joint_bwd_parity`` splits on (losses bit-identical,
+    grads at 1e-5).  The loss sums themselves are invariant across SP
+    degrees >= 2 on this workload, and this scenario pins that down."""
+    import tempfile
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from repro.core.topology import Topology
+    from repro.data.pipeline import DataConfig, make_batch
+    from repro.models.lm import LMConfig, dsp_schedule, init_lm, lm_loss
+    from repro.optim.adamw import OptConfig
+    from repro.parallel.partition import (ParallelPlan, make_sharder,
+                                          param_pspecs)
+    from repro.train.trainer import ElasticSpec, Trainer, TrainerConfig
+
+    cfg = LMConfig(name="t", n_layers=2, d_model=64, n_heads=8, n_kv_heads=8,
+                   head_dim=8, d_ff=128, vocab=96, dtype=jnp.float32)
+    plan = ParallelPlan(mode="dsp", shard_vocab=False)
+    dcfg = DataConfig(task="lm_shift", vocab=96, seq=32, batch=2)
+    opt = OptConfig(peak_lr=1e-3, warmup_steps=2, total_steps=6)
+    k, total = 3, 6
+
+    def make_loss(mesh, sharder, schedule):
+        return lambda p, b: lm_loss(p, b, cfg, sharder=sharder,
+                                    backend="ref")
+
+    def solve_schedule(sp, topo):
+        return dsp_schedule(cfg, sp, seq=32, batch=2, topology=topo,
+                            joint=True)
+
+    def make_trainer(total_steps, ckpt_dir, ckpt_every):
+        mesh = _mesh((2, 4), ("data", "model"))
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        specs = param_pspecs(params, plan, axis_sizes=dict(mesh.shape))
+        params = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            params, specs)
+        schedule = solve_schedule(4, Topology.flat_ici(4))
+        sharder = make_sharder(mesh, plan, schedule=schedule)
+        return Trainer(
+            loss_fn=make_loss(mesh, sharder, schedule), params=params,
+            opt_cfg=opt,
+            cfg=TrainerConfig(total_steps=total_steps, log_every=1,
+                              ckpt_every=ckpt_every),
+            data_fn=lambda s: make_batch(dcfg, s),
+            ckpt_dir=ckpt_dir, schedule=schedule, mesh=mesh,
+            elastic=ElasticSpec(make_loss=make_loss,
+                                solve_schedule=solve_schedule, plan=plan))
+
+    def host(tree):
+        return jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+    def bit_equal(a, b, what):
+        la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+        assert len(la) == len(lb), what
+        for x, y in zip(la, lb):
+            x, y = np.asarray(x), np.asarray(y)
+            assert x.dtype == y.dtype and x.shape == y.shape, what
+            assert x.tobytes() == y.tobytes(), what
+
+    # uninterrupted 8-device baseline through step 2k
+    base = make_trainer(total, None, 0)
+    base_losses = [l for _, l in base.run()["history"]]
+    assert len(base_losses) == total
+
+    with tempfile.TemporaryDirectory() as d:
+        # run 1: 8 devices, checkpoint at step k, stop
+        t1 = make_trainer(k, d, k)
+        losses1 = [l for _, l in t1.run()["history"]]
+        saved = {"params": host(t1.params), "opt": host(t1.opt_state)}
+
+        # the manifest records the layouts, the plan and the fabric
+        step, man = t1.ckpt.load_manifest()
+        assert step == k and man["format"] == "dsp-ckpt-v1"
+        recs = {r["key"]: r for r in man["leaves"]}
+        table = recs["params/embed/table"]
+        assert table["sharded_dims"], table    # FSDP actually sharded it
+        assert len(table["shards"]) > 1
+        pd = man["plan"]
+        dims = pd["fwd"] if pd["kind"] == "joint" else pd["dims"]
+        assert tuple(dims) == tuple(t1.schedule.dims)
+        topo = Topology.from_dict(man["topology"])
+        assert topo == t1.schedule.topology
+
+        # run 2: fresh process state, resume at k, RESIZE to 4, run to 2k
+        t2 = make_trainer(total, d, 0)
+        t2.try_resume()
+        assert t2.start_step == k
+        bit_equal({"params": host(t2.params), "opt": host(t2.opt_state)},
+                  saved, "restore must be shard-exact")
+        t2.replan(4)
+        assert t2.mesh.shape == {"data": 2, "model": 2}
+        assert t2.schedule is not None and t2.schedule.topology.size == 2
+        bit_equal({"params": host(t2.params), "opt": host(t2.opt_state)},
+                  saved, "migration must be pure layout movement")
+        losses2 = [l for _, l in t2.run()["history"]]
+
+    resized = losses1 + losses2
+    assert len(resized) == total
+    for t, (a, b) in enumerate(zip(base_losses, resized)):
+        assert np.float32(a).tobytes() == np.float32(b).tobytes(), (
+            t, a, b, "loss curve must stay bit-aligned across the resize")
+
+    # params meet the fp32 reduction-order tolerance of the parity tier
+    for a, b in zip(jax.tree_util.tree_leaves(host(base.params)),
+                    jax.tree_util.tree_leaves(host(t2.params))):
+        denom = max(float(np.abs(a).max()), 1e-9)
+        assert float(np.abs(a - b).max()) / denom < 1e-5
+
+
 def scenario_joint_bwd_parity():
     """Planned-backward executor on a REAL 8-device mesh: t2d training-loss
     gradients through the custom_vjp boundaries (both a mirrored joint plan

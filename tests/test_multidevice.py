@@ -16,6 +16,7 @@ SCENARIOS = [
     "lm_parallel_equivalence",
     "decode_sharded",
     "elastic_checkpoint",
+    "elastic_train_resize",
     "grad_allreduce_compression",
     "joint_bwd_parity",
     "scan_joint_bwd_parity",

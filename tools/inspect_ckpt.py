@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Dump / validate a plan-aware checkpoint manifest (train/checkpoint.py).
+
+    python tools/inspect_ckpt.py <ckpt_dir> [--step N] [--json]
+
+Human mode prints the step, per-leaf layout table (global shape, dtype,
+sharded dims, shard count/bytes) and the recorded plan + topology; ``--json``
+emits one machine-readable object (the CI smoke checks its schema).  Exits
+non-zero with a message when the manifest or its shard files are corrupt —
+so a broken checkpoint is diagnosable straight from CI logs.
+
+Deliberately imports neither jax nor repro: inspection must work on a login
+node (or in a failing CI job) without bringing up a device runtime.
+"""
+import argparse
+import json
+import os
+import re
+import sys
+
+import numpy as np
+
+
+def _np_dtype(name):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def all_steps(directory):
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name,
+                                             "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def inspect(directory, step=None):
+    """Validated summary dict for one checkpoint step (raises on
+    corruption: missing/oversized shard files, incomplete coverage)."""
+    steps = all_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    step = step if step is not None else steps[-1]
+    if step not in steps:
+        raise FileNotFoundError(f"step {step} not in {steps}")
+    base = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(base, "manifest.json")) as f:
+        man = json.load(f)
+
+    leaves, total_bytes = [], 0
+    for rec in man.get("leaves", []):
+        shape = tuple(int(d) for d in rec["shape"])
+        dtype = _np_dtype(rec["dtype"])
+        total = 1
+        for d in shape:
+            total *= d
+        covered, nbytes = 0, 0
+        for sh in rec["shards"]:
+            path = os.path.join(base, sh["file"])
+            if not os.path.exists(path):
+                raise ValueError(f"leaf {rec['key']!r}: shard file "
+                                 f"{sh['file']} is missing")
+            n = 1
+            for s, e in sh["index"]:
+                n *= e - s
+            want = n * dtype.itemsize
+            have = os.path.getsize(path)
+            if have < want:     # npy header adds bytes; less data cannot
+                raise ValueError(
+                    f"leaf {rec['key']!r}: shard {sh['file']} holds "
+                    f"{have}B < {want}B of data")
+            covered += n
+            nbytes += want
+        if covered != total:
+            raise ValueError(f"leaf {rec['key']!r}: shards cover {covered} "
+                             f"of {total} elements")
+        total_bytes += nbytes
+        leaves.append({"key": rec["key"], "shape": list(shape),
+                       "dtype": rec["dtype"],
+                       "sharded_dims": rec["sharded_dims"],
+                       "n_shards": len(rec["shards"]), "bytes": nbytes})
+
+    return {"dir": directory, "step": step, "steps": steps,
+            "format": man.get("format"), "n_leaves": len(leaves),
+            "total_bytes": total_bytes, "leaves": leaves,
+            "plan": man.get("plan"), "topology": man.get("topology"),
+            "meta": man.get("meta")}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dir")
+    ap.add_argument("--step", type=int, default=None)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+    try:
+        info = inspect(args.dir, args.step)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"inspect_ckpt: {e}", file=sys.stderr)
+        return 1
+    if args.json:
+        print(json.dumps(info))
+        return 0
+    print(f"{info['dir']}: step {info['step']} of {info['steps']} "
+          f"({info['format']}, {info['n_leaves']} leaves, "
+          f"{info['total_bytes'] / 1e6:.2f} MB)")
+    for l in info["leaves"]:
+        dims = ",".join(str(d) for d in l["sharded_dims"]) or "-"
+        print(f"  {l['key']:<40} {str(tuple(l['shape'])):<20} "
+              f"{l['dtype']:<10} sharded[{dims}] x{l['n_shards']}")
+    if info["plan"] is not None:
+        print(f"  plan: {info['plan']}")
+    if info["topology"] is not None:
+        axes = ", ".join(f"{a['name']}x{a['size']}"
+                         for a in info["topology"]["axes"])
+        print(f"  topology: {axes}")
+    if info["meta"]:
+        print(f"  meta: {info['meta']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
