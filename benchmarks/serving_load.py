@@ -19,11 +19,21 @@ reporting any numbers.  Decode budgets are deliberately heterogeneous
 (uniform over [min, max]): lockstep waste and queue-wait are exactly what
 continuous batching exists to remove.
 
+A second trace targets the PAGED tier (``serving.scheduler.PagedScheduler``):
+every prompt opens with the same shared system prefix and decode budgets are
+long-tailed, the workload prefix caching + chunked prefill exist for.  The
+same trace runs through the slot scheduler (re-prefills the shared prefix
+every admission) and the paged scheduler (radix-tree hits skip it); the
+worker asserts token parity against the static oracle and reports the
+prefill-compute saving (prefix-hit tokens / prompt tokens) alongside p99
+TTFT — the full run asserts the saving clears 30%.
+
 Writes ``BENCH_serving.json`` at the repo root: per-arm throughput tok/s,
-p50/p99 TTFT and TPOT, queue wait, slot occupancy, plus the ratios.  Run
-standalone (``python benchmarks/serving_load.py [--steps 2]``) or via
+p50/p99 TTFT and TPOT, queue wait, slot occupancy, plus the ratios, and the
+``prefix_trace`` block (slot vs paged + prefill savings).  Run standalone
+(``python benchmarks/serving_load.py [--steps 2]``) or via
 ``benchmarks/run.py serving_load``.  ``--steps`` caps the decode budgets —
-CI smokes the JSON schema with ``--steps 2``.
+CI smokes the JSON schema (both traces) with ``--steps 2``.
 """
 import argparse
 import json
@@ -40,6 +50,10 @@ SUMMARY_KEYS = (            # the schema CI smoke-checks (don't rot silently)
     "tpot_p99_s", "queue_wait_p50_s", "queue_wait_p99_s", "slot_occupancy",
     "tokens_generated", "decode_steps", "slots_allocated", "elapsed_s",
 )
+PAGED_KEYS = (              # extra gauges only the paged arm populates
+    "prefix_hit_rate", "prefix_hit_tokens", "prefill_chunk_steps",
+    "blocks_in_use", "blocks_free", "peak_blocks_in_use",
+)
 
 
 def _worker(cfg: dict) -> None:
@@ -54,16 +68,29 @@ def _worker(cfg: dict) -> None:
     from repro.parallel.partition import ParallelPlan
     from repro.serving.engine import Request, ServingEngine, _submesh
     from repro.serving.kv_pool import KVPool
-    from repro.serving.scheduler import ContinuousScheduler, replay_static
+    from repro.serving.scheduler import (ContinuousScheduler, PagedScheduler,
+                                         replay_static)
 
     n_dev = cfg["devices"]
     max_batch = cfg["max_batch"]
     n_req = cfg["n_requests"]
     plen = cfg["prompt_len"]
+    prefix_len = cfg.get("prefix_len", 0)
+    block_size = cfg.get("block_size", 16)
     rng = np.random.RandomState(0)
-    budgets = rng.randint(cfg["min_new"], cfg["max_new"] + 1, size=n_req)
+    if cfg.get("tail") == "longtail":
+        # long-tailed budgets: most requests finish fast, a few run long —
+        # the regime where chunked prefill keeps the pool's decoders moving
+        budgets = np.clip(cfg["min_new"]
+                          + np.round(rng.exponential(6.0, n_req)).astype(int),
+                          cfg["min_new"], cfg["max_new"])
+    else:
+        budgets = rng.randint(cfg["min_new"], cfg["max_new"] + 1, size=n_req)
     max_len = plen + int(budgets.max())
     max_len += (-max_len) % max(n_dev, 1)     # seq-sharded divisibility
+    if cfg.get("paged"):
+        max_len = int(max_len + (-max_len) % np.lcm(block_size,
+                                                    max(n_dev, 1)))
 
     mcfg = LMConfig(name="bench-serve", n_layers=2, d_model=64, n_heads=8,
                     n_kv_heads=4, head_dim=16, d_ff=128, vocab=96,
@@ -77,6 +104,14 @@ def _worker(cfg: dict) -> None:
                                   if n_dev > 1 else None))
     prompts = jax.random.randint(jax.random.PRNGKey(1), (n_req, plen), 0,
                                  mcfg.vocab)
+    if prefix_len:
+        # every request opens with the SAME system prefix (the prefix-cache
+        # workload); suffixes stay per-request random
+        shared = jax.random.randint(jax.random.PRNGKey(2), (prefix_len,), 0,
+                                    mcfg.vocab)
+        prompts = jnp.concatenate(
+            [jnp.broadcast_to(shared, (n_req, prefix_len)),
+             prompts[:, prefix_len:]], axis=1)
 
     # -- warm every jit cache both arms will hit (compiles out of the timed
     # region: batch-1 + chunk prefill, pool + chunk decode) --------------------
@@ -131,17 +166,49 @@ def _worker(cfg: dict) -> None:
         "static": static_metrics.summary(),
         "continuous": sched.metrics.summary(),
     }
+
+    if cfg.get("paged"):
+        chunk = cfg.get("prefill_chunk", block_size)
+        # warm the paged jit caches (chunk cell per width + block-layout
+        # decode) on a throwaway scheduler so compiles stay out of the
+        # timed trace, mirroring the slot arms' warmup above
+        warm = [Request(prompt=prompts[i], max_new_tokens=2, request_id=i)
+                for i in range(min(2, n_req))]
+        PagedScheduler(eng, max_batch=max_batch, block_size=block_size,
+                       prefill_chunk=chunk).run(warm)
+
+        paged_reqs = make_requests()
+        psched = PagedScheduler(eng, max_batch=max_batch,
+                                block_size=block_size, prefill_chunk=chunk)
+        psched.run(paged_reqs)
+        if mesh is not None:
+            psched.pool.assert_on_mesh()
+        assert all(by_id[r.request_id].generated == r.generated
+                   for r in paged_reqs), (
+            "paged tokens diverged from the static oracle")
+        ps = psched.metrics.summary()
+        out["paged"] = ps
+        # prefill compute ~ tokens pushed through the prefill/chunk cells:
+        # the slot arm recomputes every prompt token, the paged arm skips
+        # the radix-tree hits
+        out["prefill"] = {
+            "slot_prefill_tokens": n_req * plen,
+            "paged_prefill_tokens": n_req * plen - ps["prefix_hit_tokens"],
+            "saved_frac": ps["prefix_hit_tokens"] / float(n_req * plen),
+        }
     print(json.dumps(out))
 
 
 def run_trace(devices: int, *, n_requests=16, max_batch=4, prompt_len=16,
-              min_new=2, max_new=32, gap_steps=1.5) -> dict:
+              min_new=2, max_new=32, gap_steps=1.5, **extra) -> dict:
     """Heterogeneous budgets (uniform [min_new, max_new]) are the point:
     static batching decodes every chunk to its SLOWEST row while continuous
-    retires and refills per step — the gap is the lockstep waste."""
+    retires and refills per step — the gap is the lockstep waste.  ``extra``
+    passes the prefix-trace knobs through to the worker (``prefix_len``,
+    ``block_size``, ``prefill_chunk``, ``paged``, ``tail``)."""
     cfg = dict(devices=devices, n_requests=n_requests, max_batch=max_batch,
                prompt_len=prompt_len, min_new=min_new, max_new=max_new,
-               gap_steps=gap_steps)
+               gap_steps=gap_steps, **extra)
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
@@ -171,22 +238,39 @@ def main(argv=None):
 
     smoke = 0 < args.steps < 8
     kw = {}
+    pkw = dict(n_requests=16, max_batch=4, prompt_len=48, prefix_len=32,
+               min_new=2, max_new=32, block_size=16, prefill_chunk=16,
+               paged=True, tail="longtail")
     if smoke:
         kw = dict(n_requests=4, max_batch=2, min_new=max(args.steps, 2),
                   max_new=max(args.steps, 2))
+        pkw.update(n_requests=3, max_batch=2, prompt_len=32, prefix_len=16,
+                   min_new=max(args.steps, 2), max_new=max(args.steps, 2))
     elif args.steps:
         kw = dict(max_new=args.steps)
+        pkw.update(max_new=args.steps)
     res = run_trace(args.devices, **kw)
+    pres = run_trace(args.devices, **pkw)
 
     st, ct = res["static"], res["continuous"]
-    for arm, s in (("static", st), ("continuous", ct)):
+    pg = pres["paged"]
+    for arm, s in (("static", st), ("continuous", ct),
+                   ("prefix/slot", pres["continuous"]), ("prefix/paged", pg)):
         missing = [k for k in SUMMARY_KEYS if k not in s]
         assert not missing, f"{arm} summary lost keys: {missing}"
+    missing = [k for k in PAGED_KEYS if k not in pg]
+    assert not missing, f"paged summary lost keys: {missing}"
     res["ratios"] = {
         "throughput_x": (ct["throughput_tok_s"] / st["throughput_tok_s"]
                          if st["throughput_tok_s"] else None),
         "ttft_p99_x": (st["ttft_p99_s"] / ct["ttft_p99_s"]
                        if ct["ttft_p99_s"] else None),
+    }
+    res["prefix_trace"] = {
+        "config": pres["config"],
+        "slot": pres["continuous"],
+        "paged": pg,
+        "prefill": pres["prefill"],
     }
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)
@@ -202,12 +286,25 @@ def main(argv=None):
     emit("serving_load.ratio", None,
          f"thru_x={res['ratios']['throughput_x']:.2f} "
          f"ttft_p99_x={res['ratios']['ttft_p99_x']:.2f}")
+    saved = res["prefix_trace"]["prefill"]["saved_frac"]
+    emit("serving_load.paged",
+         pg["ttft_p99_s"] * 1e6 if pg["ttft_p99_s"] else None,
+         f"thru={pg['throughput_tok_s']:.1f}tok/s "
+         f"hit={pg['prefix_hit_rate'] or 0:.2f} "
+         f"chunks={pg['prefill_chunk_steps']}")
+    emit("serving_load.prefix_savings", None,
+         f"prefill_saved={saved:.0%} "
+         f"({res['prefix_trace']['prefill']['paged_prefill_tokens']}"
+         f"/{res['prefix_trace']['prefill']['slot_prefill_tokens']} tok)")
 
     if not smoke:
         assert ct["throughput_tok_s"] > st["throughput_tok_s"], (
             "continuous batching must beat static throughput", res["ratios"])
         assert ct["ttft_p99_s"] < st["ttft_p99_s"], (
             "continuous batching must beat static p99 TTFT", res["ratios"])
+        assert saved >= 0.30, (
+            "prefix cache must save >= 30% of prefill compute on the "
+            "shared-prefix trace", res["prefix_trace"]["prefill"])
     print(f"# wrote {args.out}", file=sys.stderr)
 
 

@@ -8,7 +8,7 @@ driver builds the (data x model) mesh, the Topology modelling its links
 (plan, schedule, sharder) triple from them; the KV caches are asserted to
 land sequence-sharded on the mesh.
 
-Two serving modes:
+Three serving modes:
 
 * default — the static batch reference path (one lockstep ``generate``);
   ``--replan M`` then exercises the elastic-resize path: the engine
@@ -19,6 +19,11 @@ Two serving modes:
   per-token streaming (``--stream``), and a metrics JSON (TTFT/TPOT/
   queue-wait percentiles, throughput, slot occupancy, the priced fabric)
   printed and optionally written to ``--metrics PATH``.
+* ``--paged`` — the paged scheduler on top of the same trace machinery:
+  ``--block-size`` KV blocks with ref-counted tables,
+  ``--prefix-cache``/``--no-prefix-cache`` radix prefix sharing, and
+  ``--prefill-chunk N`` chunked prefill; the metrics JSON additionally
+  reports block occupancy and the prefix-cache hit rate.
 """
 import argparse
 import os
@@ -79,8 +84,20 @@ def main(argv=None):
                     "serve again (elastic resize; static mode)")
     ap.add_argument("--continuous", action="store_true",
                     help="serve through the continuous-batching scheduler")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged scheduler (block-pool KV, "
+                    "radix prefix cache, chunked prefill)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged mode)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share prompt-prefix KV blocks via the radix tree "
+                    "(paged mode)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens per chunked-prefill slice (paged "
+                    "mode; default: one slice per prompt)")
     ap.add_argument("--max-batch", type=int, default=4,
-                    help="decode slots in the KV pool (continuous mode)")
+                    help="decode slots in the KV pool (continuous/paged)")
     ap.add_argument("--arrival", type=float, default=0.0,
                     help="mean inter-arrival seconds of the Poisson request "
                     "trace (continuous mode; 0 = all arrive at once)")
@@ -140,8 +157,9 @@ def main(argv=None):
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
 
-    if args.continuous:
-        from repro.serving.scheduler import ContinuousScheduler
+    if args.continuous or args.paged:
+        from repro.serving.scheduler import (ContinuousScheduler,
+                                             PagedScheduler)
         rng = np.random.RandomState(0)
         gaps = (rng.exponential(args.arrival, size=args.batch)
                 if args.arrival > 0 else np.zeros(args.batch))
@@ -153,7 +171,13 @@ def main(argv=None):
         if args.stream:
             def stream(req, tok):
                 print(f"req{req.request_id} += {tok}", flush=True)
-        sched = ContinuousScheduler(eng, max_batch=args.max_batch)
+        if args.paged:
+            sched = PagedScheduler(eng, max_batch=args.max_batch,
+                                   block_size=args.block_size,
+                                   prefix_cache=args.prefix_cache,
+                                   prefill_chunk=args.prefill_chunk)
+        else:
+            sched = ContinuousScheduler(eng, max_batch=args.max_batch)
         sched.run(reqs, stream=stream)
         if eng.mesh is not None:
             sched.pool.assert_on_mesh()
@@ -163,6 +187,14 @@ def main(argv=None):
         sched.metrics.extra["n_devices"] = n_dev
         sched.metrics.extra["mode"] = plan.mode
         print(sched.metrics.to_json(args.metrics))
+        if args.paged:
+            s = sched.metrics.summary()
+            hit = s["prefix_hit_rate"]
+            print(f"paged: {sched.pool.n_blocks - 1} blocks x "
+                  f"{sched.pool.block_size} tokens, peak in use "
+                  f"{s['peak_blocks_in_use']}, prefix hit rate "
+                  f"{'-' if hit is None else f'{hit:.0%}'}, "
+                  f"{s['prefill_chunk_steps']} prefill chunks")
         for r in reqs:
             print(f"req{r.request_id} [{r.result.finish_reason}] "
                   f"ttft={r.result.metrics.ttft:.3f}s: {r.generated}")

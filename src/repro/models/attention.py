@@ -104,6 +104,30 @@ def attention(p, x, cfg: AttnConfig, *, causal: bool = True,
             k = sharder.decode_heads(k)
             v = sharder.decode_heads(v)
         pos = cache["pos"]
+        if "table" in cache:
+            # paged decode (block pool): the cache holds BLOCKS
+            # (n_blocks, Hkv, block, D) and ``table`` (B, blocks_per_slot)
+            # maps each row's logical positions onto physical blocks.  The
+            # write is one batched scatter at (block, offset) — positions
+            # land inside blocks the row OWNS, so rows never collide — and
+            # the read gathers each row's blocks along the (replicated)
+            # block dim, i.e. both stay local on the sequence-sharded
+            # leaves exactly like the slot pool's row-wise update.
+            table = cache["table"]
+            bsz = cache["k"].shape[2]
+            p_new = pos[:, None] + jnp.arange(s)           # (B, s)
+            phys = jnp.take_along_axis(table, p_new // bsz, axis=1)
+            off = p_new % bsz
+            ck = cache["k"].at[phys, :, off].set(
+                k.transpose(0, 2, 1, 3).astype(cache["k"].dtype))
+            cv = cache["v"].at[phys, :, off].set(
+                v.transpose(0, 2, 1, 3).astype(cache["v"].dtype))
+            kb = jnp.take(ck, table, axis=0)   # (B, nbs, Hkv, block, D)
+            vb = jnp.take(cv, table, axis=0)
+            new_cache = {"k": ck, "v": cv, "pos": pos + s, "table": table}
+            o = _ref_decode_paged(q, kb, vb, cfg, pos, causal)
+            o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+            return L.linear(p["wo"], o), new_cache
         if jnp.ndim(pos) == 1:
             # per-slot write positions (continuous-batching slot pool): each
             # row appends at its OWN sequence offset — a vmapped row-wise
@@ -162,6 +186,40 @@ def _ref_decode(q, k, v, cfg: AttnConfig, pos, causal: bool):
         s = jnp.where(mask[None, None, None], s, -2.3819763e38)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def _ref_decode_paged(q, kb, vb, cfg: AttnConfig, pos, causal: bool):
+    """Decode attention over per-row GATHERED blocks: q (B, H, Sq, D),
+    kb/vb (B, nbs, Hkv, block, D) in table order, so the global position of
+    entry (n, j) is ``n*block + j``.  Math is ``_ref_decode`` with the
+    cache's sequence axis left factored as (blocks, block) — the softmax
+    runs over both axes jointly, and under SPMD its cross-shard merge
+    lowers to the same small all-reduces as the slot path (the block dim is
+    replicated, the within-block dim is the sharded one)."""
+    b, h, sq, d = q.shape
+    nbs, hkv, bsz = kb.shape[1], kb.shape[2], kb.shape[3]
+    g = h // hkv
+    scale = cfg.scale if cfg.scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, sq, d)
+    kb = kb.transpose(0, 2, 1, 3, 4)          # (B, Hkv, nbs, block, D)
+    vb = vb.transpose(0, 2, 1, 3, 4)
+    s = jnp.einsum("bhgqd,bhnkd->bhgqnk", qg.astype(jnp.float32),
+                   kb.astype(jnp.float32)) * scale
+    if cfg.softcap is not None:
+        s = cfg.softcap * jnp.tanh(s / cfg.softcap)
+    q_pos = pos[:, None] + jnp.arange(sq)                 # (B, sq)
+    k_pos = jnp.arange(nbs)[:, None] * bsz + jnp.arange(bsz)  # (nbs, block)
+    mask = jnp.ones((b, sq, nbs, bsz), bool)
+    if causal:
+        mask &= k_pos[None, None] <= q_pos[..., None, None]
+    if cfg.window is not None:
+        mask &= k_pos[None, None] > q_pos[..., None, None] - cfg.window
+    s = jnp.where(mask[:, None, None], s, -2.3819763e38)
+    m = jnp.max(s, axis=(-2, -1), keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=(-2, -1), keepdims=True)
+    o = jnp.einsum("bhgqnk,bhnkd->bhgqd", p, vb.astype(jnp.float32))
     return o.reshape(b, h, sq, d).astype(q.dtype)
 
 

@@ -630,12 +630,17 @@ def init_caches(cfg: LMConfig, batch: int, max_len: int, *,
 
 
 def _decode_layer(p, x, pc, cfg: LMConfig, spec: LayerSpec, pos,
-                  sharder: Sharder, backend: str):
-    """One layer of single-token decode.  x: (B, 1, C)."""
+                  sharder: Sharder, backend: str, table=None):
+    """One layer of incremental decode.  x: (B, S, C) — S is 1 for the
+    decode step, or a prefill-chunk length (the paged scheduler feeds
+    prompt slices through this same cell).  ``table`` (B, blocks_per_slot)
+    switches attention to the paged block-pool cache layout."""
     aux = None
     h = _apply_norm(cfg, p["ln1"], x)
     if spec.mixer == "attn":
         cache = {"k": pc["kv"]["k"], "v": pc["kv"]["v"], "pos": pos}
+        if table is not None:
+            cache["table"] = table
         h, new_kv = A.attention(p["attn"], h, cfg.attn_cfg(spec.window),
                                 causal=True, cache=cache, sharder=sharder,
                                 backend=backend)
@@ -663,14 +668,19 @@ def _decode_layer(p, x, pc, cfg: LMConfig, spec: LayerSpec, pos,
 
 def forward_decode(params, tokens, caches, cfg: LMConfig, *,
                    sharder: Optional[Sharder] = None, backend: str = "ref"):
-    """tokens: (B, 1) -> (logits (B, 1, V), new caches).  The KV caches stay
+    """tokens: (B, S) -> (logits (B, S, V), new caches).  The KV caches stay
     *sequence-sharded* over the model axis (DSP decode): the softmax over the
     sharded KV length lowers to small psum collectives.  ``caches['pos']``
     may be a scalar (static batch) or a (B,) per-slot vector (continuous
-    batching): each row then appends and masks at its own offset."""
+    batching): each row then appends and masks at its own offset.  S is 1
+    on the decode hot path; the paged scheduler also pushes prefill CHUNKS
+    (S > 1) through here.  A ``caches['table']`` entry switches to the
+    paged block-pool layout (see ``serving.block_pool``): rows write and
+    read through their block table instead of a contiguous slot row."""
     sharder = sharder or make_sharder(None, ParallelPlan(mode="none"))
     specs = cfg.period_specs()
     pos = caches["pos"]
+    table = caches.get("table")
     x = sharded_embed(params, tokens, cfg, sharder)
 
     def body(x, inp):
@@ -678,7 +688,8 @@ def forward_decode(params, tokens, caches, cfg: LMConfig, *,
         new_pc = {}
         for i, spec in enumerate(specs):
             x, new_pc[str(i)] = _decode_layer(pp[str(i)], x, pc[str(i)], cfg,
-                                              spec, pos, sharder, backend)
+                                              spec, pos, sharder, backend,
+                                              table=table)
         return x, new_pc
 
     from repro.models.flags import scan_or_unroll
@@ -686,7 +697,10 @@ def forward_decode(params, tokens, caches, cfg: LMConfig, *,
                                               caches["periods"]))
     x = _apply_norm(cfg, params["final_norm"], x)
     logits = logits_fn(params, x, cfg, sharder)
-    return logits, {"pos": pos + 1, "periods": new_periods}
+    new = {"pos": pos + tokens.shape[1], "periods": new_periods}
+    if table is not None:
+        new["table"] = table
+    return logits, new
 
 
 def forward_prefill(params, tokens, cfg: LMConfig, *,

@@ -536,6 +536,12 @@ class Sharder:
 
 KV_SEQ_DIM = 3          # (periods, slots, Hkv, S, D): the sequence axis
 SLOT_DIM = 1            # (periods, slots, ...): the slot/batch axis
+BLOCK_DIM = 1           # (periods, blocks, Hkv, block, D): the paged block
+                        # axis — same position as SLOT_DIM, and like slots it
+                        # is NEVER sharded in paged mode: every device holds
+                        # the same 1/sp slice of every block, so block tables
+                        # are device-symmetric and alloc/free/share is pure
+                        # host bookkeeping (zero collectives)
 
 
 def is_kv_leaf(path, leaf) -> bool:
@@ -546,20 +552,30 @@ def is_kv_leaf(path, leaf) -> bool:
     return ("k" in keys or "v" in keys) and getattr(leaf, "ndim", 0) == 5
 
 
-def cache_pspecs(caches, plan: ParallelPlan):
+def cache_pspecs(caches, plan: ParallelPlan, *, paged: bool = False):
     """PartitionSpec tree for a cache/pool pytree: KV sharded along the
     sequence dim (DSP decode); SSM state sharded along heads; conv/pos
     replicated.  The same rule covers a single static-batch cache and the
     slot pool (slots are just the batch dim) — including the pool's per-slot
     ``pos`` vector, which stays replicated (every device masks every slot
-    identically)."""
+    identically).
+
+    ``paged=True`` covers the block pool's layout
+    ``(periods, blocks, Hkv, block_size, D)``: dim ``KV_SEQ_DIM`` is now the
+    *within-block* sequence and still carries the model axis, while the
+    block dim (``BLOCK_DIM``) is replicated — blocks, unlike slots, are
+    scattered per-request by a host-side table, so sharding them over
+    ``data`` would break the device-symmetric block identity that makes
+    paged alloc/free/share collective-free.  ``assert_kv_cache_on_mesh``
+    covers both layouts unchanged (it checks ``KV_SEQ_DIM``)."""
 
     def rule(path, leaf):
         keys = [str(getattr(k, "key", "")) for k in path]
         if "k" in keys or "v" in keys:          # KV leaves (see is_kv_leaf)
             if plan.mode in ("dsp", "tp"):       # seq-sharded KV either way
-                return P(None, "data", None, "model", None)
-            return P(None, "data", None, None, None)
+                return P(None, None if paged else "data", None, "model",
+                         None)
+            return P(None, None if paged else "data", None, None, None)
         if "state" in keys:                      # (periods, B, H, P, S)
             if plan.mode in ("dsp", "tp"):
                 return P(None, "data", "model", None, None)
@@ -572,9 +588,11 @@ def cache_pspecs(caches, plan: ParallelPlan):
 
 
 def assert_kv_cache_on_mesh(caches, mesh, plan: ParallelPlan):
-    """Assert every KV leaf of a prefill/decode cache (or slot pool) actually
-    landed sequence-sharded over the mesh's SP axis (the contract
-    ``cache_pspecs`` declares).  Uses ``shard_shape`` so it holds for any
+    """Assert every KV leaf of a prefill/decode cache (or slot/block pool)
+    actually landed sequence-sharded over the mesh's SP axis (the contract
+    ``cache_pspecs`` declares).  Dim ``KV_SEQ_DIM`` is the sequence axis in
+    the slot layout and the within-block sequence in the paged layout, so
+    the ONE check covers both.  Uses ``shard_shape`` so it holds for any
     concrete sharding type jit produced."""
     sp = mesh.shape.get("model", 1) if mesh is not None else 1
     if sp <= 1 or plan.mode not in ("dsp", "tp"):

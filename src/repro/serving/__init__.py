@@ -2,25 +2,34 @@
 
 Layers (see docs/architecture.md §5):
 
-* ``engine``    — ``ServingEngine``: the (plan, schedule, sharder) triple,
-  jitted prefill/decode, static-batch ``generate`` (the reference path),
-  elastic ``replan``.
-* ``kv_pool``   — ``KVPool``: ``max_batch`` decode slots carved from the
+* ``engine``      — ``ServingEngine``: the (plan, schedule, sharder) triple,
+  jitted prefill/decode/chunk cells, static-batch ``generate`` (the
+  reference path), elastic ``replan``.
+* ``kv_pool``     — ``KVPool``: ``max_batch`` decode slots carved from the
   sequence-sharded cache pytree; alloc/free/insert/compact.
-* ``scheduler`` — ``ContinuousScheduler``: FIFO admission, prefill/decode
-  interleaving, per-step retirement, streaming; ``replay_static`` is the
-  instrumented static baseline.
-* ``metrics``   — TTFT/TPOT/queue-wait per request, throughput and slot
-  occupancy per engine, JSON export.
+* ``block_pool``  — ``BlockPool``: the paged tier — fixed-size KV blocks,
+  ref-counted alloc/free, per-slot block tables (admission by free blocks).
+* ``prefix_tree`` — ``PrefixTree``: radix tree over prompt prefixes at
+  block granularity; copy-on-write sharing of system-prompt blocks.
+* ``scheduler``   — ``ContinuousScheduler`` (slot-based reference) and
+  ``PagedScheduler`` (paged + prefix-shared + chunk-prefilled): FIFO
+  admission, prefill/decode interleaving, per-step retirement, streaming;
+  ``replay_static`` is the instrumented static baseline.
+* ``metrics``     — TTFT/TPOT/queue-wait per request, throughput, slot and
+  block occupancy, prefix-cache hit rate, JSON export.
 """
+from repro.serving.block_pool import GARBAGE_BLOCK, BlockPool
 from repro.serving.engine import (Request, RequestResult, ServingEngine,
                                   assert_kv_cache_on_mesh, cache_pspecs)
 from repro.serving.kv_pool import KVPool, PoolExhausted
 from repro.serving.metrics import EngineMetrics, RequestMetrics
-from repro.serving.scheduler import ContinuousScheduler, replay_static
+from repro.serving.prefix_tree import PrefixTree
+from repro.serving.scheduler import (ContinuousScheduler, PagedScheduler,
+                                     replay_static)
 
 __all__ = [
     "Request", "RequestResult", "ServingEngine", "assert_kv_cache_on_mesh",
-    "cache_pspecs", "KVPool", "PoolExhausted", "EngineMetrics",
-    "RequestMetrics", "ContinuousScheduler", "replay_static",
+    "cache_pspecs", "KVPool", "PoolExhausted", "BlockPool", "GARBAGE_BLOCK",
+    "PrefixTree", "EngineMetrics", "RequestMetrics", "ContinuousScheduler",
+    "PagedScheduler", "replay_static",
 ]

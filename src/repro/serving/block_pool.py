@@ -1,0 +1,249 @@
+"""Paged KV pool for continuous batching: fixed-size blocks + block tables.
+
+``KVPool`` carves the decode cache into ``max_batch`` whole-``max_len``
+slots; this pool carves the SAME sequence-sharded cache pytree into
+``n_blocks`` fixed-size blocks instead — leaf layout
+``(periods, blocks, Hkv, block_size, Dh)`` with the *within-block* sequence
+dim sharded over the mesh's model axis (``cache_pspecs(..., paged=True)``).
+A per-slot block table ``(max_batch, blocks_per_slot)`` maps each live
+request's logical positions onto physical blocks; the decode step writes
+and reads through the table (``models.attention`` paged path).
+
+DSP makes paging *reshard-free*: because every block holds the same 1/N
+sequence slice on every device, physical block ids mean the same thing
+everywhere — the table is one replicated int array, alloc/free/share are
+pure host-side ref-count bookkeeping, and no collective is ever emitted at
+a block boundary.  (An Ulysses-style head-sharded cache would tie block
+geometry to the kv-head count and re-shard on every reshuffle.)
+
+Ref counting is what turns blocks into a *prefix cache*: a block's count is
+(live readers) + (1 if the radix tree holds it); ``decref`` returns a block
+to the free list only at zero.  Admission is by free BLOCKS — the request
+reserves ``ceil(need / block_size)`` minus whatever a prefix-tree hit
+already covers — which replaces the slot pool's whole-slot token budget.
+
+Shapes never change: the pool is allocated once, the jitted decode/chunk
+cells compile once per chunk length, and ``migrate`` re-places the same
+pytree on a resized mesh (elastic replan) without touching any table.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.partition import (ParallelPlan, assert_kv_cache_on_mesh,
+                                      cache_pspecs)
+from repro.serving.kv_pool import PoolExhausted
+
+GARBAGE_BLOCK = 0      # never allocated: freed/padded table entries point
+                       # here, so inactive rows scribble on a dedicated sink
+
+
+class BlockPool:
+    """``n_blocks`` KV blocks of ``block_size`` tokens + per-slot tables.
+
+    ``n_blocks`` defaults to full capacity (every slot can hold ``max_len``
+    tokens) plus the reserved garbage block; pass a smaller count to model
+    memory pressure — admission then backpressures on free blocks and the
+    scheduler evicts cold prefix-tree entries.
+    """
+
+    def __init__(self, cfg, max_batch: int, max_len: int, *,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 mesh=None, plan: Optional[ParallelPlan] = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_len % block_size:
+            raise ValueError(f"max_len {max_len} must be divisible by "
+                             f"block_size {block_size}")
+        if any(s.mixer != "attn" for s in cfg.period_specs()):
+            raise ValueError(
+                "BlockPool pages KV caches only; SSM state is O(1) per "
+                "request (nothing to page) — serve hybrid models through "
+                "the slot-based KVPool")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.block_size = block_size
+        self.blocks_per_slot = max_len // block_size
+        self.n_blocks = (n_blocks if n_blocks is not None
+                         else 1 + max_batch * self.blocks_per_slot)
+        if self.n_blocks < 2:
+            raise ValueError("need at least one allocatable block beyond "
+                             "the reserved garbage block")
+        self.plan = plan or ParallelPlan(mode="none")
+        self.mesh = mesh
+        sp = mesh.shape.get("model", 1) if mesh is not None else 1
+        if sp > 1 and block_size % sp:
+            raise ValueError(
+                f"block_size {block_size} must be divisible by the SP "
+                f"degree {sp} (blocks are sequence-sharded WITHIN)")
+        self.caches = self._place(self._init_caches())
+        # host-side bookkeeping: per-block ref counts (0 = free), LIFO free
+        # lists (reuse stays visible in tests), per-slot block lists
+        self.ref = np.zeros((self.n_blocks,), np.int64)
+        self.ref[GARBAGE_BLOCK] = 1          # pinned forever
+        self._free_blocks: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        self._free_slots: List[int] = list(range(max_batch - 1, -1, -1))
+        self._slot_blocks: Dict[int, List[int]] = {}
+        self.lengths = np.zeros((max_batch,), np.int64)
+        self.peak_blocks_in_use = 0
+
+    # -- cache pytree ---------------------------------------------------------
+
+    def _init_caches(self):
+        cfg = self.cfg
+        kv_dtype = cfg.cache_dtype or cfg.dtype
+        shape = (self.n_blocks, cfg.n_kv_heads, self.block_size,
+                 cfg.head_dim)
+        period = {str(i): {"kv": {"k": jnp.zeros(shape, kv_dtype),
+                                  "v": jnp.zeros(shape, kv_dtype)}}
+                  for i in range(len(cfg.period_specs()))}
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape),
+            period)
+        return {"pos": jnp.zeros((self.max_batch,), jnp.int32),
+                "table": jnp.full((self.max_batch, self.blocks_per_slot),
+                                  GARBAGE_BLOCK, jnp.int32),
+                "periods": stacked}
+
+    def _place(self, caches):
+        if self.mesh is None:
+            return caches
+        from jax.sharding import NamedSharding
+        specs = cache_pspecs(caches, self.plan, paged=True)
+        return jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, NamedSharding(self.mesh, s)),
+            caches, specs)
+
+    def migrate(self, mesh, plan: ParallelPlan):
+        """Elastic resize: re-place the pool (live blocks included) on a new
+        mesh.  One sequence-reshard per leaf; tables and ref counts are
+        untouched — block ids stay symmetric on the resized mesh, the same
+        property that makes slot migration drain-free."""
+        self.mesh = mesh
+        self.plan = plan
+        sp = mesh.shape.get("model", 1) if mesh is not None else 1
+        if sp > 1 and self.block_size % sp:
+            raise ValueError(f"block_size {self.block_size} not divisible "
+                             f"by resized SP degree {sp}")
+        if mesh is None:
+            self.caches = jax.device_put(self.caches)
+        else:
+            self.caches = self._place(self.caches)
+        return self
+
+    def assert_on_mesh(self):
+        """Serving contract: every KV leaf sharded along the within-block
+        sequence dim on the SP axis (no-op off-mesh)."""
+        assert_kv_cache_on_mesh(self.caches["periods"], self.mesh, self.plan)
+
+    # -- block accounting -----------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.n_blocks - 1 - self.free_blocks
+
+    @property
+    def n_free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def occupancy(self) -> float:
+        return 1.0 - self.n_free_slots / self.max_batch
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.block_size)
+
+    def can_admit(self, n_fresh_blocks: int) -> bool:
+        """A slot is free and ``n_fresh_blocks`` NEW blocks are available
+        (prefix-shared blocks don't count — they're already resident)."""
+        if n_fresh_blocks > self.blocks_per_slot:
+            raise ValueError(
+                f"request needs {n_fresh_blocks} blocks but slots map at "
+                f"most {self.blocks_per_slot} (max_len={self.max_len})")
+        return (self.n_free_slots > 0
+                and self.free_blocks >= n_fresh_blocks)
+
+    def alloc_blocks(self, n: int) -> List[int]:
+        if n > self.free_blocks:
+            raise PoolExhausted(f"need {n} blocks, {self.free_blocks} free")
+        blocks = [self._free_blocks.pop() for _ in range(n)]
+        for b in blocks:
+            self.ref[b] = 1
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+        return blocks
+
+    def incref(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if self.ref[b] < 1:
+                raise ValueError(f"incref on free block {b}")
+            self.ref[b] += 1
+
+    def decref(self, blocks: Sequence[int]) -> List[int]:
+        """Drop one reference per block; blocks reaching zero return to the
+        free list (returned for tests/metrics)."""
+        freed = []
+        for b in blocks:
+            if b == GARBAGE_BLOCK:
+                continue
+            if self.ref[b] < 1:
+                raise ValueError(f"decref on free block {b}")
+            self.ref[b] -= 1
+            if self.ref[b] == 0:
+                self._free_blocks.append(b)
+                freed.append(b)
+        return freed
+
+    # -- slot binding ---------------------------------------------------------
+
+    def bind(self, slot_blocks: Sequence[int], start: int) -> int:
+        """Claim a free slot, point its table at ``slot_blocks`` (prefix-
+        shared first, then owned), and set its write position to ``start``
+        (= tokens already covered by the shared prefix).  The device-side
+        table/pos update is two tiny replicated row writes — the cache
+        leaves are untouched (that is the whole point of paging)."""
+        if not self._free_slots:
+            raise PoolExhausted("no free slot")
+        if len(slot_blocks) > self.blocks_per_slot:
+            raise ValueError(f"{len(slot_blocks)} blocks > blocks_per_slot "
+                             f"{self.blocks_per_slot}")
+        slot = self._free_slots.pop()
+        self._slot_blocks[slot] = list(slot_blocks)
+        row = np.full((self.blocks_per_slot,), GARBAGE_BLOCK, np.int32)
+        row[:len(slot_blocks)] = slot_blocks
+        self.caches = dict(self.caches)
+        self.caches["table"] = self.caches["table"].at[slot].set(
+            jnp.asarray(row))
+        self.caches["pos"] = self.caches["pos"].at[slot].set(start)
+        self.lengths[slot] = start
+        return slot
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Retire a slot: decref every block it referenced (shared prefix
+        blocks survive while the tree or another reader holds them) and
+        point the row at the garbage block so the still-stepping decode
+        lane scribbles harmlessly.  Returns the physically freed blocks."""
+        if slot not in self._slot_blocks:
+            raise ValueError(f"slot {slot} not bound")
+        freed = self.decref(self._slot_blocks.pop(slot))
+        self.caches = dict(self.caches)
+        self.caches["table"] = self.caches["table"].at[slot].set(
+            jnp.full((self.blocks_per_slot,), GARBAGE_BLOCK, jnp.int32))
+        self.lengths[slot] = 0
+        self._free_slots.append(slot)
+        return freed
+
+    def slot_blocks(self, slot: int) -> List[int]:
+        return list(self._slot_blocks[slot])
+
+    def active_slots(self) -> List[int]:
+        return sorted(self._slot_blocks)

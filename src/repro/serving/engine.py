@@ -136,6 +136,9 @@ class ServingEngine:
         self.params = self._place_params(params)
         self._decode = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
+        # paged chunk cell: donating the pool overwrites block rows in
+        # place instead of copying the whole cache per prefill slice
+        self._chunk = jax.jit(self._chunk_impl, donate_argnums=(1,))
 
     def _place_params(self, params):
         if self.mesh is None:
@@ -225,6 +228,25 @@ class ServingEngine:
         return LM.forward_decode(self.params, token, caches, self.cfg,
                                  sharder=self.sharder, backend=self.backend)
 
+    def _chunk_impl(self, tokens, caches, slot):
+        """One prefill CHUNK of a paged pool slot: tokens (1, c) advance
+        ``slot``'s lane of the block pool through the same decode-path
+        layers (per-row position masking makes c > 1 causal-correct), so a
+        long prompt streams into its blocks slice by slice while the rest
+        of the pool keeps decoding between slices.  ``slot`` is a traced
+        scalar — one compile per distinct chunk length, never per slot."""
+        row = {"pos": jax.lax.dynamic_slice(caches["pos"], (slot,), (1,)),
+               "table": jax.lax.dynamic_slice_in_dim(
+                   caches["table"], slot, 1, axis=0),
+               "periods": caches["periods"]}
+        logits, new = LM.forward_decode(self.params, tokens, row, self.cfg,
+                                        sharder=self.sharder,
+                                        backend=self.backend)
+        pos = jax.lax.dynamic_update_slice(caches["pos"], new["pos"],
+                                           (slot,))
+        return logits, {"pos": pos, "table": caches["table"],
+                        "periods": new["periods"]}
+
     # -- host-side serving loop ----------------------------------------------
 
     def generate(self, prompts: jax.Array,
@@ -305,22 +327,37 @@ class ServingEngine:
               eos_id: Optional[int] = None, pad_id: int = 0,
               continuous: bool = False, max_batch: Optional[int] = None,
               token_budget: Optional[int] = None, stream=None,
-              scheduler=None):
+              scheduler=None, paged: bool = False, block_size: int = 16,
+              n_blocks: Optional[int] = None, prefix_cache: bool = True,
+              prefill_chunk: Optional[int] = None):
         """Serve a list of Requests, filling ``Request.result`` on each.
 
         ``continuous=True`` delegates to the continuous-batching scheduler
         (``serving.scheduler.ContinuousScheduler``): FIFO admission on
         arrival times, ``max_batch`` recycled slots, per-token ``stream``
-        callbacks, full latency metrics.  Pass ``scheduler`` to provide the
-        instance (and so keep its pool and metrics across calls, and read
-        ``scheduler.metrics`` afterwards); the filled ``requests`` list is
-        returned either way.
+        callbacks, full latency metrics.  ``paged=True`` (implies
+        continuous) serves through the paged tier instead
+        (``serving.scheduler.PagedScheduler``): ``block_size``-token KV
+        blocks, a radix prefix cache (``prefix_cache``), and chunked
+        prefill (``prefill_chunk`` tokens per slice).  Pass ``scheduler``
+        to provide the instance (and so keep its pool and metrics across
+        calls, and read ``scheduler.metrics`` afterwards); the filled
+        ``requests`` list is returned either way.
 
         The default static path is the reference oracle: one lockstep batch
         (equal prompt lengths required), per-request ``max_new_tokens``
-        honoured by masking.  Continuous serving is token-identical to it
-        for the same request set (tests/test_serving.py pins this).
+        honoured by masking.  Continuous serving — slot-based AND paged —
+        is token-identical to it for the same request set
+        (tests/test_serving.py, tests/test_paged.py pin this).
         """
+        if paged:
+            from repro.serving.scheduler import PagedScheduler
+            sched = scheduler or PagedScheduler(
+                self, max_batch or min(len(requests), 8),
+                block_size=block_size, n_blocks=n_blocks,
+                prefix_cache=prefix_cache, prefill_chunk=prefill_chunk)
+            sched.run(requests, stream=stream, eos_id=eos_id)
+            return requests
         if continuous:
             from repro.serving.scheduler import ContinuousScheduler
             sched = scheduler or ContinuousScheduler(

@@ -79,6 +79,15 @@ class EngineMetrics:
         self.prefills = 0
         self.slots_allocated = 0
         self.tokens_generated = 0
+        # paged serving (block pool + prefix tree + chunked prefill);
+        # zero/None on the slot-based and static paths — ONE schema for
+        # every arm so the bench JSON diffs cleanly
+        self.prefill_chunk_steps = 0
+        self.prefix_hit_tokens = 0
+        self.prompt_tokens = 0
+        self.blocks_in_use: Optional[int] = None     # latest gauge
+        self.blocks_free: Optional[int] = None
+        self.peak_blocks_in_use = 0
         self._occupancy_sum = 0.0
         self._elapsed_accum = 0.0        # closed segments (scheduler reuse)
         self.start_time: Optional[float] = None
@@ -112,6 +121,22 @@ class EngineMetrics:
         self.tokens_generated += n
         self.finish_time = now
 
+    def record_chunk(self) -> None:
+        """One chunked-prefill slice pushed through the decode cell."""
+        self.prefill_chunk_steps += 1
+
+    def record_prefix(self, hit_tokens: int, prompt_tokens: int) -> None:
+        """One admission's prefix-cache outcome: ``hit_tokens`` of the
+        request's ``prompt_tokens`` were served from shared blocks."""
+        self.prefix_hit_tokens += hit_tokens
+        self.prompt_tokens += prompt_tokens
+
+    def record_blocks(self, in_use: int, free: int) -> None:
+        """Block-pool occupancy gauge (latest value + running peak)."""
+        self.blocks_in_use = in_use
+        self.blocks_free = free
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use, in_use)
+
     # -- export --------------------------------------------------------------
 
     @property
@@ -144,6 +169,13 @@ class EngineMetrics:
             "tpot_p99_s": percentile(tpots, 99),
             "queue_wait_p50_s": percentile(waits, 50),
             "queue_wait_p99_s": percentile(waits, 99),
+            "prefill_chunk_steps": self.prefill_chunk_steps,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_rate": (self.prefix_hit_tokens / self.prompt_tokens
+                                if self.prompt_tokens else None),
+            "blocks_in_use": self.blocks_in_use,
+            "blocks_free": self.blocks_free,
+            "peak_blocks_in_use": self.peak_blocks_in_use,
             **self.extra,
         }
 

@@ -25,6 +25,16 @@ step, the price of reading tokens for retirement); the engine's static
 ``ContinuousScheduler`` must produce bit-identical tokens for the same
 requests (tests/test_serving.py pins this).
 
+``PagedScheduler`` is the paged tier on top of the same engine: KV lives in
+fixed-size BLOCKS (``serving.block_pool``) referenced through per-slot block
+tables, a radix tree (``serving.prefix_tree``) shares full prompt-prefix
+blocks across requests (a common system prompt prefills ONCE), and long
+prompts prefill in CHUNKS interleaved with pool decode steps — a batch-1
+prefill no longer stalls every decoder (head-of-line blocking).  Admission
+reserves free *blocks* (minus the prefix-cache hit) instead of a whole-slot
+token budget.  All three together stay token-identical to static
+``generate`` (tests/test_paged.py pins single-device and 8-device sharded).
+
 ``replay_static`` is the instrumented static-batching baseline (FIFO chunks
 of ``max_batch``, lockstep until the slowest row of each chunk finishes) —
 ``benchmarks/serving_load.py`` replays one arrival trace through both and
@@ -40,8 +50,10 @@ from typing import Callable, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.block_pool import BlockPool
 from repro.serving.kv_pool import KVPool
 from repro.serving.metrics import EngineMetrics, RequestMetrics
+from repro.serving.prefix_tree import PrefixTree
 
 
 @dataclasses.dataclass
@@ -229,13 +241,335 @@ class ContinuousScheduler:
             self.pool.assert_on_mesh()
         return self
 
+    # -- pool compaction ----------------------------------------------------
+
+    def compact(self) -> Dict[int, int]:
+        """Pack live slots to the front of the pool AND rewrite the
+        scheduler's slot table with the {old_slot: new_slot} mapping
+        ``KVPool.compact`` returns — active entries, their recorded slot
+        ids, and the per-slot pool bookkeeping all move together, so
+        retirement after a mid-run compact stays correct (the pool method
+        alone renumbers slots out from under ``_active``).  Safe between
+        decode steps, e.g. from ``run``'s ``on_step`` hook."""
+        mapping = self.pool.compact()
+        self._active = {mapping[slot]: st
+                        for slot, st in self._active.items()}
+        for slot, st in self._active.items():
+            st.slot = slot
+        return mapping
+
+
+# ---------------------------------------------------------------------------
+# Paged tier: block pool + radix prefix sharing + chunked prefill
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _PrefillState:
+    """A request whose prompt is still streaming into the block pool."""
+    request: object
+    slot: int
+    prompt: np.ndarray
+    done: int                     # tokens already resident (prefix + chunks)
+    eos_id: Optional[int]
+    metrics: RequestMetrics
+
+
+class PagedScheduler:
+    """Continuous batching over the paged ``BlockPool``.
+
+    Same host-driven loop discipline as ``ContinuousScheduler`` (static
+    decode shapes, per-step retirement, FIFO admission, injectable clock),
+    with three upgrades:
+
+    * **paged KV** — admission reserves ``ceil(need/block_size)`` blocks;
+      the decode step reads/writes through per-slot block tables (the
+      ``models.attention`` paged path).
+    * **radix prefix sharing** — ``prefix_cache=True`` keeps a
+      ``PrefixTree`` over served prompts: matched full blocks are
+      *referenced* (ref-counted, copy-on-write by construction) instead of
+      re-prefilled, and only the miss suffix reserves fresh blocks.
+    * **chunked prefill** — ``prefill_chunk=N`` splits the uncached prompt
+      suffix into N-token slices; each loop iteration runs ONE slice and
+      then one pool decode step, so live decoders advance during long
+      prefills instead of stalling behind them (``None`` = one slice, the
+      slot scheduler's behaviour).
+    """
+
+    def __init__(self, engine, max_batch: int = 8, *,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 prefill_chunk: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
+        if engine.mesh is not None and engine.mesh.shape.get("data", 1) > 1:
+            raise ValueError(
+                "continuous batching serves with data=1: blocks are "
+                "scattered per-request, the WITHIN-BLOCK sequence dim "
+                "carries the parallelism (use more model-axis devices)")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {prefill_chunk}")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.pool = BlockPool(engine.cfg, max_batch, engine.max_len,
+                              block_size=block_size, n_blocks=n_blocks,
+                              mesh=engine.mesh, plan=engine.plan)
+        self.tree = PrefixTree(block_size) if prefix_cache else None
+        self.prefill_chunk = prefill_chunk
+        self.metrics = EngineMetrics(max_batch)
+        self._clock = clock
+        self._sleep = sleep
+        self._active: Dict[int, _Active] = {}
+        self._prefilling: "collections.deque[_PrefillState]" = (
+            collections.deque())
+        self._t0: Optional[float] = None
+
+    def _now(self) -> float:
+        return self._clock() - self._t0
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self, requests: List, *, stream=None,
+            eos_id: Optional[int] = None, on_step=None) -> List:
+        """Serve ``requests`` to completion (same contract as
+        ``ContinuousScheduler.run``).  Each loop iteration advances at most
+        ONE prefill chunk and then the whole decode pool one step — that
+        interleaving is what ends prefill head-of-line blocking."""
+        from repro.serving.engine import RequestResult  # no cycle: lazy
+
+        self._t0 = self._clock()
+        self.metrics.start(0.0)
+        waiting = collections.deque(
+            sorted(requests, key=lambda r: r.arrival_time))
+        step = 0
+        while waiting or self._prefilling or self._active:
+            self._admit(waiting, eos_id)
+            busy = False
+            if self._prefilling:
+                self._chunk_step(stream)
+                busy = True
+            if self._active:
+                self._step(stream)
+                step += 1
+                if on_step is not None:
+                    on_step(self, step)
+                busy = True
+            if busy or not waiting:
+                continue
+            gap = waiting[0].arrival_time - self._now()
+            if gap > 0:
+                self._sleep(min(gap, 0.005))
+            elif not self._can_admit_head(waiting[0]):
+                raise RuntimeError(
+                    f"deadlock: request needs "
+                    f"{self.pool.blocks_for(self._need(waiting[0]))} blocks "
+                    f"but the idle pool has {self.pool.free_blocks} free "
+                    f"(+{len(self.tree) if self.tree else 0} cached)")
+        for r in requests:
+            assert isinstance(r.result, RequestResult)
+        return requests
+
+    @staticmethod
+    def _need(req) -> int:
+        return int(req.prompt.shape[0]) + int(req.max_new_tokens)
+
+    # -- admission -----------------------------------------------------------
+
+    def _match_prefix(self, prompt: np.ndarray):
+        """Prefix-tree hit for ``prompt``, trimmed so at least the last
+        prompt token is always recomputed (its logits seed the first
+        generated token).  Returns (shared blocks, tokens they cover)."""
+        if self.tree is None:
+            return [], 0
+        shared, covered = self.tree.match(prompt)
+        while shared and covered > len(prompt) - 1:
+            shared.pop()
+            covered -= self.pool.block_size
+        return shared, covered
+
+    def _reclaim(self, n_short: int) -> None:
+        """Evict cold prefix-tree leaves until ``n_short`` blocks are free
+        (or no evictable leaf remains).  Only blocks the tree SOLELY owns
+        qualify — evicting a block a live request still reads frees
+        nothing and throws the cache entry away for zero gain.  (The
+        admitting request already holds reader refs on its own matched
+        blocks, so they can never qualify here.)"""
+        while self.tree is not None and self.pool.free_blocks < n_short:
+            evicted = self.tree.evict(
+                n_short - self.pool.free_blocks,
+                evictable=lambda b: self.pool.ref[b] == 1)
+            if not evicted:
+                break
+            self.pool.decref(evicted)
+
+    def _can_admit_head(self, req) -> bool:
+        shared, covered = self._match_prefix(np.asarray(req.prompt))
+        fresh = self.pool.blocks_for(self._need(req)) - len(shared)
+        return (self.pool.n_free_slots > 0
+                and self.pool.free_blocks + (len(self.tree) if self.tree
+                                             else 0) >= fresh)
+
+    def _admit(self, waiting, default_eos) -> None:
+        while waiting:
+            req = waiting[0]
+            if req.arrival_time > self._now():
+                return
+            if req.max_new_tokens < 1:
+                raise ValueError("max_new_tokens must be >= 1 per request")
+            prompt = np.asarray(req.prompt)
+            need = self._need(req)
+            n_total = self.pool.blocks_for(need)   # raises if it NEVER fits
+            if n_total > self.pool.blocks_per_slot:
+                raise ValueError(
+                    f"request needs {n_total} blocks but slots map at most "
+                    f"{self.pool.blocks_per_slot}")
+            shared, covered = self._match_prefix(prompt)
+            fresh_n = n_total - len(shared)
+            # reader refs on the shared blocks FIRST: a concurrent tree
+            # eviction may drop the tree's share, the blocks must survive
+            self.pool.incref(shared)
+            if not self.pool.can_admit(fresh_n):
+                self._reclaim(fresh_n)
+            if not self.pool.can_admit(fresh_n):
+                self.pool.decref(shared)
+                return                              # FIFO: wait, no overtake
+            waiting.popleft()
+            rm = RequestMetrics(arrival_time=req.arrival_time)
+            rm.admitted_time = self._now()
+            self.metrics.requests.append(rm)
+            self.metrics.record_admission()
+            self.metrics.record_prefix(covered, len(prompt))
+            fresh = self.pool.alloc_blocks(fresh_n)
+            slot = self.pool.bind(shared + fresh, covered)
+            self.metrics.record_blocks(self.pool.blocks_in_use,
+                                       self.pool.free_blocks)
+            eos = req.eos_id if req.eos_id is not None else default_eos
+            self._prefilling.append(_PrefillState(
+                request=req, slot=slot, prompt=prompt, done=covered,
+                eos_id=eos, metrics=rm))
+
+    # -- one prefill chunk -----------------------------------------------------
+
+    def _chunk_step(self, stream) -> None:
+        """Push ONE prompt slice of the oldest prefilling request through
+        the engine's chunk cell; on the last slice, sample the first token
+        and promote the request to the decode pool (registering its full
+        prompt blocks in the prefix tree)."""
+        from repro.serving.engine import RequestResult
+
+        pf = self._prefilling[0]
+        plen = len(pf.prompt)
+        width = self.prefill_chunk or (plen - pf.done)
+        end = min(pf.done + width, plen)
+        tokens = jnp.asarray(pf.prompt[None, pf.done:end])
+        logits, caches = self.engine._chunk(
+            tokens, self.pool.caches, jnp.asarray(pf.slot, jnp.int32))
+        self.pool.caches = caches
+        self.pool.lengths[pf.slot] = end
+        pf.done = end
+        self.metrics.record_chunk()
+        if end < plen:
+            return
+        self._prefilling.popleft()
+        if self.tree is not None:
+            n_full = plen // self.pool.block_size
+            added = self.tree.insert(
+                pf.prompt[:n_full * self.pool.block_size],
+                self.pool.slot_blocks(pf.slot)[:n_full])
+            self.pool.incref(added)       # the tree's ownership share
+        first = int(np.asarray(jnp.argmax(logits[:, -1], axis=-1))[0])
+        rm = pf.metrics
+        rm.first_token_time = self._now()
+        rm.n_generated = 1
+        self.metrics.record_tokens(1, rm.first_token_time)
+        if stream is not None:
+            stream(pf.request, first)
+        done_eos = pf.eos_id is not None and first == pf.eos_id
+        if done_eos or pf.request.max_new_tokens == 1:
+            reason = "eos" if done_eos else "budget"
+            rm.finish_time = rm.first_token_time
+            rm.finish_reason = reason
+            pf.request.result = RequestResult(
+                tokens=[first], finish_reason=reason, metrics=rm)
+            self.pool.free_slot(pf.slot)
+            self.metrics.record_blocks(self.pool.blocks_in_use,
+                                       self.pool.free_blocks)
+            return
+        self._active[pf.slot] = _Active(
+            request=pf.request, slot=pf.slot, tokens=[first],
+            eos_id=pf.eos_id, budget=pf.request.max_new_tokens,
+            metrics=rm, last_token=first)
+
+    # -- one decode step -------------------------------------------------------
+
+    def _step(self, stream) -> None:
+        from repro.serving.engine import RequestResult
+
+        last = np.zeros((self.max_batch,), np.int32)
+        for slot, st in self._active.items():
+            last[slot] = st.last_token
+        logits, caches = self.engine._decode(jnp.asarray(last[:, None]),
+                                             self.pool.caches)
+        if self._prefilling:
+            # the batched decode advanced EVERY row's pos and scribbled one
+            # garbage K/V token for mid-prefill slots; roll their pos back —
+            # the next chunk rewrites that position with real prompt K/V
+            # (always a private block: shared blocks end below ``done``)
+            pos = caches["pos"]
+            for pf in self._prefilling:
+                pos = pos.at[pf.slot].set(pf.done)
+            caches["pos"] = pos
+        self.pool.caches = caches
+        toks = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        now = self._now()
+        n_active = len(self._active)
+        for slot in sorted(self._active):
+            st = self._active[slot]
+            t = int(toks[slot])
+            st.tokens.append(t)
+            st.last_token = t
+            st.metrics.n_generated = len(st.tokens)
+            self.pool.lengths[slot] += 1
+            if stream is not None:
+                stream(st.request, t)
+            done_eos = st.eos_id is not None and t == st.eos_id
+            done_budget = len(st.tokens) >= st.budget
+            if done_eos or done_budget:
+                st.metrics.finish_time = now
+                st.metrics.finish_reason = "eos" if done_eos else "budget"
+                st.request.result = RequestResult(
+                    tokens=st.tokens, finish_reason=st.metrics.finish_reason,
+                    metrics=st.metrics)
+                self.pool.free_slot(slot)
+                del self._active[slot]
+        self.metrics.record_tokens(n_active, now)
+        self.metrics.record_step(n_active, now)
+        self.metrics.record_blocks(self.pool.blocks_in_use,
+                                   self.pool.free_blocks)
+
+    # -- elastic resize --------------------------------------------------------
+
+    def replan(self, n_devices: int, *, topology=None):
+        """Drain-free elastic resize, same contract as the slot scheduler:
+        the engine re-derives (plan, schedule, sharder) and re-jits, the
+        block pool re-places its leaves on the resized mesh (one sequence-
+        reshard per leaf).  Block tables and ref counts are host state —
+        nothing to migrate, which is the paged payoff of device-symmetric
+        blocks."""
+        self.engine.replan(n_devices, topology=topology)
+        self.pool.migrate(self.engine.mesh, self.engine.plan)
+        if self.engine.mesh is not None:
+            self.pool.assert_on_mesh()
+        return self
+
 
 # ---------------------------------------------------------------------------
 # Static-batching baseline (instrumented) — the bench's comparison arm
 # ---------------------------------------------------------------------------
 
 def replay_static(engine, requests: List, *, max_batch: int,
-                  eos_id: Optional[int] = None,
+                  eos_id: Optional[int] = None, pad_id: int = 0,
                   clock: Callable[[], float] = time.monotonic,
                   sleep: Callable[[float], None] = time.sleep):
     """Replay an arrival trace through classic static batching: FIFO chunks
@@ -243,7 +577,17 @@ def replay_static(engine, requests: List, *, max_batch: int,
     prefills together and decodes in lockstep until its slowest row
     finishes.  Same prompts, same greedy decode, same wall clock as
     ``ContinuousScheduler`` — only the batching policy differs.  Returns
-    the filled requests and an ``EngineMetrics``."""
+    the filled requests and an ``EngineMetrics``.
+
+    Heterogeneous prompt lengths within a chunk are LEFT-padded to the
+    chunk's max with ``pad_id`` — the classic static-serving workaround,
+    and exactly how a varied-length (long-tail) trace runs through this
+    baseline arm.  Note the trade the real systems make too: a padded
+    row's model inputs include the leading pad tokens (this engine has no
+    prefill attention mask), so its token VALUES are representative rather
+    than oracle-exact; timing/throughput — what the bench compares — are
+    measured on identical shapes either way.  Equal-length chunks are
+    untouched and stay bit-exact against ``generate``."""
     from repro.serving.engine import RequestResult
 
     metrics = EngineMetrics(max_batch)
@@ -257,10 +601,11 @@ def replay_static(engine, requests: List, *, max_batch: int,
     order = sorted(requests, key=lambda r: r.arrival_time)
     for i in range(0, len(order), max_batch):
         chunk = order[i:i + max_batch]
-        lens = {int(r.prompt.shape[0]) for r in chunk}
-        if len(lens) != 1:
-            raise ValueError(f"static chunks need equal prompt lengths, "
-                             f"got {sorted(lens)}")
+        width = max(int(r.prompt.shape[0]) for r in chunk)
+        need = width + max(int(r.max_new_tokens) for r in chunk)
+        if need > engine.max_len:        # padding widens short rows
+            raise ValueError(f"padded chunk needs {need} tokens but the "
+                             f"engine serves max_len={engine.max_len}")
         while clock() - t0 < max(r.arrival_time for r in chunk):
             sleep(0.0005)
         rms = []
@@ -271,7 +616,11 @@ def replay_static(engine, requests: List, *, max_batch: int,
             metrics.slots_allocated += 1     # one batch row per request...
             rms.append(rm)
         metrics.prefills += 1                # ...but ONE prefill per chunk
-        prompts = jnp.stack([r.prompt for r in chunk])
+        prompts = jnp.stack([
+            jnp.pad(jnp.asarray(r.prompt),
+                    (width - int(r.prompt.shape[0]), 0),
+                    constant_values=pad_id)
+            for r in chunk])
         logits, caches = engine._prefill(prompts)
         token = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         now = clock() - t0

@@ -450,6 +450,74 @@ def scenario_continuous_serving_sharded():
             i, r.generated, ref[i, :budgets[i]].tolist())
 
 
+def scenario_paged_serving_sharded():
+    """The paged tier on the 8-device mesh: block-pool KV stays
+    sequence-sharded through chunked prefills, admissions and retirements
+    (assert_on_mesh after every step), tokens match the unsharded static
+    reference bit-for-bit, a mid-flight replan (8 -> 4) changes neither,
+    and the compiled decode step shows EXACTLY the slot path's collectives
+    — block alloc/free/share is host bookkeeping, zero extra
+    communication."""
+    import jax, jax.numpy as jnp
+    from repro.analysis.roofline import parse_collectives
+    from repro.core.topology import Topology
+    from repro.models.lm import LMConfig, init_lm
+    from repro.parallel.partition import ParallelPlan
+    from repro.serving.engine import Request, ServingEngine, _submesh
+    from repro.serving.kv_pool import KVPool
+    from repro.serving.scheduler import PagedScheduler
+
+    cfg = LMConfig(name="t", n_layers=2, d_model=64, n_heads=8, n_kv_heads=4,
+                   head_dim=16, d_ff=128, vocab=96, dtype=jnp.float32)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 96)
+    budgets = (8, 3, 6, 8)
+    ref = np.asarray(ServingEngine(params, cfg, max_len=32)
+                     .generate(prompts, list(budgets)))
+
+    eng = ServingEngine(params, cfg, max_len=32, mesh=_submesh(8, 1),
+                        plan=ParallelPlan(mode="dsp"),
+                        topology=Topology.multihost(2, 4))
+    assert eng.sp_degree == 8
+
+    # -- compiled-HLO pin: the paged decode step's collectives are EXACTLY
+    # the slot decode step's (all-reduce only; the block-table gather and
+    # scatter stay device-local on the sequence-sharded leaves) ------------
+    sched = PagedScheduler(eng, max_batch=2, block_size=8, prefill_chunk=8)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    slot_caches = KVPool(cfg, 2, 32, mesh=eng.mesh, plan=eng.plan).caches
+    by_arm = {}
+    for arm, caches in (("slot", slot_caches), ("paged", sched.pool.caches)):
+        hlo = (jax.jit(lambda t, c: eng._decode_impl(t, c))
+               .lower(tok, caches).compile().as_text())
+        by_arm[arm] = {
+            k: int(v)
+            for k, v in parse_collectives(hlo).by_kind_count.items() if v}
+    assert not set(by_arm["paged"]) & {"all-gather", "all-to-all",
+                                       "reduce-scatter"}, by_arm
+    assert by_arm["paged"] == by_arm["slot"], by_arm
+
+    reqs = [Request(prompt=prompts[i], max_new_tokens=budgets[i],
+                    request_id=i) for i in range(4)]
+    replanned = []
+
+    def on_step(s, k):
+        s.pool.assert_on_mesh()        # seq-sharded through the whole run
+        if k == 3:                     # elastic resize with blocks LIVE
+            s.replan(4)
+            replanned.append(k)
+
+    sched.run(reqs, on_step=on_step)
+    assert replanned == [3]
+    assert eng.sp_degree == 4
+    assert sched.metrics.slots_allocated == 4 > sched.max_batch
+    assert sched.metrics.prefill_chunk_steps >= 4   # chunked prefill ran
+    assert sched.pool.free_blocks > 0
+    for i, r in enumerate(reqs):
+        assert r.generated == ref[i, :budgets[i]].tolist(), (
+            i, r.generated, ref[i, :budgets[i]].tolist())
+
+
 SCENARIOS = {name[len("scenario_"):]: fn
              for name, fn in list(globals().items())
              if name.startswith("scenario_")}

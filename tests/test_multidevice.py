@@ -21,6 +21,7 @@ SCENARIOS = [
     "joint_bwd_parity",
     "scan_joint_bwd_parity",
     "continuous_serving_sharded",
+    "paged_serving_sharded",
 ]
 
 
