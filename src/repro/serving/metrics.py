@@ -44,6 +44,9 @@ class RequestMetrics:
     finish_time: Optional[float] = None
     n_generated: int = 0
     finish_reason: str = ""            # "eos" | "budget" | ""
+    padded: bool = False               # static replay left-padded this row:
+                                       # tokens are representative, NOT the
+                                       # bit-exact generate() reference
 
     @property
     def queue_wait(self) -> Optional[float]:
@@ -176,6 +179,7 @@ class EngineMetrics:
             "blocks_in_use": self.blocks_in_use,
             "blocks_free": self.blocks_free,
             "peak_blocks_in_use": self.peak_blocks_in_use,
+            "padded_rows": sum(1 for r in self.requests if r.padded),
             **self.extra,
         }
 

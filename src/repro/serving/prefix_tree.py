@@ -28,6 +28,7 @@ live request merely stops being discoverable.
 """
 from __future__ import annotations
 
+import heapq
 from typing import Dict, List, Optional, Tuple
 
 
@@ -77,22 +78,28 @@ class PrefixTree:
 
     # -- lookup ---------------------------------------------------------------
 
-    def match(self, tokens) -> Tuple[List[int], int]:
+    def match(self, tokens, *, peek: bool = False) -> Tuple[List[int], int]:
         """Longest cached full-block prefix of ``tokens``: returns the
         physical blocks (root-to-leaf order) and the token count they
-        cover.  Touches every matched node's LRU clock."""
+        cover.  Touches every matched node's LRU clock and the hit/miss
+        counters — unless ``peek``, the read-only mode for feasibility
+        probes: a request that is merely being *checked* (not admitted)
+        must neither refresh its prefix's recency (skewing LRU eviction
+        against other cached prefixes) nor inflate the hit stats."""
         blocks: List[int] = []
         node = self.root
-        now = self._tick()
+        now = None if peek else self._tick()
         for key in self._keys(tokens):
             child = node.children.get(key)
             if child is None:
-                self.misses += 1
+                if not peek:
+                    self.misses += 1
                 break
-            child.last_use = now
+            if not peek:
+                child.last_use = now
+                self.hits += 1
             blocks.append(child.block)
             node = child
-            self.hits += 1
         return blocks, len(blocks) * self.block_size
 
     # -- registration ---------------------------------------------------------
@@ -128,21 +135,34 @@ class PrefixTree:
         memory; a prefix still read by a live request stays cached instead
         of being dropped for zero gain.  Returns the evicted physical
         blocks; the caller drops the tree's pool reference on each
-        (``decref``)."""
+        (``decref``).
+
+        One DFS collects the initial leaf set; from there the candidate
+        set is maintained incrementally through a min-heap on
+        ``last_use`` (evicting a node may turn its parent into a leaf —
+        push it then), so reclaiming K blocks costs O(tree + K log tree)
+        instead of re-walking the whole tree per victim."""
         evicted: List[int] = []
-        while len(evicted) < n_blocks:
-            leaves = []
-            stack = [self.root]
-            while stack:
-                node = stack.pop()
-                for child in node.children.values():
-                    if child.children:
-                        stack.append(child)
-                    elif evictable is None or evictable(child.block):
-                        leaves.append(child)
-            if not leaves:
-                break
-            victim = min(leaves, key=lambda n: n.last_use)
+        heap: List[Tuple[int, int, _Node]] = []
+        seq = 0                  # insertion tie-break; never compares nodes
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            for child in node.children.values():
+                if child.children:
+                    stack.append(child)
+                else:
+                    heap.append((child.last_use, seq, child))
+                    seq += 1
+        heapq.heapify(heap)
+        while heap and len(evicted) < n_blocks:
+            _, _, victim = heapq.heappop(heap)
+            if evictable is not None and not evictable(victim.block):
+                continue         # stays cached; keeps its parent pinned too
             del victim.parent.children[victim.key]
             evicted.append(victim.block)
+            parent = victim.parent
+            if parent is not self.root and not parent.children:
+                heapq.heappush(heap, (parent.last_use, seq, parent))
+                seq += 1
         return evicted

@@ -366,6 +366,12 @@ class PagedScheduler:
                     f"{self.pool.blocks_for(self._need(waiting[0]))} blocks "
                     f"but the idle pool has {self.pool.free_blocks} free "
                     f"(+{len(self.tree) if self.tree else 0} cached)")
+            else:
+                # feasible but not admitted this pass (next iteration's
+                # _admit reclaims and takes it); a hair of sleep turns any
+                # probe/admission accounting drift into a cool spin
+                # instead of a hot one
+                self._sleep(0.0005)
         for r in requests:
             assert isinstance(r.result, RequestResult)
         return requests
@@ -376,13 +382,15 @@ class PagedScheduler:
 
     # -- admission -----------------------------------------------------------
 
-    def _match_prefix(self, prompt: np.ndarray):
+    def _match_prefix(self, prompt: np.ndarray, *, peek: bool = False):
         """Prefix-tree hit for ``prompt``, trimmed so at least the last
         prompt token is always recomputed (its logits seed the first
-        generated token).  Returns (shared blocks, tokens they cover)."""
+        generated token).  Returns (shared blocks, tokens they cover).
+        ``peek`` walks the tree read-only (no LRU tick, no hit/miss
+        counters) — the feasibility probe's mode."""
         if self.tree is None:
             return [], 0
-        shared, covered = self.tree.match(prompt)
+        shared, covered = self.tree.match(prompt, peek=peek)
         while shared and covered > len(prompt) - 1:
             shared.pop()
             covered -= self.pool.block_size
@@ -404,11 +412,22 @@ class PagedScheduler:
             self.pool.decref(evicted)
 
     def _can_admit_head(self, req) -> bool:
-        shared, covered = self._match_prefix(np.asarray(req.prompt))
+        """Idle-pool feasibility probe behind the deadlock check: could
+        the head request be admitted once every reclaimable cached block
+        is evicted?  Counts only blocks ``_reclaim`` can actually take:
+        the request's OWN matched prefix is excluded, because ``_admit``
+        grabs reader refs on it before reclaiming and the ``ref == 1``
+        evictability predicate then never selects those blocks — counting
+        them here would report an admission that can never happen and
+        spin ``run`` forever.  The probe peeks the tree read-only so a
+        stuck head neither refreshes its prefix's LRU recency nor
+        inflates the hit/miss counters."""
+        shared, _ = self._match_prefix(np.asarray(req.prompt), peek=True)
         fresh = self.pool.blocks_for(self._need(req)) - len(shared)
+        reclaimable = (max(0, len(self.tree) - len(shared))
+                       if self.tree is not None else 0)
         return (self.pool.n_free_slots > 0
-                and self.pool.free_blocks + (len(self.tree) if self.tree
-                                             else 0) >= fresh)
+                and self.pool.free_blocks + reclaimable >= fresh)
 
     def _admit(self, waiting, default_eos) -> None:
         while waiting:
@@ -586,8 +605,11 @@ def replay_static(engine, requests: List, *, max_batch: int,
     row's model inputs include the leading pad tokens (this engine has no
     prefill attention mask), so its token VALUES are representative rather
     than oracle-exact; timing/throughput — what the bench compares — are
-    measured on identical shapes either way.  Equal-length chunks are
-    untouched and stay bit-exact against ``generate``."""
+    measured on identical shapes either way.  Every padded row is flagged
+    (``RequestMetrics.padded``; ``summary()["padded_rows"]`` counts them)
+    so callers never mistake its tokens for reference decode.  Equal-length
+    chunks are untouched, stay bit-exact against ``generate``, and carry
+    ``padded=False``."""
     from repro.serving.engine import RequestResult
 
     metrics = EngineMetrics(max_batch)
@@ -612,6 +634,7 @@ def replay_static(engine, requests: List, *, max_batch: int,
         for r in chunk:
             rm = RequestMetrics(arrival_time=r.arrival_time)
             rm.admitted_time = clock() - t0
+            rm.padded = int(r.prompt.shape[0]) < width
             metrics.requests.append(rm)
             metrics.slots_allocated += 1     # one batch row per request...
             rms.append(rm)

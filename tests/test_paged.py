@@ -118,6 +118,27 @@ def test_prefix_tree_match_insert_evict():
     assert len(t) == 0
 
 
+def test_prefix_tree_peek_is_read_only():
+    """``match(peek=True)`` returns the same hit but ticks no clock,
+    refreshes no recency, and bumps no counter — so feasibility probes
+    can't skew LRU eviction order or inflate hit stats."""
+    t = PrefixTree(block_size=4)
+    toks = list(range(8))
+    t.insert(toks, [1, 2])
+    before = (t.hits, t.misses, t._clock)
+    assert t.match(toks, peek=True) == ([1, 2], 8)
+    assert t.match([99] * 8, peek=True) == ([], 0)
+    assert (t.hits, t.misses, t._clock) == before
+    # LRU order survives probing: branch A is older, a peek on it must
+    # NOT rescue it from eviction
+    t2 = PrefixTree(block_size=2)
+    t2.insert([0, 1], [3])
+    t2.insert([5, 6], [4])
+    t2.match([5, 6])                  # branch B is now the recent one
+    t2.match([0, 1], peek=True)       # probe the stale branch A
+    assert t2.evict(1) == [3]         # A still evicts first
+
+
 # ---------------------------------------------------------------------------
 # Paged scheduler vs the static oracle (the tentpole contract)
 # ---------------------------------------------------------------------------
@@ -234,6 +255,29 @@ def test_paged_no_prefix_cache_and_exhaustion(engine, prompts):
             _requests(prompts[:1], (60,)))
 
 
+def test_paged_deadlock_raises_not_spins(engine):
+    """A head request whose fresh-block need exceeds free + genuinely
+    evictable blocks must raise the deadlock error, not busy-spin: the
+    blocks its OWN prefix matched are reader-ref'd during admission, so
+    they can never be reclaimed for it and must not be counted as
+    headroom (REVIEW regression — run() used to hang here forever)."""
+    pre = jax.random.randint(jax.random.PRNGKey(7), (16,), 0, TINY.vocab)
+    ext = jnp.concatenate(
+        [pre, jax.random.randint(jax.random.PRNGKey(8), (8,), 0,
+                                 TINY.vocab)])
+    sched = PagedScheduler(engine, max_batch=2, block_size=8, n_blocks=4)
+    sched.run([Request(prompt=pre, max_new_tokens=8, request_id=0)])
+    assert len(sched.tree) == 2 and sched.pool.free_blocks == 1
+    hits, misses = sched.tree.hits, sched.tree.misses
+    # ext needs 4 blocks: 2 matched (pinned by its own admission refs),
+    # 2 fresh — but only 1 block is free and nothing else is evictable
+    with pytest.raises(RuntimeError, match="deadlock"):
+        sched.run([Request(prompt=ext, max_new_tokens=8, request_id=1)])
+    # exactly ONE real match (the _admit attempt: 2 hit blocks + 1 miss);
+    # the feasibility probe peeked and left the counters alone
+    assert (sched.tree.hits, sched.tree.misses) == (hits + 2, misses + 1)
+
+
 def test_paged_metrics_summary_schema(engine, prompts):
     sched = PagedScheduler(engine, max_batch=2, block_size=8,
                            prefill_chunk=4)
@@ -265,13 +309,20 @@ def test_replay_static_heterogeneous_prompts(engine, prompts):
     for r in out:
         assert len(r.generated) == 4
         assert r.result.finish_reason == "budget"
+    # the short row of the mixed chunk is FLAGGED as padded (its tokens
+    # are representative, not the bit-exact oracle); full-width rows
+    # stay unflagged
+    assert [r.result.metrics.padded for r in out] == [False, True, False]
+    assert metrics.summary()["padded_rows"] == 1
     # the equal-length chunk pair never existed here (8,5 | 8) — but a
     # homogeneous trace must still match the oracle exactly
     ref = np.asarray(engine.generate(prompts, 4))
     reqs2 = _requests(prompts, (4, 4, 4))
-    replay_static(engine, reqs2, max_batch=3)
+    _, m2 = replay_static(engine, reqs2, max_batch=3)
     for i, r in enumerate(reqs2):
         assert r.generated == ref[i].tolist(), i
+    assert m2.summary()["padded_rows"] == 0
+    assert all(not r.result.metrics.padded for r in reqs2)
     # padded width + budget beyond max_len still fails loudly
     with pytest.raises(ValueError, match="max_len"):
         replay_static(engine, _requests(prompts, (60, 4, 4)), max_batch=2)
