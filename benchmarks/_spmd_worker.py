@@ -31,7 +31,7 @@ def main():
                     n_kv_heads=cfg_json.get("n_kv_heads"),
                     dtype=jnp.float32)
     from repro.core.compat import make_mesh
-    if mode == "hybrid":
+    if mode in ("hybrid", "layout2d"):
         # 2D SP process grid (outer DCN factor major) — launch.mesh
         outer = cfg_json.get("sp_outer") or 2
         mesh = make_mesh((outer, n // outer), ("sp_out", "sp_in"))
@@ -43,7 +43,13 @@ def main():
     tt = jax.random.uniform(jax.random.PRNGKey(2), (b,))
 
     overlap = cfg_json.get("overlap")    # dsp only: decomposed switches
-    if cfg_json.get("grad"):
+    if mode == "layout2d":
+        # first-class 2D layouts: the planned Schedule2D drives forward2d
+        # on the ("sp_out", "sp_in") grid — per-axis sub-mesh switches
+        from repro.models.transformer2d import forward2d
+        fn = jax.jit(lambda p, xx, t_: forward2d(p, xx, t_, cfg, mesh=mesh,
+                                                 remat=False))
+    elif cfg_json.get("grad"):
         fwd = make_spmd_forward(cfg, mesh, mode=mode, backend="ref",
                                 remat=True, overlap=overlap)
 

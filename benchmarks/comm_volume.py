@@ -284,6 +284,77 @@ def main(argv=None):
         "fabrics": meg_fabrics,
     }
 
+    # ---- first-class 2D layouts row (TSP fold) ----------------------------
+    # Two pinned facts about planning over dim PAIRS on the (2, 4) sp2d
+    # grid.  (1) CONSERVATIVE: the 2D layout space contains the 1D plans as
+    # its diagonal, so with the same entry/exit pinning the 2D DP is never
+    # worse than the 1D DP on the same fabric — on this symmetric bench
+    # instance it lands exactly on the embedded 1D plan (a joint a2a moves
+    # M/N once; two per-axis a2as would move it twice, and the planner
+    # knows it).  (2) ENABLING: on the TSP-fold instance (T=4, S=12,
+    # 4 heads) NO dim extent divides the 8-way SP degree, so the 1D space
+    # cannot shard the model at all (XLA would pad + involuntarily remat)
+    # — dim-pair layouts split the factor across two dims and restore full
+    # 8-way sharding, with the compiled forward2d HLO pinned to the
+    # executor's per-axis accounting.  Runs under --quick.
+    from repro.core.plan import (layout_allows, plan_cost_seconds,
+                                 plan2d_cost_seconds, plan_switches_2d,
+                                 plan_switches_dp)
+    from repro.core.schedule import ScheduleExecutor2D
+    from repro.launch.mesh import sp2d_topology
+    from repro.models.transformer2d import dsp2d_schedule, stages2d
+    grid2d = (2, N // 2)
+    topo2d = sp2d_topology(*grid2d)          # == Topology.multihost(2, 4)
+    bench_st = stages2d(cfg, t_len=t, s_len=s, batch=b)
+    plan_1d = plan_switches_dp(bench_st, [1, 2, 3], n=N, initial=1, final=1,
+                               topology=topo2d)
+    secs_1d = plan_cost_seconds(bench_st, plan_1d, topo2d, initial=1,
+                                final=1)
+    plan_2d = plan_switches_2d(bench_st, [1, 2, 3], grid=grid2d, initial=1,
+                               final=1, topology=topo2d)
+    secs_2d = plan2d_cost_seconds(bench_st, plan_2d, topo2d, initial=1,
+                                  final=1)
+    assert secs_2d <= secs_1d, (
+        f"2D plan space contains the 1D diagonal but planned worse: "
+        f"{secs_2d:.3e}s > {secs_1d:.3e}s")
+
+    fcfg = T2DConfig(name="fold", n_layers=LAYERS, d_model=d, n_heads=4,
+                     d_ff=256, in_dim=16, modulate=False, dtype=jnp.float32)
+    fb, ft, fs = 2, 4, 12
+    fold_st = stages2d(fcfg, t_len=ft, s_len=fs, batch=fb)
+    assert not any(layout_allows(stg, (dim, dim), grid2d)
+                   for stg in fold_st for dim in (1, 2, 3)), (
+        "fold instance must be unshardable in the 1D (diagonal) space")
+    p2 = dsp2d_schedule(fcfg, grid2d, t_len=ft, s_len=fs, batch=fb,
+                        topology=topo2d)
+    ex2d = ScheduleExecutor2D(p2, backend="null")
+    expected2d = ex2d.expected_carry_collectives(pairs)
+    r2d = spmd_measure(N, "layout2d", batch=fb, temporal=ft, spatial=fs,
+                       layers=LAYERS, d_model=d, heads=4, modulate=False,
+                       sp_outer=grid2d[0])
+    assert {k: int(v) for k, v in r2d["by_kind_count"].items()
+            if v} == expected2d, (r2d["by_kind_count"], expected2d)
+    record["layout2d"] = {
+        "grid": list(grid2d),
+        "bench_planned_seconds": {"plan_1d": secs_1d, "plan_2d": secs_2d},
+        "fold_config": {"batch": fb, "temporal": ft, "spatial": fs,
+                        "d_model": d, "n_heads": 4},
+        "fold_layouts_per_period": [list(lo) for lo in p2.layouts],
+        "fold_planned_bytes": p2.schedule.per_device_bytes(),
+        "fold_planned_seconds_ici_dcn": p2.schedule.per_device_seconds(),
+        "fold_measured_bytes": r2d["collective_bytes_per_dev"],
+        "counts": r2d["by_kind_count"],
+        "expected_counts": expected2d,
+    }
+    emit("table3/layout2d/conservative", None,
+         f"planned_seconds_1d={secs_1d:.3e};planned_seconds_2d={secs_2d:.3e}"
+         f";embedded_diagonal={all(lo[0] == lo[1] for lo in plan_2d)}")
+    emit("table3/layout2d/fold", None,
+         f"planned_bytes={p2.schedule.per_device_bytes():.0f};"
+         f"measured={r2d['collective_bytes_per_dev']:.0f};"
+         f"counts={r2d['by_kind_count']};"
+         f"layouts={[list(lo) for lo in p2.layouts]}")
+
     # ---- unified-plan HYBRID row (the (stage, dim, strategy) DP) ----------
     # Instance: long-temporal latents (T=128, S=4) with GQA (8 q heads, 4 kv
     # heads) on the ICI x DCN fabric.  S=4 divides the per-host ICI group

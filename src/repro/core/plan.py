@@ -102,6 +102,13 @@ class Stage:
     behaviour).  ``kv_bytes``/``kv_heads`` describe the stage's K/V
     activations for the strategies that stream or head-scatter them
     (defaults: 2x the stream, MHA head counts — the Table-3 conventions).
+
+    ``extents`` (optional) overrides ``shape`` for DIVISIBILITY checks
+    only: the switchable extent per dim, used by the 2D-layout planner to
+    rule out layouts whose shard factor does not divide the dim.  Declare
+    it when the shardable granularity is coarser than the shape — e.g. a
+    channel dim whose byte extent is ``H * dh`` but which only shards on
+    head boundaries (extent ``H``).  Inert in the 1D planners.
     """
 
     compute_dims: FrozenSet[int]
@@ -114,6 +121,7 @@ class Stage:
     strategies: Optional[Tuple[str, ...]] = None
     kv_bytes: Optional[float] = None
     kv_heads: Optional[int] = None
+    extents: Optional[Tuple[int, ...]] = None
 
     def allows(self, dim: int) -> bool:
         return dim not in self.compute_dims
@@ -933,6 +941,10 @@ def plan_to_dict(plan) -> Dict:
     fabric."""
     if isinstance(plan, (JointPlan, StrategyPlan)):
         return plan.to_dict()
+    plan = list(plan)
+    if plan and isinstance(plan[0], (tuple, list)):
+        return {"kind": "layout2d",
+                "layouts": [[int(a), int(b)] for a, b in plan]}
     return {"kind": "dims", "dims": [int(d) for d in plan]}
 
 
@@ -946,6 +958,8 @@ def plan_from_dict(d: Dict):
         return StrategyPlan.from_dict(d)
     if kind == "dims":
         return [int(x) for x in d["dims"]]
+    if kind == "layout2d":
+        return [(int(a), int(b)) for a, b in d["layouts"]]
     raise ValueError(f"unknown plan kind {kind!r}")
 
 
@@ -1156,6 +1170,395 @@ def brute_force_strategy(stages: Sequence[Stage], seq_dims: Sequence[int],
     if best_plan is None:
         raise ValueError("no admissible (dim, strategy) assignment")
     return best, best_plan
+
+
+# ---------------------------------------------------------------------------
+# 2D layouts (TSP fold): (d_out, d_in) pairs on an ("sp_out","sp_in") grid
+# ---------------------------------------------------------------------------
+#
+# A 2D *layout* assigns one logical dim per mesh axis of a 2-axis SP grid
+# (``launch.mesh.make_sp2d_mesh``): component 0 shards over the outer axis,
+# component 1 over the inner axis.  The DIAGONAL layout ``(d, d)`` shards
+# the single dim ``d`` jointly over both axes — the whole 1D machinery is
+# the diagonal of this space, and on a degenerate ``(n, 1)`` / ``(1, n)``
+# grid the 2D planner delegates wholesale to ``plan_switches_dp`` so plans
+# and costs reproduce bit-for-bit (property-tested in tests/test_layout2d.py).
+#
+# Transitions decompose PER AXIS: an axis whose component is unchanged pays
+# nothing, a changed axis pays one SUB-MESH collective over just that axis
+# (all-to-all for a switch, all-gather for a gather) of the bytes visible to
+# one fiber of the axis (M divided by the other axis' shard factor) — so a
+# single-axis switch folds to exactly M/N per device, the same Table-2
+# convention as the 1D switch.  Diagonal-to-diagonal transitions are priced
+# as ONE full-group Table-2 primitive (that is what the executor runs), which
+# is what makes the embedded 1D plans cost-identical.
+
+def _as_pair(layout) -> Optional[Tuple[Optional[int], Optional[int]]]:
+    """Normalize a layout argument: None stays None (free / unsharded),
+    an int ``d`` lifts to the diagonal ``(d, d)``, a 2-tuple passes
+    through."""
+    if layout is None:
+        return None
+    if isinstance(layout, int):
+        return (layout, layout)
+    pair = tuple(layout)
+    if len(pair) != 2:
+        raise ValueError(f"2D layout must be a dim pair, got {layout!r}")
+    return pair
+
+
+def _pair_is_diagonal(pair) -> bool:
+    return pair is not None and pair[0] == pair[1]
+
+
+def pair_placement_equal(a, b, grid: Tuple[int, int]) -> bool:
+    """True when two 2D layouts PLACE data identically on ``grid``:
+    components over a size-1 axis shard nothing, so they are don't-cares
+    (a degenerate-grid diagonal plan equals the 1D layout it collapsed
+    to).  ``None`` layouts equal only other ``None`` layouts."""
+    pa, pb = _as_pair(a), _as_pair(b)
+    if pa is None or pb is None:
+        return pa is None and pb is None
+    return all(g <= 1 or x == y for g, x, y in zip(grid, pa, pb))
+
+
+def pair_transition_kinds(src, tgt) -> Tuple[str, str]:
+    """Per-axis Table-2 kinds of a 2D layout change (component k classified
+    with the 1D ``transition_kind``).  Diagonal-to-diagonal changes are the
+    joint case — both axes report the same kind and the pricer charges ONE
+    full-group primitive, not two sub-mesh ones."""
+    s = _as_pair(src) or (None, None)
+    t = _as_pair(tgt) or (None, None)
+    return (transition_kind(s[0], t[0]), transition_kind(s[1], t[1]))
+
+
+def _pair_joint(src, tgt) -> bool:
+    """True when the transition is diagonal-to-diagonal (including the
+    unsharded ``None``): one full-group primitive covers both axes."""
+    s = _as_pair(src) or (None, None)
+    t = _as_pair(tgt) or (None, None)
+    return s[0] == s[1] and t[0] == t[1]
+
+
+def _fiber_factor(s, t, other: int, grid: Tuple[int, int]) -> int:
+    """Shard factor the OTHER axis applies to the tensor while this axis
+    re-tiles (``other`` indexes the other component): the other axis' grid
+    size when it holds a sharded component, 1 when unsharded."""
+    if s[other] is not None or t[other] is not None:
+        return grid[other]
+    return 1
+
+
+def pair_transition_bytes(src, tgt, global_bytes: float,
+                          grid: Tuple[int, int]) -> float:
+    """Per-device bytes of one 2D layout transition.
+
+    Joint (diagonal-to-diagonal) changes price as ONE full-group Table-2
+    primitive over N = grid[0]*grid[1]; otherwise each changed axis pays
+    its sub-mesh collective — switch = M/N (the fiber-visible M/s_other
+    re-tiled over the axis), gather = the fiber-visible bytes every device
+    ends with, keep/split = 0.
+    """
+    from repro.core.dsp import comm_volume_bytes
+    s = _as_pair(src) or (None, None)
+    t = _as_pair(tgt) or (None, None)
+    n = grid[0] * grid[1]
+    if _pair_joint(src, tgt):
+        return comm_volume_bytes(transition_kind(s[0], t[0]),
+                                 global_bytes, n)
+    total = 0.0
+    for k in range(2):
+        kind = transition_kind(s[k], t[k])
+        if kind in ("keep", "split"):
+            continue
+        fiber = global_bytes / _fiber_factor(s, t, 1 - k, grid)
+        if kind == "switch":
+            total += fiber / grid[k]
+        else:  # gather over this axis: every device ends with the fiber
+            total += fiber
+    return total
+
+
+def pair_transition_seconds(src, tgt, global_bytes: float, topology) -> float:
+    """Seconds of one 2D layout transition on a >=2-axis ``Topology`` whose
+    axes map POSITIONALLY onto the grid (axis 0 = sp_out, 1 = sp_in).
+    Joint changes price exactly as the 1D ``transition_seconds`` (one
+    full-group primitive, per-dim placements honoured); per-axis changes
+    pay one sub-mesh collective each (``Topology.axis_all_to_all_seconds``
+    / ``axis_all_gather_seconds``)."""
+    s = _as_pair(src) or (None, None)
+    t = _as_pair(tgt) or (None, None)
+    if _pair_joint(src, tgt):
+        return topology.transition_seconds(transition_kind(s[0], t[0]),
+                                           global_bytes, s[0], t[0])
+    if len(topology.axes) < 2:
+        raise ValueError(
+            f"per-axis 2D transition {src!r} -> {tgt!r} needs a >=2-axis "
+            f"topology; got {tuple(a.name for a in topology.axes)}")
+    grid = (topology.axes[0].size, topology.axes[1].size)
+    total = 0.0
+    for k in range(2):
+        kind = transition_kind(s[k], t[k])
+        if kind in ("keep", "split"):
+            continue
+        fiber = global_bytes / _fiber_factor(s, t, 1 - k, grid)
+        if kind == "switch":
+            total += topology.axis_all_to_all_seconds(fiber, k)
+        else:
+            total += topology.axis_all_gather_seconds(fiber, k)
+    return total
+
+
+def _pair_cost(src, tgt, global_bytes: float, grid: Tuple[int, int],
+               topology) -> float:
+    """The one 2D edge weight: per-axis Table-2 bytes without a topology,
+    per-axis sub-mesh seconds on one (the 2D analogue of
+    ``_transition_cost``)."""
+    if topology is None:
+        return pair_transition_bytes(src, tgt, global_bytes, grid)
+    return pair_transition_seconds(src, tgt, global_bytes, topology)
+
+
+def _pair_changed_axes(src, tgt) -> int:
+    s = _as_pair(src) or (None, None)
+    t = _as_pair(tgt) or (None, None)
+    return (s[0] != t[0]) + (s[1] != t[1])
+
+
+def layout_allows(stage: Stage, layout, grid: Tuple[int, int]) -> bool:
+    """Stage feasibility of a 2D layout: no component may sit on a compute
+    dim, and each sharded dim's extent (``Stage.extents``, falling back to
+    ``Stage.shape``) must divide by its total shard factor — the grid axis
+    size per component, their product for the diagonal."""
+    pair = _as_pair(layout)
+    if pair is None:
+        return True
+    factors: Dict[int, int] = {}
+    for k, d in enumerate(pair):
+        if d is None:
+            continue
+        if not stage.allows(d):
+            return False
+        if grid[k] > 1:
+            factors[d] = factors.get(d, 1) * grid[k]
+    ext = stage.extents if stage.extents is not None else stage.shape
+    if ext is not None:
+        for d, f in factors.items():
+            if d >= len(ext) or ext[d] % f != 0:
+                return False
+    return True
+
+
+def _check_feasible_2d(stages: Sequence[Stage], layouts,
+                       grid: Tuple[int, int]) -> None:
+    for st in stages:
+        if not any(layout_allows(st, lo, grid) for lo in layouts):
+            raise ValueError(
+                f"stage {st.name!r} admits no 2D layout on grid {grid}")
+
+
+def _candidate_layouts(seq_dims: Sequence[int]) -> List[Tuple[int, int]]:
+    """The DP state space: every ordered dim pair, diagonal included (the
+    embedded 1D plans).  Mid-plan unsharded components never help for the
+    same reason mid-plan gathers don't in 1D: the gather moves strictly
+    more bytes than the switch it would replace."""
+    return [(a, b) for a in seq_dims for b in seq_dims]
+
+
+def _degenerate_component(pair, grid: Tuple[int, int]):
+    """Collapse a pair to the component on the non-trivial axis of a
+    degenerate grid (the other axis has size 1 — sharding over it is a
+    no-op)."""
+    if pair is None:
+        return None
+    k = 0 if grid[0] > 1 else 1
+    return pair[k]
+
+
+def plan_switches_2d(stages: Sequence[Stage], seq_dims: Sequence[int],
+                     *, grid: Tuple[int, int],
+                     initial=None, final=None,
+                     final_bytes: Optional[float] = None,
+                     topology=None) -> List[Tuple[int, int]]:
+    """Exact minimum-cost 2D plan: DP over (stage, layout) where a layout
+    is a dim pair over the ``("sp_out", "sp_in")`` grid.
+
+    Transition into stage ``t`` is weighted by the bytes of the activation
+    entering it, decomposed per axis (``pair_transition_bytes``; per-axis
+    sub-mesh seconds on ``topology``, whose axes map positionally onto the
+    grid).  Unchanged axes pay zero, so the DP naturally routes switches
+    through single-axis changes when the fabric is asymmetric (a DCN outer
+    axis makes outer changes expensive).  ``initial`` / ``final`` accept a
+    pair, a bare dim (lifted to the diagonal) or None.
+
+    On a degenerate grid — either axis of size 1 — this DELEGATES wholesale
+    to ``plan_switches_dp`` and lifts its dims to diagonal pairs: the 1D
+    planner stays the oracle and its plans/costs are reproduced bit-for-bit
+    (the collapse property of tests/test_layout2d.py).
+
+    Ties break toward the path with the fewest MULTI-axis boundaries (a
+    single-axis change lowers to one clean sub-mesh all-to-all — the
+    compiled contract the HLO tier pins — so equal-cost plans prefer
+    spreading changes across boundaries), then toward fewer changed axes at
+    this boundary, then the lexicographically smaller source layout —
+    deterministic plans.
+    """
+    if len(grid) != 2 or grid[0] < 1 or grid[1] < 1:
+        raise ValueError(f"grid must be two axis sizes >= 1, got {grid!r}")
+    if not stages:
+        return []
+    ini, fin = _as_pair(initial), _as_pair(final)
+
+    if grid[0] == 1 and grid[1] == 1:
+        # Size-1 fabric: no transition moves any bytes, but the DP's M/N
+        # convention still charges switches, so it minimizes switch COUNT —
+        # and can save one by breaking the periodic tail.  All that matters
+        # here is a stable layout per stage: greedy keep-else-smallest,
+        # which stays periodic whenever the stage sequence is.
+        plan1: List[int] = []
+        prev1 = _degenerate_component(ini, grid)
+        for st in stages:
+            if prev1 is None or not st.allows(prev1):
+                prev1 = min(d for d in seq_dims if st.allows(d))
+            plan1.append(prev1)
+        return [(d, d) for d in plan1]
+
+    if grid[0] == 1 or grid[1] == 1:
+        n = grid[0] * grid[1]
+        plan = plan_switches_dp(
+            stages, seq_dims, n=n,
+            initial=_degenerate_component(ini, grid),
+            final=_degenerate_component(fin, grid),
+            final_bytes=final_bytes, topology=topology)
+        return [(d, d) for d in plan]
+
+    layouts = _candidate_layouts(seq_dims)
+    _check_feasible_2d(stages, layouts, grid)
+    INF = float("inf")
+
+    def multi(src, tgt) -> int:
+        # secondary objective: count boundaries changing BOTH axes (joint
+        # diagonal moves are one full-group primitive, not a multi-axis
+        # change)
+        if _pair_joint(src, tgt):
+            return 0
+        return 1 if _pair_changed_axes(src, tgt) > 1 else 0
+
+    nb0 = _boundary_bytes(stages, 0)
+    cost: Dict[Tuple[int, int], float] = {}
+    nmulti: Dict[Tuple[int, int], int] = {}
+    for lo in layouts:
+        if not layout_allows(stages[0], lo, grid):
+            cost[lo] = INF
+            nmulti[lo] = 0
+            continue
+        cost[lo] = (_pair_cost(ini, lo, nb0, grid, topology)
+                    if ini is not None else 0.0)
+        nmulti[lo] = multi(ini, lo) if ini is not None else 0
+    back: List[Dict[Tuple[int, int], Optional[Tuple[int, int]]]] = []
+
+    for t in range(1, len(stages)):
+        nb = _boundary_bytes(stages, t)
+        ncost: Dict[Tuple[int, int], float] = {}
+        nm: Dict[Tuple[int, int], int] = {}
+        bp: Dict[Tuple[int, int], Optional[Tuple[int, int]]] = {}
+        for lo in layouts:
+            if not layout_allows(stages[t], lo, grid):
+                ncost[lo], nm[lo], bp[lo] = INF, 0, None
+                continue
+            best, bm, arg, best_key = INF, 0, None, None
+            for lo0 in layouts:
+                c0 = cost[lo0]
+                if c0 == INF:
+                    continue
+                c = c0 + _pair_cost(lo0, lo, nb, grid, topology)
+                m = nmulti[lo0] + multi(lo0, lo)
+                key = (c, m, _pair_changed_axes(lo0, lo), lo0)
+                if best_key is None or key < best_key:
+                    best, bm, arg, best_key = c, m, lo0, key
+            ncost[lo], nm[lo], bp[lo] = best, bm, arg
+        back.append(bp)
+        cost, nmulti = ncost, nm
+
+    if fin is not None:
+        fb = final_bytes if final_bytes is not None else _boundary_bytes(
+            stages, len(stages) - 1)
+
+        def total(lo):
+            return (cost[lo] + _pair_cost(lo, fin, fb, grid, topology),
+                    nmulti[lo] + multi(lo, fin))
+    else:
+        def total(lo):
+            return (cost[lo], nmulti[lo])
+
+    feas = [lo for lo in layouts if cost[lo] < INF]
+    end = min(feas, key=lambda lo: (*total(lo), lo != fin, lo))
+    plan = [end]
+    for bp in reversed(back):
+        plan.append(bp[plan[-1]])
+    plan.reverse()
+    return plan
+
+
+def _plan2d_cost(stages: Sequence[Stage], plan, *, grid: Tuple[int, int],
+                 initial, final, final_bytes: Optional[float],
+                 topology) -> float:
+    total = 0.0
+    prev = _as_pair(initial)
+    for t, lo in enumerate(plan):
+        lo = _as_pair(lo)
+        if prev is not None:
+            total += _pair_cost(prev, lo, _boundary_bytes(stages, t),
+                                grid, topology)
+        prev = lo
+    fin = _as_pair(final)
+    if fin is not None and plan:
+        fb = final_bytes if final_bytes is not None else _boundary_bytes(
+            stages, len(stages) - 1)
+        total += _pair_cost(prev, fin, fb, grid, topology)
+    return total
+
+
+def plan2d_cost_bytes(stages: Sequence[Stage], plan, *,
+                      grid: Tuple[int, int], initial=None, final=None,
+                      final_bytes: Optional[float] = None) -> float:
+    """Total per-device bytes of a 2D plan under the per-axis Table-2 cost
+    model (the 2D analogue of ``plan_cost_bytes``)."""
+    return _plan2d_cost(stages, plan, grid=grid, initial=initial,
+                        final=final, final_bytes=final_bytes, topology=None)
+
+
+def plan2d_cost_seconds(stages: Sequence[Stage], plan, topology, *,
+                        initial=None, final=None,
+                        final_bytes: Optional[float] = None) -> float:
+    """Total seconds of a 2D plan on a >=2-axis ``Topology`` (axes map
+    positionally onto the grid; per-axis sub-mesh collectives)."""
+    grid = (topology.axes[0].size,
+            topology.axes[1].size if len(topology.axes) > 1 else 1)
+    return _plan2d_cost(stages, plan, grid=grid, initial=initial,
+                        final=final, final_bytes=final_bytes,
+                        topology=topology)
+
+
+def brute_force_plan2d(stages: Sequence[Stage], seq_dims: Sequence[int],
+                       *, grid: Tuple[int, int], initial=None, final=None,
+                       final_bytes: Optional[float] = None,
+                       topology=None) -> float:
+    """Exponential exact minimum 2D plan cost (test oracle only)."""
+    layouts = _candidate_layouts(seq_dims)
+    best = None
+    for assign in itertools.product(layouts, repeat=len(stages)):
+        if any(not layout_allows(st, lo, grid)
+               for st, lo in zip(stages, assign)):
+            continue
+        c = _plan2d_cost(stages, assign, grid=grid, initial=initial,
+                         final=final, final_bytes=final_bytes,
+                         topology=topology)
+        if best is None or c < best:
+            best = c
+    if best is None:
+        raise ValueError("infeasible stage sequence")
+    return best
 
 
 # Canonical stage sequences ---------------------------------------------------

@@ -59,9 +59,12 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.plan import (JointCost, JointPlan, Stage, StrategyPlan,
                              joint_cost_bytes, joint_cost_seconds, make_plan,
-                             plan_cost_bytes, plan_cost_seconds, plan_joint,
-                             plan_strategy_dp, strategy_plan_cost,
-                             switch_count, transition_kind)
+                             pair_transition_kinds, plan_cost_bytes,
+                             plan_cost_seconds, plan_joint, plan_strategy_dp,
+                             plan_switches_2d, plan2d_cost_bytes,
+                             plan2d_cost_seconds, strategy_plan_cost,
+                             switch_count, transition_kind,
+                             _as_pair, _pair_joint)
 
 # HLO collective emitted per transition kind (None = communication-free).
 COLLECTIVE_OF = {"switch": "all-to-all", "gather": "all-gather",
@@ -845,7 +848,7 @@ class ScheduleExecutor:
         ``n_periods`` for a periodic schedule (the exit "keep" adds
         nothing), entry + every absolute boundary + exit for an unrolled
         one (``n_periods`` is ignored there)."""
-        if self.backend == "null":
+        if self.psched is None:
             return {}
         counts: Dict[str, int] = {}
 
@@ -888,7 +891,7 @@ class ScheduleExecutor:
         tests/test_hlo_collectives.py and tests/test_scan_joint.py compare
         THIS count against the compiled train-step HLO, leg by leg.
         """
-        if self.backend == "null":
+        if self.psched is None:
             return {}
         counts: Dict[str, int] = {}
 
@@ -916,9 +919,415 @@ class ScheduleExecutor:
         return counts
 
 
+# ---------------------------------------------------------------------------
+# 2D layouts (TSP fold): schedules over dim pairs on an ("sp_out","sp_in")
+# grid — the execution layer of ``core.plan.plan_switches_2d``
+# ---------------------------------------------------------------------------
+
+Pair = Tuple[Optional[int], Optional[int]]
+
+
+@dataclasses.dataclass(frozen=True)
+class PairTransition:
+    """One stage-boundary 2D layout change.
+
+    Decomposes PER AXIS: component ``k`` classifies with the 1D Table-2
+    kinds, and a changed axis owes one SUB-MESH collective over just that
+    grid axis — unchanged axes owe nothing.  Diagonal-to-diagonal changes
+    (``(d,d) -> (e,e)``, the embedded 1D plans) are JOINT: the executor
+    runs them as ONE full-group primitive, exactly the 1D transition."""
+
+    src: Pair
+    tgt: Pair
+
+    @property
+    def joint(self) -> bool:
+        return _pair_joint(self.src, self.tgt)
+
+    @property
+    def axis_kinds(self) -> Tuple[str, str]:
+        return pair_transition_kinds(self.src, self.tgt)
+
+    @property
+    def kind(self) -> str:
+        """Coarse kind for display: the joint kind when joint, else
+        "keep" if no axis moves data, else "switch"/"gather" if any axis
+        does (switch wins — mixed boundaries are dominated by the a2a)."""
+        kinds = self.axis_kinds
+        if self.joint:
+            return kinds[0]
+        if "switch" in kinds:
+            return "switch"
+        if "gather" in kinds:
+            return "gather"
+        return "keep"
+
+    def collective_counts(self) -> Dict[str, int]:
+        """HLO collectives this boundary must compile to: ONE full-group
+        primitive for joint changes, one sub-axis collective per changed
+        axis otherwise — and NOTHING on unchanged axes (the compiled
+        contract pinned by the (2,4) md_scenario)."""
+        counts: Dict[str, int] = {}
+        kinds = (self.axis_kinds[:1] if self.joint else self.axis_kinds)
+        for kind in kinds:
+            c = COLLECTIVE_OF[kind]
+            if c is not None:
+                counts[c] = counts.get(c, 0) + 1
+        return counts
+
+
+def classify2(src, tgt) -> PairTransition:
+    """Wrap a 2D layout change as a ``PairTransition`` (ints lift to the
+    diagonal, None to fully unsharded)."""
+    return PairTransition(_as_pair(src) or (None, None),
+                          _as_pair(tgt) or (None, None))
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule2D:
+    """A solved 2D plan: one dim-pair layout per stage plus entry/exit
+    layouts, on a ``grid = (n_out, n_in)`` SP mesh.  ``topology`` (axes
+    mapped positionally onto the grid) travels with the plan for seconds
+    pricing, exactly like the 1D ``Schedule``.  Forward-only: 2D training
+    legs are future work (docs/architecture.md §9)."""
+
+    stages: Tuple[Stage, ...]
+    layouts: Tuple[Pair, ...]
+    grid: Tuple[int, int]
+    initial: Optional[Pair] = None
+    final: Optional[Pair] = None
+    topology: Optional[object] = None
+
+    def __post_init__(self):
+        assert len(self.stages) == len(self.layouts), (
+            len(self.stages), len(self.layouts))
+        object.__setattr__(self, "layouts",
+                           tuple(_as_pair(lo) for lo in self.layouts))
+        object.__setattr__(self, "initial", _as_pair(self.initial))
+        object.__setattr__(self, "final", _as_pair(self.final))
+
+    @property
+    def size(self) -> int:
+        return self.grid[0] * self.grid[1]
+
+    # -- boundary transitions ------------------------------------------------
+    def boundary(self, t: int) -> PairTransition:
+        """Transition INTO stage ``t`` (t == 0: from the initial layout)."""
+        src = self.initial if t == 0 else self.layouts[t - 1]
+        return classify2(src, self.layouts[t])
+
+    def exit(self) -> PairTransition:
+        src = self.layouts[-1] if self.layouts else self.initial
+        return classify2(src, self.final if self.final is not None else src)
+
+    def transitions(self) -> List[PairTransition]:
+        out = [self.boundary(t) for t in range(len(self.layouts))]
+        if self.final is not None:
+            out.append(self.exit())
+        return out
+
+    # -- accounting ----------------------------------------------------------
+    def expected_collectives(self) -> Dict[str, int]:
+        """HLO collective kind -> count of the unrolled plan (one sub-axis
+        collective per changed axis, one full-group primitive per joint
+        change, zero on unchanged axes)."""
+        counts: Dict[str, int] = {}
+        for tr in self.transitions():
+            for c, k in tr.collective_counts().items():
+                counts[c] = counts.get(c, 0) + k
+        return counts
+
+    def per_device_bytes(self) -> float:
+        """Planned per-device collective bytes (per-axis Table-2 model —
+        ``core.plan.plan2d_cost_bytes``)."""
+        return plan2d_cost_bytes(self.stages, self.layouts, grid=self.grid,
+                                 initial=self.initial, final=self.final)
+
+    def per_device_seconds(self, topology=None) -> float:
+        """Planned collective seconds on ``topology`` (defaults to the one
+        the plan was solved against; axes map positionally onto the
+        grid)."""
+        topo = topology if topology is not None else self.topology
+        if topo is None:
+            raise ValueError("per_device_seconds needs a Topology (none was "
+                             "attached at plan time)")
+        return plan2d_cost_seconds(self.stages, self.layouts, topo,
+                                   initial=self.initial, final=self.final)
+
+    # -- periodic (scan) form ------------------------------------------------
+    def periodic(self, period: int) -> "PeriodicSchedule2D":
+        """Validate the plan repeats with ``period`` stages and return the
+        scan-body view (same steady-state requirement as the 1D
+        ``Schedule.periodic``)."""
+        if len(self.layouts) % period:
+            raise ValueError(f"{len(self.layouts)} stages not a multiple "
+                             f"of period {period}")
+        for t, lo in enumerate(self.layouts):
+            if lo != self.layouts[t % period]:
+                raise ValueError(
+                    f"2D plan is not periodic with period {period}: stage "
+                    f"{t} holds {lo} but stage {t % period} holds "
+                    f"{self.layouts[t % period]}")
+        return PeriodicSchedule2D(self, period)
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodicSchedule2D:
+    """Scan-body view of a periodic 2D schedule: entry transition before
+    the scan, per-period boundaries inside the body, wrap-around at the
+    body's end, exit transition after the scan."""
+
+    schedule: Schedule2D
+    period: int
+
+    @property
+    def layouts(self) -> Tuple[Pair, ...]:
+        return self.schedule.layouts[:self.period]
+
+    def enter(self) -> PairTransition:
+        return classify2(self.schedule.initial, self.layouts[0])
+
+    def boundary(self, i: int) -> PairTransition:
+        """Transition into in-period stage ``i`` (1 <= i < period)."""
+        assert 1 <= i < self.period, i
+        return classify2(self.layouts[i - 1], self.layouts[i])
+
+    def wrap(self) -> PairTransition:
+        """End-of-body transition back to the period's first layout."""
+        return classify2(self.layouts[-1], self.layouts[0])
+
+    def exit(self) -> PairTransition:
+        final = self.schedule.final
+        return classify2(self.layouts[0], final if final is not None
+                         else self.layouts[0])
+
+
+def plan2d_schedule(stages: Sequence[Stage], seq_dims: Sequence[int], *,
+                    grid: Tuple[int, int], initial=None, final=None,
+                    topology=None) -> Schedule2D:
+    """Solve the 2D switching plan (``core.plan.plan_switches_2d`` — exact
+    DP over (stage, dim pair), delegating to the 1D DP on degenerate grids)
+    and wrap it as a ``Schedule2D`` carrying the grid and topology."""
+    layouts = plan_switches_2d(stages, seq_dims, grid=grid, initial=initial,
+                               final=final, topology=topology)
+    return Schedule2D(tuple(stages), tuple(layouts), grid=tuple(grid),
+                      initial=initial, final=final, topology=topology)
+
+
+class ScheduleExecutor2D:
+    """Applies a 2D schedule's transitions to activations (auto backend:
+    per-axis ``NamedSharding`` constraints on a 2-axis SP mesh; XLA SPMD
+    lowers each single-axis layout change to ONE sub-axis all-to-all and
+    emits nothing on unchanged axes — the compiled contract of the (2,4)
+    md_scenario).  ``backend="null"`` is the identity, so model code stays
+    branch-free.  Forward-only (no planned backward): the 2D training leg
+    is future work."""
+
+    def __init__(self, psched: Optional[PeriodicSchedule2D], *,
+                 backend: str, mesh=None,
+                 sp_axes: Tuple[str, str] = ("sp_out", "sp_in"),
+                 dp_axes: Tuple[str, ...] = (), batch_dim: int = 0):
+        if backend not in ("auto", "null"):
+            raise ValueError(backend)
+        if backend == "auto" and mesh is None:
+            raise ValueError("auto backend needs a mesh")
+        if backend != "null" and psched is None:
+            raise ValueError(f"{backend} backend needs a schedule")
+        self.psched = psched
+        self.backend = backend
+        self.mesh = mesh
+        self.sp_axes = tuple(sp_axes)
+        self.dp_axes = tuple(dp_axes)
+        self.batch_dim = batch_dim
+        # per-stage diagonal component order (major axis first) — see
+        # _stage_order; fixed per stage so boundaries and anchors agree
+        self._orders = (tuple(self._stage_order(i)
+                              for i in range(psched.period))
+                        if psched is not None else ())
+
+    @classmethod
+    def null(cls) -> "ScheduleExecutor2D":
+        return cls(None, backend="null")
+
+    def _stage_order(self, i: int) -> Tuple[int, int]:
+        """Component order for stage ``i``'s DIAGONAL layout: which grid
+        axis is MAJOR in the joint (axis, axis) sharding of the dim.
+
+        For a single-axis transition into a diagonal the UNCHANGED axis —
+        the one already sharding the dim — must stay major: the target
+        shard of every device is then contained in its source shard along
+        the kept axis, so the reshard moves data only within sub-groups of
+        the CHANGED axis (one sub-axis all-to-all; any other order forces
+        cross-group traffic on the axis that nominally "kept" its layout).
+        Derived from the in-period predecessor (the steady-state wrap view),
+        defaulting to grid order (outer major) — which is also the joint
+        diagonal-to-diagonal convention the embedded 1D plans use."""
+        lo = self.psched.layouts[i]
+        if lo is None or lo[0] is None or lo[0] != lo[1]:
+            return (0, 1)
+        prev = self.psched.layouts[i - 1] if i > 0 else self.psched.layouts[-1]
+        prev = prev or (None, None)
+        keep = [k for k in (0, 1) if prev[k] == lo[k]]
+        if len(keep) == 1:
+            return (keep[0], 1 - keep[0])
+        return (0, 1)
+
+    # -- constraint emission --------------------------------------------------
+    def _sharding(self, layout: Pair, ndim: int, *,
+                  order: Tuple[int, int] = (0, 1), dims=None, batch_dim=None):
+        """NamedSharding for a 2D layout on an ``ndim`` tensor.  ``dims``
+        maps stage-view dims to tensor dims (identity by default) — the
+        model passes it for stacked/folded tensors whose axes are permuted
+        or merged relative to the logical stage view; a component landing
+        on an already-sharded dim (e.g. a sequence dim folded into the dp
+        batch) appends as the MINOR factor.  ``order`` sequences the pair's
+        components major-first (see ``_stage_order``)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        entries: list = [None] * ndim
+        bd = self.batch_dim if batch_dim is None else batch_dim
+        if self.dp_axes and bd is not None:
+            entries[bd] = self.dp_axes
+        pair = layout or (None, None)
+        for k in order:
+            d = pair[k]
+            if d is None:
+                continue
+            axis = self.sp_axes[k]
+            td = dims[d] if dims is not None else d
+            cur = entries[td]
+            if cur is None:
+                entries[td] = axis
+            elif isinstance(cur, tuple):
+                if axis not in cur:
+                    entries[td] = cur + (axis,)
+            elif cur != axis:
+                entries[td] = (cur, axis)
+        return NamedSharding(self.mesh, P(*entries))
+
+    def constrain(self, x, layout: Pair, *, order: Tuple[int, int] = (0, 1),
+                  dims=None, batch_dim=None):
+        """Constrain ``x`` to a 2D layout (component k of the pair shards
+        tensor dim ``layout[k]`` over ``sp_axes[k]``; the diagonal shards
+        one dim jointly in ``order``)."""
+        if self.backend == "null":
+            return x
+        import jax
+        return jax.lax.with_sharding_constraint(
+            x, self._sharding(_as_pair(layout), x.ndim, order=order,
+                              dims=dims, batch_dim=batch_dim))
+
+    def apply(self, x, tr: PairTransition, **kw):
+        if self.backend == "null":
+            return x
+        return self.constrain(x, tr.tgt, **kw)
+
+    # -- schedule-view conveniences -------------------------------------------
+    def enter(self, x, **kw):
+        if self.backend == "null":
+            return x
+        return self.apply(x, self.psched.enter(), order=self._orders[0], **kw)
+
+    def boundary(self, x, i: int, **kw):
+        if self.backend == "null":
+            return x
+        return self.apply(x, self.psched.boundary(i), order=self._orders[i],
+                          **kw)
+
+    def wrap(self, x, **kw):
+        if self.backend == "null":
+            return x
+        return self.apply(x, self.psched.wrap(), order=self._orders[0], **kw)
+
+    def exit(self, x, **kw):
+        if self.backend == "null":
+            return x
+        return self.apply(x, self.psched.exit(), **kw)
+
+    def anchor(self, x, i: int, **kw):
+        """Re-assert in-period stage ``i``'s layout on an intra-stage
+        tensor (XLA's backward propagation otherwise flips layouts
+        mid-stage)."""
+        if self.backend == "null":
+            return x
+        return self.constrain(x, self.psched.layouts[i],
+                              order=self._orders[i], **kw)
+
+    def fold_anchor(self, x, i: int, *, dims, merge_dim: int = 0):
+        """Anchor a stage-folded view whose dim ``merge_dim`` absorbed a
+        sharded sequence dim as its MAJOR factor (batch minor — the only
+        merge order GSPMD can represent for a sharded factor; the dp axes
+        append as the minor entries).  ``dims`` maps stage-view dims to the
+        folded tensor's dims as in ``constrain``."""
+        if self.backend == "null":
+            return x
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ns = self._sharding(self.psched.layouts[i], x.ndim,
+                            order=self._orders[i], dims=dims, batch_dim=None)
+        entries = list(ns.spec) + [None] * (x.ndim - len(ns.spec))
+        if self.dp_axes:
+            cur = entries[merge_dim]
+            cur = (cur if isinstance(cur, tuple)
+                   else () if cur is None else (cur,))
+            entries[merge_dim] = cur + tuple(self.dp_axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*entries)))
+
+    # -- accounting ----------------------------------------------------------
+    def expected_collectives(self, n_periods: int = 1) -> Dict[str, int]:
+        """Collective counts of the full forward execution: entry + body x
+        ``n_periods`` + exit, each boundary contributing one sub-axis
+        collective per changed axis (one full-group primitive when
+        joint)."""
+        if self.psched is None:
+            return {}
+        counts: Dict[str, int] = {}
+
+        def add(tr: PairTransition):
+            for c, k in tr.collective_counts().items():
+                counts[c] = counts.get(c, 0) + k
+
+        add(self.psched.enter())
+        for _ in range(n_periods):
+            for i in range(1, self.psched.period):
+                add(self.psched.boundary(i))
+            add(self.psched.wrap())
+        add(self.psched.exit())
+        return counts
+
+    def expected_carry_collectives(self, n_periods: int = 1) -> Dict[str, int]:
+        """Collective counts when the scan CARRY holds the LAST in-period
+        stage's layout and the transition into stage 0 executes inside the
+        body (``models.transformer2d.forward2d``: the attention-core
+        layouts live strictly inside the block, so the first in-period
+        boundary lands on the stacked qkv as the wrap): entry
+        initial -> layouts[-1], then per period wrap + boundaries 1..p-1,
+        then exit layouts[-1] -> final."""
+        if self.psched is None:
+            return {}
+        counts: Dict[str, int] = {}
+
+        def add(tr: PairTransition):
+            for c, k in tr.collective_counts().items():
+                counts[c] = counts.get(c, 0) + k
+
+        sched = self.psched.schedule
+        add(classify2(sched.initial, self.psched.layouts[-1]))
+        for _ in range(n_periods):
+            add(self.psched.wrap())
+            for i in range(1, self.psched.period):
+                add(self.psched.boundary(i))
+        final = sched.final
+        if final is not None:
+            add(classify2(self.psched.layouts[-1], final))
+        return counts
+
+
 __all__ = [
     "Transition", "classify", "Schedule", "PeriodicSchedule",
     "UnrolledSchedule", "plan_schedule", "plan_joint_schedule",
     "plan_strategy_schedule", "ScheduleExecutor", "planned_constraint",
     "COLLECTIVE_OF",
+    "PairTransition", "classify2", "Schedule2D", "PeriodicSchedule2D",
+    "plan2d_schedule", "ScheduleExecutor2D",
 ]

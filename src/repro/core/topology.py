@@ -296,6 +296,34 @@ class Topology:
         bottleneck link (the roofline collective term)."""
         return nbytes / self.bottleneck_bandwidth
 
+    # -- per-axis (sub-mesh) pricing: 2D layouts ----------------------------
+
+    def axis_link(self, index: int) -> Link:
+        """The mesh axis at POSITION ``index`` (outermost first).  2D
+        layouts map their grid axes positionally onto the topology — index
+        0 is the ``sp_out`` (slow/outer) axis, index 1 ``sp_in`` — so
+        per-axis sub-mesh collectives are keyed by position, not name."""
+        if not 0 <= index < len(self.axes):
+            raise IndexError(
+                f"axis index {index} out of range for "
+                f"{tuple(a.name for a in self.axes)}")
+        return self.axes[index]
+
+    def axis_all_to_all_seconds(self, nbytes: float, index: int) -> float:
+        """Tiled all-to-all over ONE mesh axis (a sub-mesh collective: the
+        other axes' coordinates are fixed, so the groups are the axis'
+        fibers).  ``nbytes`` is the bytes VISIBLE to one fiber — the global
+        tensor divided by the shard factor of the other axes; callers that
+        switch one component of a 2D layout pass M / s_other, so the
+        per-device volume folds to exactly M/N (the Table-2 convention,
+        same as the full-group switch)."""
+        return self.all_to_all_seconds(nbytes, (self.axis_link(index),))
+
+    def axis_all_gather_seconds(self, nbytes: float, index: int) -> float:
+        """Ring all-gather over ONE mesh axis (fiber sub-groups; see
+        ``axis_all_to_all_seconds`` for the ``nbytes`` convention)."""
+        return self.all_gather_seconds(nbytes, (self.axis_link(index),))
+
     # -- paper Table-2 transitions -------------------------------------------
 
     def switch_seconds(self, nbytes: float, src: int, tgt: int) -> float:
@@ -472,23 +500,39 @@ class Topology:
 
     def resized(self, n: int) -> "Topology":
         """Best-effort model of the same fabric at SP degree ``n`` (elastic
-        serving resize).  Outer axes keep their sizes while the innermost
-        axis absorbs the change when divisible — axis names and per-dim
-        placements survive, so ICI-local pinnings keep steering the re-plan.
-        Otherwise the group collapses to one flat axis at the bottleneck
-        bandwidth (placements become meaningless there: a single axis IS the
-        full group, which is every dim's default)."""
+        serving resize).  One axis absorbs the change while the others keep
+        their sizes — axis names and per-dim placements survive, so
+        ICI-local pinnings keep steering the re-plan.  The innermost axis is
+        tried first (shrinking within a host models dropping chips), but
+        never down to size 1 when an OUTER axis can shrink instead: a 4x2
+        DCN x ICI fabric resized to 4 is exactly two 2-chip hosts (2x2),
+        not four isolated chips whose every link is DCN.  Only when no
+        single-axis resize divides does the group collapse to one flat axis
+        at the bottleneck bandwidth (placements become meaningless there: a
+        single axis IS the full group, which is every dim's default)."""
         if n == self.size:
             return self
         if n < 1:
             raise ValueError(f"resized({n})")
-        outer = 1
-        for a in self.axes[:-1]:
-            outer *= a.size
-        if len(self.axes) > 1 and n % outer == 0 and n // outer >= 1:
-            inner = dataclasses.replace(self.axes[-1], size=n // outer)
-            return Topology(self.axes[:-1] + (inner,),
-                            placement=self.placement)
+        # candidate order: innermost axis first; a resize that would
+        # degenerate a >1-sized axis to 1 is deferred to the second pass so
+        # an exact multi-axis model wins over an effectively-flat one
+        order = range(len(self.axes) - 1, -1, -1)
+        for allow_degenerate in (False, True):
+            for i in order:
+                others = 1
+                for j, a in enumerate(self.axes):
+                    if j != i:
+                        others *= a.size
+                if n % others != 0:
+                    continue
+                q = n // others
+                if q == 1 and self.axes[i].size > 1 and not allow_degenerate:
+                    continue
+                resized_axis = dataclasses.replace(self.axes[i], size=q)
+                axes = (self.axes[:i] + (resized_axis,)
+                        + self.axes[i + 1:])
+                return Topology(axes, placement=self.placement)
         slowest = min(self.axes, key=lambda a: a.bandwidth)
         return Topology((dataclasses.replace(slowest, size=n),))
 

@@ -88,9 +88,18 @@ def production_topology(*, multi_pod: bool = False) -> Topology:
     return Topology.flat_ici(16)
 
 
-def mesh_topology(mesh, kind: str = "ici", *, sp_axis: str = "model",
+def mesh_topology(mesh, kind: str = "ici", *,
+                  sp_axis: Optional[str] = None,
                   n_hosts: Optional[int] = None) -> Topology:
     """Build the Topology describing ``mesh``'s SP axis.
+
+    ``sp_axis=None`` (the default) auto-detects: the production "model"
+    axis when the mesh has one, else the 2D SP process grid
+    ("sp_out", "sp_in") of ``make_sp2d_mesh`` — for which the fabric IS the
+    grid factorization (outer hosts of inner chips, ``sp2d_topology``), so
+    ``kind`` is ignored.  Before this detection a 2D mesh silently priced
+    as a size-1 topology (a do-nothing plan).  An explicitly-passed
+    ``sp_axis`` missing from the mesh raises instead of mispricing.
 
     ``kind``:
       "ici"      — every SP link is ICI (single host / pod slice).
@@ -100,8 +109,23 @@ def mesh_topology(mesh, kind: str = "ici", *, sp_axis: str = "model",
       "uniform"  — the byte model (bandwidth 1, latency 0); plans solved on
                    it match the pre-topology byte-uniform plans exactly.
     """
-    sp = mesh.shape.get(sp_axis, 1) if mesh is not None else 1
-    return topology_preset(kind, sp, n_hosts=n_hosts)
+    if mesh is None:
+        return topology_preset(kind, 1, n_hosts=n_hosts)
+    if sp_axis is None:
+        if "model" in mesh.shape:
+            sp_axis = "model"
+        elif ("sp_out" in mesh.shape) and ("sp_in" in mesh.shape):
+            return sp2d_topology(mesh.shape["sp_out"], mesh.shape["sp_in"])
+        else:
+            # no recognizable SP axis: a legitimately SP-free (pure-DP)
+            # mesh prices as size 1
+            return topology_preset(kind, 1, n_hosts=n_hosts)
+    elif sp_axis not in mesh.shape:
+        raise ValueError(
+            f"mesh has no axis {sp_axis!r} (axes: "
+            f"{tuple(mesh.shape)}); refusing to price a size-1 topology "
+            f"for an explicitly-named SP axis")
+    return topology_preset(kind, mesh.shape[sp_axis], n_hosts=n_hosts)
 
 
 def topology_preset(kind: str, sp: int, *,

@@ -103,14 +103,14 @@ def ssm_block(p, x, cfg: SSMConfig, *, backend: str = "pallas",
     xbc = _causal_conv(cfg, p, xbc_raw)
     xs_flat = xbc[..., :di]
     # planned DSP switch: seq-shard -> channel-shard (one all-to-all)
-    xs_flat = sharder.channels3(xs_flat)
+    xs_flat = sharder.mixer3(xs_flat)
     xs = xs_flat.reshape(b, l, h, ph)
     bmat = xbc[..., di:di + g * s].reshape(b, l, g, s)
     cmat = xbc[..., di + g * s:].reshape(b, l, g, s)
     bmat = sharder.replicated(bmat)                   # replicated groups
     cmat = sharder.replicated(cmat)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
-    dt = sharder.channels3(dt)
+    dt = sharder.mixer3(dt)
     a = -jnp.exp(p["a_log"])
 
     cache = None
@@ -124,7 +124,7 @@ def ssm_block(p, x, cfg: SSMConfig, *, backend: str = "pallas",
                      chunk=cfg.chunk, backend=backend)
 
     y = y.reshape(b, l, di)
-    y = sharder.channels3(y)
+    y = sharder.mixer3(y)
     # planned DSP switch back: channel-shard -> seq-shard
     y = sharder.scan_out3(y)
     y = y * jax.nn.silu(z)

@@ -43,10 +43,12 @@ from repro.core import ring as ring_core
 from repro.core import ulysses as ulysses_core
 from repro.core import megatron_sp as megatron_core
 from repro.core.layout import from_mesh
-from repro.core.plan import Stage
-from repro.core.schedule import (PeriodicSchedule, ScheduleExecutor,
+from repro.core.plan import Stage, pair_placement_equal, plan_switches_2d
+from repro.core.schedule import (PeriodicSchedule, Schedule2D,
+                                 ScheduleExecutor, ScheduleExecutor2D,
                                  UnrolledSchedule, plan_joint_schedule,
-                                 plan_schedule, plan_strategy_schedule)
+                                 plan_schedule, plan_strategy_schedule,
+                                 plan2d_schedule)
 from repro.kernels.ops import flash_attention
 from repro.models import layers as L
 
@@ -233,6 +235,216 @@ def strategy_schedule(cfg: T2DConfig, n: int, *, t_len: Optional[int] = None,
 
 # in-period stage index by the block's compute axis (spatial computes S=2)
 _STAGE_OF_AXIS = {2: 0, 1: 1}
+
+
+# ---------------------------------------------------------------------------
+# 2D (TSP-fold) stage declaration + planned schedule — layouts are dim
+# PAIRS on an ("sp_out", "sp_in") mesh (launch.mesh.make_sp2d_mesh):
+# component k of a layout shards one tensor dim over grid axis k, so the
+# planner can put the sequence on one axis and the head/channel dim on the
+# other (seq x tensor, the Zyphra TSP fold) and each boundary pays one
+# sub-axis all-to-all per CHANGED axis only.
+# ---------------------------------------------------------------------------
+
+# stage-view (B, T, S, C) dim -> tensor dim of the execution tensors the
+# planned boundaries actually constrain (ScheduleExecutor2D ``dims`` maps):
+_QKV_DIMS = {1: 2, 2: 3, 3: 4}     # stacked qkv (3, B, T, S, H, dh) — the
+                                   # stage view's dim 3 (C) lands on the
+                                   # HEAD axis: extents declare its
+                                   # divisibility unit is n_heads
+_O_DIMS = {1: 1, 2: 2, 3: 3}       # attention out (B, T, S, H, dh)
+
+
+def stages2d(cfg: T2DConfig, *, t_len: Optional[int] = None,
+             s_len: Optional[int] = None, batch: Optional[int] = None):
+    """Declare the FOUR-stage-per-layer sequence the 2D planner consumes.
+
+    Unlike the 1D ``stages`` (which never considers sharding C), the
+    attention cores are split out from the projection/norm/MLP regions:
+    a core is head-independent, so the flat channel dim (3) is a legal
+    shard BY HEAD for it — ``Stage.extents`` declares dim 3's divisibility
+    unit is ``n_heads``, not ``d_model``.  The surrounding regions compute
+    along C (projections, norms, MLP) and declare ``compute_dims={3}``, so
+    no feasible layout ever shards C there — which is exactly what forces
+    every collective onto a planned boundary (zero collectives inside
+    stages, the compiled contract of the (2,4) md_scenario)."""
+    shape = None
+    ext = None
+    if None not in (t_len, s_len, batch):
+        shape = (batch, t_len, s_len, cfg.d_model)
+        ext = (batch, t_len, s_len, cfg.n_heads)
+    db = jnp.dtype(cfg.dtype).itemsize
+    out = []
+    for i in range(cfg.n_layers // 2):
+        out.append(Stage(frozenset({2}), f"layer{i}.sp_attn", shape, db,
+                         extents=ext))
+        out.append(Stage(frozenset({3}), f"layer{i}.sp_mlp", shape, db,
+                         extents=ext))
+        out.append(Stage(frozenset({1}), f"layer{i}.t_attn", shape, db,
+                         extents=ext))
+        out.append(Stage(frozenset({3}), f"layer{i}.t_mlp", shape, db,
+                         extents=ext))
+    return out
+
+
+def dsp2d_schedule(cfg: T2DConfig, grid, *, t_len: Optional[int] = None,
+                   s_len: Optional[int] = None, batch: Optional[int] = None,
+                   initial=(1, 2), topology=None):
+    """Solve the 2D switching plan (enter/exit with T on the outer axis and
+    S on the inner — the natural dataloader fold of ``make_sp2d_mesh``:
+    each sp_out slice holds a contiguous T block, sliced along S inside).
+    Returns the period-4 ``PeriodicSchedule2D`` scan-body view.  On a
+    degenerate ``(n, 1)``/``(1, n)`` grid the planner delegates to the 1D
+    DP, so this collapses to today's plans bit-for-bit."""
+    st = stages2d(cfg, t_len=t_len, s_len=s_len, batch=batch)
+    # Solve ONE period with entry = exit = the carried layout: because every
+    # stage holds the same activation shape, the exit transition prices
+    # exactly the wrap back into the next period, so this IS the steady
+    # state — and tiling keeps the plan periodic even when the unrolled
+    # DP's tie-breaks would drift (equal-cost plans need not repeat).
+    body = plan_switches_2d(st[:4], [1, 2, 3], grid=tuple(grid),
+                            initial=initial, final=initial,
+                            topology=topology)
+    sched = Schedule2D(tuple(st), tuple(body) * (len(st) // 4),
+                       grid=tuple(grid), initial=initial, final=initial,
+                       topology=topology)
+    return sched.periodic(4)
+
+
+def forward2d(params, x, t, cfg: T2DConfig, *, mesh: Mesh,
+              backend: str = "ref", remat: bool = True, topology=None,
+              schedule=None):
+    """2D-layout compiler-path forward on an ("sp_out", "sp_in") mesh.
+
+    x: (B, T, S, C_in) global.  The planned ``Schedule2D`` drives every
+    boundary through ``ScheduleExecutor2D``; XLA lowers each single-axis
+    layout change to ONE all-to-all over just that grid axis, and unchanged
+    axes compile to nothing.  The residual stream is carried at the
+    mlp-stage layout (steady state, e.g. T over sp_out x S over sp_in); the
+    attention-core layouts live strictly INSIDE the block — the planned
+    switch into a core lands on the stacked (3, B, T, S, H, dh) q/k/v
+    tensor (one fused constraint -> one a2a, the 1D ``heads_stacked``
+    idiom), so MHA is required; the switch out lands on the attention
+    output before ``wo``.  Bit-identical to the 1D ``forward`` reference on
+    any grid (layout changes never change the math)."""
+    if cfg.kvh != cfg.n_heads:
+        raise ValueError("forward2d stacks q/k/v for the fused planned "
+                         "switch and needs MHA (n_kv_heads == n_heads)")
+    missing = [a for a in ("sp_out", "sp_in") if a not in mesh.axis_names]
+    if missing:
+        raise ValueError(
+            f"forward2d needs the 2D SP mesh of launch.mesh.make_sp2d_mesh "
+            f"(axes ('sp_out', 'sp_in')); missing {missing}")
+    grid = (mesh.shape["sp_out"], mesh.shape["sp_in"])
+    dp_axes = tuple(a for a in mesh.axis_names
+                    if a not in ("sp_out", "sp_in"))
+    psched = schedule if schedule is not None else dsp2d_schedule(
+        cfg, grid, t_len=x.shape[1], s_len=x.shape[2], batch=x.shape[0],
+        topology=topology)
+    ex = ScheduleExecutor2D(psched, backend="auto", mesh=mesh,
+                            dp_axes=dp_axes)
+    initial = psched.schedule.initial
+    final = (psched.schedule.final if psched.schedule.final is not None
+             else psched.layouts[-1])
+    if not pair_placement_equal(psched.layouts[-1], initial, grid):
+        raise ValueError(
+            f"forward2d carries the residual at the last in-period layout "
+            f"and enters at the schedule's initial; the plan ends its "
+            f"period at {psched.layouts[-1]} but enters at {initial} — "
+            f"pass initial equal to the steady-state mlp layout")
+
+    x = L.patch_embed(params["embed"], x)
+    x = add_pos_embed(x, cfg, 0, 0)
+    x = ex.constrain(x, initial)        # dataloader layout (a keep)
+    t_emb = None
+    if cfg.modulate and t is not None:
+        t_emb = L.linear(params["t_proj"],
+                         L.timestep_embedding(t, cfg.d_model).astype(x.dtype))
+
+    def half_block(p, xc, *, axis, enter_fn, exit_idx):
+        # one block at the carried mlp layout; ``enter_fn`` applies the
+        # planned switch into the attention core (on stacked qkv),
+        # ``exit_idx`` the in-period stage whose layout the core exits to
+        b, t_, s_, _ = xc.shape
+        hh, dh = cfg.n_heads, cfg.dh
+        mod = _mod6(p, t_emb, cfg)
+
+        def bmod(m):
+            return m[:, :, None, :].astype(xc.dtype)
+
+        h = L.rms_norm(p["ln1"], xc)
+        if mod is not None:
+            h = _modulate(h, bmod(mod[0]), bmod(mod[1]))
+        # ONE fused qkv projection: the planned switch constrains the
+        # stacked tensor, and with a single producing matmul GSPMD lands a
+        # single all-to-all on it — three separate linears under a stack
+        # would have the sharding pushed back through the stack onto each
+        # operand (three a2as, breaking the one-per-changed-axis contract)
+        wqkv = jnp.concatenate([p["wq"]["w"], p["wk"]["w"], p["wv"]["w"]],
+                               axis=1)
+        qkv = h @ wqkv
+        if "b" in p["wq"]:
+            qkv = qkv + jnp.concatenate([p["wq"]["b"], p["wk"]["b"],
+                                         p["wv"]["b"]])
+        qkv = qkv.reshape(b, t_, s_, 3, hh, dh).transpose(3, 0, 1, 2, 4, 5)
+        qkv = enter_fn(qkv)
+        q, k, v = qkv[0], qkv[1], qkv[2]
+        # fold the non-attended seq dim into the attention batch with the
+        # SHARDED factor MAJOR — the only merge order GSPMD can represent
+        # for a sharded factor (minor-factor merges force involuntary full
+        # rematerialization); fold_anchor pins the composite entry
+        attn_i = exit_idx - 1
+        if axis == 1:      # temporal: attend over T, batch (S, B, H)
+            fold_dims = {2: 0, 1: 1, 3: 2}
+
+            def fold(y):
+                y = y.transpose(2, 0, 1, 3, 4).reshape(s_ * b, t_, hh, dh)
+                return ex.fold_anchor(y, attn_i, dims=fold_dims)
+
+            def unfold(y):
+                return y.reshape(s_, b, t_, hh, dh).transpose(1, 2, 0, 3, 4)
+        else:              # spatial: attend over S, batch (T, B, H)
+            fold_dims = {1: 0, 2: 1, 3: 2}
+
+            def fold(y):
+                y = y.transpose(1, 0, 2, 3, 4).reshape(t_ * b, s_, hh, dh)
+                return ex.fold_anchor(y, attn_i, dims=fold_dims)
+
+            def unfold(y):
+                return y.reshape(t_, b, s_, hh, dh).transpose(1, 0, 2, 3, 4)
+        o = unfold(_default_attn(backend)(fold(q), fold(k), fold(v)))
+        o = ex.boundary(o, exit_idx, dims=_O_DIMS)   # planned switch back
+        o = L.linear(p["wo"], o.reshape(b, t_, s_, hh * dh))
+        if mod is not None:
+            o = o * bmod(mod[2])
+        xc = ex.anchor(xc + o, exit_idx)
+        h = L.rms_norm(p["ln2"], xc)
+        if mod is not None:
+            h = _modulate(h, bmod(mod[3]), bmod(mod[4]))
+        h = L.mlp(p["mlp"], h, cfg.mlp_kind)
+        if mod is not None:
+            h = h * bmod(mod[5])
+        return ex.anchor(xc + h, exit_idx)
+
+    def layer_body(xc, lp):
+        # the switch into stage 0 (sp_attn) is the period's wrap: the carry
+        # stays at the mlp layout across iterations and the first boundary
+        # executes inside the block, on the stacked qkv
+        xc = half_block(lp["spatial"], xc, axis=2, exit_idx=1,
+                        enter_fn=lambda y: ex.wrap(y, dims=_QKV_DIMS,
+                                                   batch_dim=1))
+        xc = half_block(lp["temporal"], xc, axis=1, exit_idx=3,
+                        enter_fn=lambda y: ex.boundary(y, 2, dims=_QKV_DIMS,
+                                                       batch_dim=1))
+        return xc, None
+
+    body = (jax.checkpoint(layer_body, prevent_cse=False) if remat
+            else layer_body)
+    from repro.models.flags import scan_or_unroll
+    x, _ = scan_or_unroll(body, x, params["layers"])
+    x = ex.constrain(x, final)          # planned exit (a keep)
+    x = L.rms_norm(params["final_norm"], x)
+    return L.linear(params["head"], x)
 
 
 # ---------------------------------------------------------------------------

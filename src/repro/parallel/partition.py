@@ -254,7 +254,14 @@ class Sharder:
     mesh: Optional[Mesh]
     plan: ParallelPlan
     dp: Tuple[str, ...] = ("data",)
-    sp: str = "model"
+    # SP mesh axes, outermost first: ("model",) on the 1D production mesh,
+    # ("sp_out", "sp_in") on a 2D sp2d mesh (launch.mesh.make_sp2d_mesh).
+    # The 1D hooks below shard their "__sp__" entry over the JOINT axis
+    # tuple — on a 2D mesh that is the diagonal layout (one tensor dim over
+    # both axes), which is exactly how 1D plans embed into the 2D layout
+    # space (core.plan.plan_switches_2d).  Per-axis (non-diagonal) layouts
+    # go through ``layout_spec``/``constrain_layout``.
+    sp_axes: Tuple[str, ...] = ("model",)
     schedule: Optional[Any] = None
     resid_dim: Optional[int] = None
     mixer_dim: Optional[int] = None
@@ -286,7 +293,24 @@ class Sharder:
 
     @property
     def sp_size(self) -> int:
-        return self.mesh.shape.get(self.sp, 1) if self.mesh is not None else 1
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.sp_axes:
+            n *= self.mesh.shape.get(a, 1)
+        return n
+
+    @property
+    def sp(self):
+        """The "__sp__" mesh entry: the single SP axis name on a 1D mesh,
+        the joint axis tuple on a 2D one (diagonal layout)."""
+        return (self.sp_axes if len(self.sp_axes) > 1 else self.sp_axes[0])
+
+    @property
+    def _dp_entry(self):
+        if not self.dp:
+            return None
+        return self.dp if len(self.dp) > 1 else self.dp[0]
 
     def wants_head_switch(self, n_heads: int) -> bool:
         """True when the planned mixer layout is head-sharded and the head
@@ -295,8 +319,7 @@ class Sharder:
         return self.mixer_dim == 2 and n_heads % max(self.sp_size, 1) == 0
 
     def _ns(self, spec) -> NamedSharding:
-        dims = [d if d != "__dp__" else
-                (self.dp if len(self.dp) > 1 else self.dp[0]) for d in spec]
+        dims = [d if d != "__dp__" else self._dp_entry for d in spec]
         dims = [d if d != "__sp__" else self.sp for d in dims]
         return NamedSharding(self.mesh, P(*dims))
 
@@ -317,6 +340,55 @@ class Sharder:
             return self._c(x, *fwd)
         from repro.core.schedule import planned_constraint
         return planned_constraint(x, self._ns(fwd), self._ns(bwd))
+
+    # -- planned-layout PSpecs: the GENERAL path the semantic hooks above
+    # specialize.  A layout is one tensor dim per SP mesh axis (an int is
+    # the diagonal: that dim over every axis jointly; None replicates).
+    # On the 1D mesh this reproduces the ``_e3``-style entries exactly; on
+    # a 2D mesh component k shards tensor dim layout[k] over sp_axes[k] —
+    # the two-axis (TSP-fold) layouts core.plan.plan_switches_2d plans and
+    # core.schedule.ScheduleExecutor2D executes --------------------------------
+    def layout_spec(self, layout, ndim: int, *, batch_dim: Optional[int] = 0):
+        entries: list = [None] * ndim
+        if batch_dim is not None:
+            entries[batch_dim] = self._dp_entry
+        if layout is not None:
+            pair = (layout if isinstance(layout, tuple)
+                    else (layout,) * len(self.sp_axes))
+            if len(pair) != len(self.sp_axes):
+                raise ValueError(
+                    f"layout {layout!r} has {len(pair)} components but the "
+                    f"sharder's SP grid has axes {self.sp_axes}")
+            for axis, d in zip(self.sp_axes, pair):
+                if d is None:
+                    continue
+                cur = entries[d]
+                if cur is None:
+                    entries[d] = axis
+                elif isinstance(cur, tuple):
+                    entries[d] = cur + (axis,)
+                else:
+                    entries[d] = (cur, axis)
+        return P(*entries)
+
+    def constrain_layout(self, x, layout, *, bwd="__unset__",
+                         batch_dim: Optional[int] = 0):
+        """Constrain ``x`` to a planned layout; with a planned backward
+        layout given (``bwd``; None means replicated, the default sentinel
+        means no planned backward) the boundary lowers through
+        ``core.schedule.planned_constraint`` exactly like ``_c2``."""
+        if self.mesh is None:
+            return x
+        fwd_ns = NamedSharding(
+            self.mesh, self.layout_spec(layout, x.ndim, batch_dim=batch_dim))
+        if isinstance(bwd, str) and bwd == "__unset__":
+            return jax.lax.with_sharding_constraint(x, fwd_ns)
+        bwd_ns = NamedSharding(
+            self.mesh, self.layout_spec(bwd, x.ndim, batch_dim=batch_dim))
+        if bwd_ns.spec == fwd_ns.spec:
+            return jax.lax.with_sharding_constraint(x, fwd_ns)
+        from repro.core.schedule import planned_constraint
+        return planned_constraint(x, fwd_ns, bwd_ns)
 
     @staticmethod
     def _e3(d):
@@ -453,22 +525,23 @@ class Sharder:
                    else ("__dp__", None, None, None))
         return self._c2(x, fwd, bwd)
 
-    # -- (B, L, D) flat ssm scan operands: planned mixer layout on the flat
-    # channel dim (the (H, P) reshape keeps an H-major representable shard).
-    # Applies in tp mode too: the scan is sequential along L, so L must be
-    # LOCAL — channel-sharding is the only parallel layout for it, and it is
-    # exactly the input layout the row-parallel out_proj wants -----------------
-    def channels3(self, x):
+    # -- (B, L, D) flat mixer-stage operands (the SSM scan's view): planned
+    # mixer layout on the flat channel dim (the (H, P) reshape keeps an
+    # H-major representable shard).  Applies in tp mode too: the scan is
+    # sequential along L, so L must be LOCAL — channel-sharding is the only
+    # parallel layout for it, and it is exactly the input layout the
+    # row-parallel out_proj wants.  Expressed through the general
+    # ``constrain_layout`` path (this hook replaced the old ``channels3``
+    # one-off when layouts became dim pairs) -----------------------------------
+    def mixer3(self, x):
         if self.plan.mode not in ("dsp", "tp"):
             return x
-        fwd = (("__dp__", None, "__sp__") if self.mixer_dim == 2
-               else ("__dp__", None, None))
-        bwd = None
+        fwd = 2 if self.mixer_dim == 2 else None
         if self.plan.mode == "dsp" and self._planned_bwd:
-            bwd = (("__dp__", None, "__sp__") if self.bwd_mixer_dim == 2
-                   else ("__dp__", "__sp__", None) if self.bwd_mixer_dim == 1
-                   else ("__dp__", None, None))
-        return self._c2(x, fwd, bwd)
+            bwd = (self.bwd_mixer_dim
+                   if self.bwd_mixer_dim in (1, 2) else None)
+            return self.constrain_layout(x, fwd, bwd=bwd)
+        return self.constrain_layout(x, fwd)
 
     # -- (B, L, D) scan output: planned switch back to the resid-stage layout
     # (dsp only — tp never moved the activation shard into the scan).  A
@@ -713,7 +786,17 @@ def make_sharder(mesh: Optional[Mesh], plan: ParallelPlan,
                  schedule=None, topology=None) -> Sharder:
     """``topology`` (core.topology.Topology) models the SP axis's links;
     when ``schedule`` already carries one it wins (the plan was solved on
-    it)."""
+    it).  A mesh carrying the 2D SP process grid ("sp_out", "sp_in") —
+    ``launch.mesh.make_sp2d_mesh`` — makes the sharder's "__sp__" the joint
+    axis pair (diagonal layouts) and enables the per-axis
+    ``layout_spec``/``constrain_layout`` path; 2D schedules
+    (``core.schedule.Schedule2D``) are executed by
+    ``core.schedule.ScheduleExecutor2D``, not the class-hook path here."""
+    if schedule is not None and hasattr(schedule, "layouts"):
+        raise TypeError(
+            "make_sharder received a 2D (layout-pair) schedule; the "
+            "class-hook Sharder executes one dim per stage class — drive "
+            "2D plans through core.schedule.ScheduleExecutor2D instead")
     resid, mixer = _stage_dims(plan, schedule)
     bwd = _stage_bwd_dims(schedule)
     strategy = _stage_strategy(schedule)
@@ -723,7 +806,13 @@ def make_sharder(mesh: Optional[Mesh], plan: ParallelPlan,
         return Sharder(mesh=None, plan=plan, schedule=schedule,
                        resid_dim=resid, mixer_dim=mixer, topology=topology,
                        mixer_strategy=strategy, **bwd)
-    dp = tuple(a for a in mesh.axis_names if a != "model")
-    return Sharder(mesh=mesh, plan=plan, dp=dp, sp="model",
+    if "model" in mesh.axis_names:
+        sp_axes: Tuple[str, ...] = ("model",)
+    elif ("sp_out" in mesh.axis_names) and ("sp_in" in mesh.axis_names):
+        sp_axes = ("sp_out", "sp_in")
+    else:
+        sp_axes = ("model",)          # size-1 SP: hooks shard nothing
+    dp = tuple(a for a in mesh.axis_names if a not in sp_axes)
+    return Sharder(mesh=mesh, plan=plan, dp=dp, sp_axes=sp_axes,
                    schedule=schedule, resid_dim=resid, mixer_dim=mixer,
                    topology=topology, mixer_strategy=strategy, **bwd)

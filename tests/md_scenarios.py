@@ -518,6 +518,105 @@ def scenario_paged_serving_sharded():
             i, r.generated, ref[i, :budgets[i]].tolist())
 
 
+def scenario_layout2d_t2d():
+    """First-class 2D layouts on the (2, 4) sp2d mesh.  Three contracts:
+
+    1. PARITY — ``forward2d`` executing the planned T x S dim-pair layouts
+       is BIT-identical to the jitted 1D reference (layout changes never
+       change the math), on the full (2, 4) grid and on a degenerate
+       (1, 8) grid (where the planner collapses to the 1D DP).
+    2. HLO — the compiled forward carries EXACTLY one sub-axis all-to-all
+       per changed axis per planned switch (``expected_carry_collectives``)
+       and NOTHING else: no all-gather, reduce-scatter or
+       collective-permute, zero collectives on unchanged axes.
+    3. MID-FLIGHT REPLAN — an elastic resize (8 -> 4) fired while a
+       chunked prefill is mid-prompt on the sharded paged tier keeps every
+       request's tokens bit-identical to the static oracle (the window the
+       paged_serving_sharded scenario never hits: its replan lands with
+       ``_prefilling`` drained)."""
+    import jax, jax.numpy as jnp
+    from repro.analysis.roofline import parse_collectives
+    from repro.core.schedule import ScheduleExecutor2D
+    from repro.launch.mesh import make_sp2d_mesh, mesh_topology
+    from repro.models.transformer2d import (T2DConfig, init_t2d,
+                                            dsp2d_schedule, forward,
+                                            forward2d)
+
+    cfg = T2DConfig(name="t", n_layers=4, d_model=32, n_heads=4, d_ff=64,
+                    in_dim=8, dtype=jnp.float32)
+    B, T, S = 2, 4, 8
+    params = init_t2d(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, S, cfg.in_dim))
+    t = jnp.array([0.1, 0.5])
+    ref = jax.jit(lambda p, xx, tt: forward(
+        p, xx, tt, cfg, backend="ref", remat=False))(params, x, t)
+    # the degenerate grid runs T=8 so the collapsed 1D plan's dims divide
+    # by the full SP degree (the 1D DP never consults Stage.extents, and
+    # the delegation reproduces it bit-for-bit, warts and all)
+    x8 = jax.random.normal(jax.random.PRNGKey(2), (B, 8, S, cfg.in_dim))
+    ref8 = jax.jit(lambda p, xx, tt: forward(
+        p, xx, tt, cfg, backend="ref", remat=False))(params, x8, t)
+
+    for grid, xin, want in (((2, 4), x, ref), ((1, 8), x8, ref8)):
+        mesh = make_sp2d_mesh(*grid)
+        fn = jax.jit(lambda p, xx, tt, m=mesh: forward2d(
+            p, xx, tt, cfg, mesh=m, remat=False))
+        out = fn(params, xin, t)
+        assert np.asarray(out).tobytes() == np.asarray(want).tobytes(), grid
+
+    # -- compiled contract on the full (2, 4) grid -------------------------
+    mesh = make_sp2d_mesh(2, 4)
+    topo = mesh_topology(mesh)     # sp2d auto-detection: outer DCN x ICI
+    assert [(a.name, a.size) for a in topo.axes] == [("dcn", 2), ("ici", 4)]
+    psched = dsp2d_schedule(cfg, (2, 4), t_len=T, s_len=S, batch=B)
+    # the planned period mixes inner-only and outer-only switches
+    ex = ScheduleExecutor2D(psched, backend="auto", mesh=mesh)
+    expected = ex.expected_carry_collectives(cfg.n_layers // 2)
+    assert expected == {"all-to-all": 8}, expected
+    fn = jax.jit(lambda p, xx, tt: forward2d(
+        p, xx, tt, cfg, mesh=mesh, remat=False))
+    stats = parse_collectives(fn.lower(params, x, t).compile().as_text())
+    got = {k: int(v) for k, v in stats.by_kind_count.items() if v}
+    assert got == expected, (got, expected)
+
+    # -- mid-flight replan: resize lands BETWEEN two prompt chunks ---------
+    from repro.core.topology import Topology
+    from repro.models.lm import LMConfig, init_lm
+    from repro.parallel.partition import ParallelPlan
+    from repro.serving.engine import Request, ServingEngine, _submesh
+    from repro.serving.scheduler import PagedScheduler
+
+    lm = LMConfig(name="t", n_layers=2, d_model=64, n_heads=8, n_kv_heads=4,
+                  head_dim=16, d_ff=128, vocab=96, dtype=jnp.float32)
+    lmp = init_lm(jax.random.PRNGKey(0), lm)
+    long_p = jax.random.randint(jax.random.PRNGKey(9), (16,), 0, 96)
+    short_p = jax.random.randint(jax.random.PRNGKey(10), (8,), 0, 96)
+    ref0 = np.asarray(ServingEngine(lmp, lm, max_len=32)
+                      .generate(short_p[None], [8]))[0]
+    ref1 = np.asarray(ServingEngine(lmp, lm, max_len=32)
+                      .generate(long_p[None], [8]))[0]
+    eng = ServingEngine(lmp, lm, max_len=32, mesh=_submesh(8, 1),
+                        plan=ParallelPlan(mode="dsp"),
+                        topology=Topology.multihost(2, 4))
+    reqs = [Request(prompt=short_p, max_new_tokens=8, request_id=0),
+            Request(prompt=long_p, max_new_tokens=8, request_id=1)]
+    sched = PagedScheduler(eng, max_batch=2, block_size=8, prefill_chunk=4)
+    forced = []
+
+    def on_step(s, k):
+        s.pool.assert_on_mesh()
+        if k == 2:
+            pf = s._prefilling[0]      # a prefill is mid-prompt RIGHT NOW
+            assert 0 < pf.done < len(pf.prompt), (pf.done, len(pf.prompt))
+            s.replan(4)
+            forced.append(k)
+
+    sched.run(reqs, on_step=on_step)
+    assert forced == [2] and eng.sp_degree == 4
+    assert reqs[0].generated == ref0[:8].tolist()
+    assert reqs[1].generated == ref1[:8].tolist()
+
+
 SCENARIOS = {name[len("scenario_"):]: fn
              for name, fn in list(globals().items())
              if name.startswith("scenario_")}

@@ -22,6 +22,7 @@ SCENARIOS = [
     "scan_joint_bwd_parity",
     "continuous_serving_sharded",
     "paged_serving_sharded",
+    "layout2d_t2d",
 ]
 
 

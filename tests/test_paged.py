@@ -294,6 +294,46 @@ def test_paged_metrics_summary_schema(engine, prompts):
     assert set(cs.metrics.summary()) == set(s)
 
 
+def test_paged_replan_mid_prefill_parity():
+    """Elastic replan while a chunked prefill is IN FLIGHT: the resize
+    lands between two prompt slices (after the decode step's pos-rollback
+    for the mid-prefill slot), the remaining slices stream into the
+    migrated pool, and every request's tokens stay bit-identical to the
+    static oracle.  Forces the window the md_scenario replan never hits —
+    there the resize fires with ``_prefilling`` already drained."""
+    params = init_lm(jax.random.PRNGKey(0), TINY)
+    eng = ServingEngine(params, TINY, max_len=32)
+    long_prompt = jax.random.randint(jax.random.PRNGKey(9), (16,), 0,
+                                     TINY.vocab)
+    short_prompt = jax.random.randint(jax.random.PRNGKey(10), (8,), 0,
+                                      TINY.vocab)
+    budgets = (8, 8)
+    ref0 = np.asarray(eng.generate(short_prompt[None], [budgets[0]]))[0]
+    ref1 = np.asarray(eng.generate(long_prompt[None], [budgets[1]]))[0]
+    reqs = [Request(prompt=short_prompt, max_new_tokens=budgets[0],
+                    request_id=0),
+            Request(prompt=long_prompt, max_new_tokens=budgets[1],
+                    request_id=1)]
+    # chunk=5 leaves a ragged 1-token tail slice: the first compile of that
+    # width happens AFTER the resize, through the re-jitted chunk cell
+    sched = PagedScheduler(eng, max_batch=2, block_size=8, prefill_chunk=5)
+    forced = []
+
+    def on_step(s, k):
+        if k == 2:
+            # the forcing condition: a prefill is mid-prompt RIGHT NOW
+            assert s._prefilling, "test no longer forces replan-mid-prefill"
+            pf = s._prefilling[0]
+            assert 0 < pf.done < len(pf.prompt), (pf.done, len(pf.prompt))
+            s.replan(1)
+            forced.append((k, pf.done))
+
+    sched.run(reqs, on_step=on_step)
+    assert forced == [(2, 5)]
+    assert reqs[0].generated == ref0[:budgets[0]].tolist()
+    assert reqs[1].generated == ref1[:budgets[1]].tolist()
+
+
 # ---------------------------------------------------------------------------
 # Satellite: replay_static accepts heterogeneous prompt lengths
 # ---------------------------------------------------------------------------

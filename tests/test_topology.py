@@ -217,6 +217,16 @@ def test_resized_for_elastic_serving():
     assert mh.resized(8) is mh
     assert [(a.name, a.size) for a in mh.resized(6).axes] == \
         [("dcn", 2), ("ici", 3)]
+    # regression: when only the OUTER axis divides, shrink it instead of
+    # collapsing to a flat axis — 4 hosts x 2 chips resized to 4 is two
+    # 2-chip hosts, and the placements must survive
+    wide = Topology.multihost(4, 2, placement={3: ("ici",)})
+    rw = wide.resized(4)
+    assert [(a.name, a.size) for a in rw.axes] == [("dcn", 2), ("ici", 2)]
+    assert rw.placement == {3: ("ici",)}
+    # the inner axis still shrinks first when it divides non-degenerately
+    assert [(a.name, a.size) for a in Topology.multihost(4, 4).resized(8).axes] \
+        == [("dcn", 4), ("ici", 2)]
     # indivisible fall-back: one flat axis at the bottleneck bandwidth
     odd = mh.resized(5)
     assert len(odd.axes) == 1 and odd.size == 5
